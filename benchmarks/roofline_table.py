@@ -1,0 +1,50 @@
+"""Roofline table assembler — reads the dry-run JSON records and emits the
+EXPERIMENTS.md §Roofline table (CSV + markdown)."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import List
+
+
+def load(dirpath="experiments/dryrun") -> List[dict]:
+    out = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_row(d: dict) -> str:
+    if d["status"] != "ok":
+        return (f"{d['arch']},{d['shape']},{d['mesh']},{d['status']},,,,,,,"
+                f"{d.get('reason', d.get('error', ''))[:60]}")
+    return (
+        f"{d['arch']},{d['shape']},{d['mesh']},ok,"
+        f"{d['t_compute']:.4f},{d['t_memory']:.4f},{d['t_collective']:.4f},"
+        f"{d['bottleneck']},{d['useful_flops_ratio']:.3f},"
+        f"{d['roofline_fraction']:.3f},"
+        f"{(d.get('bytes_per_device') or 0)/1e9:.2f}GB"
+    )
+
+
+def main():
+    dirpath = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(dirpath)
+    print("arch,shape,mesh,status,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,useful_flops_ratio,roofline_fraction,mem_per_dev")
+    for d in rows:
+        print(fmt_row(d))
+    ok = [d for d in rows if d["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda d: d["roofline_fraction"])
+        coll = max(ok, key=lambda d: d["t_collective"] /
+                   max(d["t_compute"] + d["t_memory"], 1e-12))
+        print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f"/{worst['mesh']} ({worst['roofline_fraction']:.3f})")
+        print(f"# most collective-bound: {coll['arch']}/{coll['shape']}"
+              f"/{coll['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

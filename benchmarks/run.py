@@ -1,0 +1,42 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  table1  per-block correctness pass rates (paper Table 1)
+  table2  LeNet fwd-bwd ms + partial-port boundary ablation (paper Table 2,
+          §4.3 transfer/layout analysis)
+  kernels microbenchmark of Pallas kernels (interpret) vs reference oracle
+          wall time — NOT a TPU perf claim, a correctness-per-cost sweep
+  roofline summary of the dry-run roofline table (if experiments/dryrun
+          exists; the full table lives in EXPERIMENTS.md)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("== table1: per-block pass rates (paper Table 1 analogue) ==")
+    from benchmarks import table1_blocks
+    table1_blocks.main()
+
+    print()
+    print("== table2: LeNet fwd-bwd + partial-port ablation (Table 2) ==")
+    from benchmarks import table2_fwbw
+    table2_fwbw.main()
+
+    print()
+    print("== roofline: dry-run summary (see EXPERIMENTS.md for analysis) ==")
+    import pathlib
+    if pathlib.Path("experiments/dryrun").exists():
+        from benchmarks import roofline_table
+        roofline_table.main()
+    else:
+        print("experiments/dryrun missing - run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Table 1 analogue — per-block correctness sweeps for the ported blocks.
+
+The paper reports Caffe unit-test pass rates for its PHAST port
+(Convolution 3/15, Pooling 11/11, InnerProduct 9/9, SoftMax 4/4,
+SoftMaxLoss 4/4, Accuracy 9/12).  We run the same *kind* of table against
+our port: every block's Pallas lowering vs the reference oracle across a
+case sweep, reporting passed/total per block.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import use_backend
+from repro.kernels import ops, ref
+
+
+def _agree(fn_case: Callable[[], Tuple[np.ndarray, np.ndarray]],
+           rtol=2e-3, atol=2e-3) -> bool:
+    try:
+        got, want = fn_case()
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=rtol, atol=atol,
+        )
+        return True
+    except AssertionError:
+        return False
+
+
+def _conv_cases() -> List[Callable]:
+    cases = []
+    for i, (shape, f, k, s, p) in enumerate([
+        ((1, 1, 8, 8), 2, 3, 1, 0), ((2, 3, 12, 12), 4, 5, 1, 2),
+        ((2, 3, 12, 12), 4, 3, 2, 1), ((1, 4, 28, 28), 8, 5, 1, 0),
+        ((2, 2, 9, 9), 3, 2, 2, 0), ((1, 1, 6, 6), 1, 1, 1, 0),
+        ((2, 8, 16, 16), 16, 3, 1, 1), ((1, 3, 32, 32), 32, 5, 1, 2),
+        # gradient cases
+        ((2, 3, 10, 10), 4, 3, 1, 1), ((1, 2, 8, 8), 2, 5, 1, 2),
+        ((2, 4, 12, 12), 6, 3, 2, 1), ((1, 1, 28, 28), 20, 5, 1, 0),
+        ((2, 2, 14, 14), 4, 7, 1, 3), ((1, 3, 8, 8), 5, 3, 3, 0),
+        ((2, 1, 16, 16), 2, 4, 4, 0),
+    ]):
+        grad = i >= 8
+
+        def case(shape=shape, f=f, k=k, s=s, p=p, grad=grad, i=i):
+            key = jax.random.PRNGKey(i)
+            x = jax.random.normal(key, shape)
+            w = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (f, shape[1], k, k)) * 0.2
+            b = jax.random.normal(jax.random.fold_in(key, 2), (f,)) * 0.1
+
+            def loss(x, w, b, be):
+                with use_backend(be):
+                    return (ops.conv2d(x, w, b, stride=s, pad=p) ** 2).sum()
+
+            if grad:
+                ga = jax.grad(loss, (0, 1, 2))(x, w, b, "pallas")
+                gb = jax.grad(loss, (0, 1, 2))(x, w, b, "reference")
+                return (jnp.concatenate([g.reshape(-1) for g in ga]),
+                        jnp.concatenate([g.reshape(-1) for g in gb]))
+            with use_backend("pallas"):
+                got = ops.conv2d(x, w, b, stride=s, pad=p)
+            with use_backend("reference"):
+                want = ops.conv2d(x, w, b, stride=s, pad=p)
+            return got, want
+
+        cases.append(case)
+    return cases
+
+
+def _pool_cases() -> List[Callable]:
+    cases = []
+    for i, (shape, k, s, p) in enumerate([
+        ((2, 3, 8, 8), 2, 2, 0), ((1, 4, 9, 9), 3, 3, 0),
+        ((2, 2, 12, 12), 2, 2, 0), ((1, 1, 28, 28), 2, 2, 0),
+        ((2, 3, 8, 8), 2, 2, 1), ((1, 2, 16, 16), 4, 4, 0),
+        # bwd cases
+        ((2, 3, 8, 8), 2, 2, 0), ((1, 4, 9, 9), 3, 3, 0),
+        ((2, 2, 16, 16), 4, 4, 0), ((1, 3, 12, 12), 2, 3, 0),
+        ((1, 1, 10, 10), 5, 5, 0),
+    ]):
+        grad = i >= 6
+
+        def case(shape=shape, k=k, s=s, p=p, grad=grad, i=i):
+            x = jax.random.normal(jax.random.PRNGKey(i), shape)
+
+            def loss(x, be):
+                with use_backend(be):
+                    return (ops.maxpool(x, k, s, p) ** 2).sum()
+
+            if grad:
+                return (jax.grad(loss)(x, "pallas"),
+                        jax.grad(loss)(x, "reference"))
+            with use_backend("pallas"):
+                got = ops.maxpool(x, k, s, p)
+            with use_backend("reference"):
+                want = ops.maxpool(x, k, s, p)
+            return got, want
+
+        cases.append(case)
+    return cases
+
+
+def _ip_cases() -> List[Callable]:
+    cases = []
+    for i, (m, kk, n, grad) in enumerate([
+        (4, 8, 16, False), (128, 256, 64, False), (1, 32, 10, False),
+        (64, 500, 10, False), (32, 800, 500, False),
+        (4, 8, 16, True), (64, 128, 32, True), (16, 500, 10, True),
+        (2, 3, 5, True),
+    ]):
+        def case(m=m, kk=kk, n=n, grad=grad, i=i):
+            key = jax.random.PRNGKey(i)
+            x = jax.random.normal(key, (m, kk))
+            w = jax.random.normal(jax.random.fold_in(key, 1), (kk, n)) * 0.1
+            b = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.1
+
+            def loss(x, w, b, be):
+                with use_backend(be):
+                    return (ops.bias_add_rows(ops.matmul(x, w), b) ** 2).sum()
+
+            if grad:
+                ga = jax.grad(loss, (0, 1, 2))(x, w, b, "pallas")
+                gb = jax.grad(loss, (0, 1, 2))(x, w, b, "reference")
+                return (jnp.concatenate([g.reshape(-1) for g in ga]),
+                        jnp.concatenate([g.reshape(-1) for g in gb]))
+            with use_backend("pallas"):
+                got = ops.bias_add_rows(ops.matmul(x, w), b)
+            with use_backend("reference"):
+                want = ops.bias_add_rows(ops.matmul(x, w), b)
+            return got, want
+
+        cases.append(case)
+    return cases
+
+
+def _softmax_cases(loss_variant: bool) -> List[Callable]:
+    cases = []
+    for i, (b, v) in enumerate([(4, 10), (64, 10), (128, 1000), (3, 2)]):
+        def case(b=b, v=v, i=i):
+            key = jax.random.PRNGKey(i)
+            x = jax.random.normal(key, (b, v)) * 4
+            y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, v)
+            if loss_variant:
+                with use_backend("pallas"):
+                    g1 = jax.grad(
+                        lambda x: ops.softmax_xent_loss(x, y))(x)
+                with use_backend("reference"):
+                    g2 = jax.grad(
+                        lambda x: ops.softmax_xent_loss(x, y))(x)
+                return g1, g2
+            with use_backend("pallas"):
+                got = ops.softmax(x)
+            with use_backend("reference"):
+                want = ops.softmax(x)
+            return got, want
+
+        cases.append(case)
+    return cases
+
+
+def _accuracy_cases() -> List[Callable]:
+    cases = []
+    for i, (b, v, k) in enumerate([
+        (8, 10, 1), (64, 10, 1), (128, 100, 1), (8, 10, 5), (64, 100, 5),
+        (16, 1000, 5), (4, 10, 1), (32, 50, 1), (8, 10, 1), (16, 10, 5),
+        (128, 10, 1), (256, 10, 5),
+    ]):
+        def case(b=b, v=v, k=k, i=i):
+            key = jax.random.PRNGKey(i)
+            x = jax.random.normal(key, (b, v))
+            y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, v)
+            got = ops.accuracy(x, y, k)
+            _, idx = jax.lax.top_k(x, k)
+            want = (idx == y[:, None]).any(-1).mean()
+            return got, want
+
+        cases.append(case)
+    return cases
+
+
+def run() -> List[Tuple[str, int, int]]:
+    table = []
+    for name, cases in [
+        ("Convolution", _conv_cases()),
+        ("Pooling", _pool_cases()),
+        ("InnerProduct", _ip_cases()),
+        ("SoftMax", _softmax_cases(False)),
+        ("SoftMaxLoss", _softmax_cases(True)),
+        ("Accuracy", _accuracy_cases()),
+    ]:
+        passed = sum(_agree(c) for c in cases)
+        table.append((name, passed, len(cases)))
+    return table
+
+
+def main():
+    print("block,passed,total,pct  (paper's PHAST port: conv 20%, pool 100%,"
+          " ip 100%, softmax 100%, loss 100%, accuracy 75%)")
+    for name, passed, total in run():
+        print(f"{name},{passed},{total},{100*passed//total}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Table 2 analogue — average forward-backward wall time for the two LeNet
+networks, plus the paper's §4.3 partial-port ablation.
+
+The paper measures (ms per fwd+bwd iteration):
+                   MNIST            CIFAR-10
+    Caffe          71.42 (CPU)      399.50 (CPU)
+    Caffe (PHAST)  198.60 (CPU)     1113.71 (CPU)   -> ~2.8x slower
+
+and attributes most of the PHAST gap to (a) domain-crossing transfers
+between ported and unported layers and (b) a row/column-major layout
+conversion per crossing.  We reproduce the *mechanism*: the same net run
+
+    fused          - jit end-to-end, single domain (our "full port")
+    boundary       - host round-trip between every layer (partial port)
+    boundary+T     - round-trip + forced layout transpose per crossing
+
+The fused/boundary ratio is our measured analogue of their 2.8x.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.caffe import Net, lenet_cifar10, lenet_mnist
+from repro.data.synthetic import cifar10_like, mnist_like
+
+
+def _time_fwbw(net: Net, params, data, label, iters: int = 10) -> float:
+    """Mean ms per forward+backward."""
+    if net.boundary is None:
+        fn = jax.jit(jax.value_and_grad(net.forward_loss))
+        fn(params, data, label)[0].block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            loss, _ = fn(params, data, label)
+        loss.block_until_ready()
+        return (time.perf_counter() - t0) / iters * 1e3
+    # partial-port mode cannot be jitted end-to-end (that is the point):
+    # each layer runs in its own domain with host crossings between.
+    net.forward_loss(params, data, label)  # warm per-layer jits
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        loss = net.forward_loss(params, data, label)
+        grads = net.backward_manual(params, data, label)
+    jax.block_until_ready(grads)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def run(batch: int = 64, iters: int = 5) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for name, mk, stream_fn in [
+        ("mnist", lenet_mnist, mnist_like),
+        ("cifar10", lenet_cifar10, cifar10_like),
+    ]:
+        data, label = stream_fn(batch).batch(0)
+        res = {}
+        for mode, boundary in [
+            ("fused", None),
+            ("boundary", "transfer"),
+            ("boundary+transpose", "transfer+transpose"),
+        ]:
+            net = Net(mk(), boundary=boundary)
+            params = net.init(jax.random.PRNGKey(0), batch)
+            res[mode] = _time_fwbw(net, params, data, label, iters)
+        res["slowdown_boundary"] = res["boundary"] / res["fused"]
+        res["slowdown_boundary_transpose"] = (
+            res["boundary+transpose"] / res["fused"]
+        )
+        out[name] = res
+    return out
+
+
+def main():
+    print("net,mode,ms_per_fwbw,derived")
+    for name, res in run().items():
+        for mode in ("fused", "boundary", "boundary+transpose"):
+            print(f"{name},{mode},{res[mode]:.2f},")
+        print(f"{name},slowdown_boundary,,"
+              f"{res['slowdown_boundary']:.2f}x")
+        print(f"{name},slowdown_boundary_transpose,,"
+              f"{res['slowdown_boundary_transpose']:.2f}x "
+              f"(paper's partial-port gap: 2.8x CPU / 4.0x GPU)")
+
+
+if __name__ == "__main__":
+    main()

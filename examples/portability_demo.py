@@ -1,0 +1,68 @@
+"""Portability demo — the paper's core claim, made falsifiable.
+
+One source (a conv->pool->relu->ip->softmax-loss block over the portable
+ops), three executions:
+
+  1. reference backend (pure jnp / XLA)         = PHAST's CPU target
+  2. Pallas-kernel backend (interpret on CPU,    = PHAST's GPU target
+     Mosaic on a real TPU — same code)
+  3. partial-port mode: reference, but with a host round-trip + layout
+     transpose at every layer boundary            = the paper's §4.3 pathology
+
+(1) and (2) must agree to float tolerance — values AND gradients.
+(3) agrees too, but the benchmark shows what it costs (see
+benchmarks/table2_fwbw.py for the measured slowdown).
+
+    PYTHONPATH=src python examples/portability_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.caffe import Net, lenet_mnist
+from repro.core import coverage, use_backend
+from repro.data.synthetic import mnist_like
+
+
+def main():
+    net = Net(lenet_mnist())
+    params = net.init(jax.random.PRNGKey(0), 8)
+    data, label = mnist_like(8).batch(0)
+
+    results = {}
+    for backend in ("reference", "pallas"):
+        with use_backend(backend):
+            loss, grads = jax.value_and_grad(net.forward_loss)(
+                params, data, label
+            )
+            results[backend] = (float(loss), grads)
+        print(f"backend={backend:10s} loss={results[backend][0]:.6f}")
+
+    np.testing.assert_allclose(
+        results["reference"][0], results["pallas"][0], rtol=1e-4
+    )
+    for a, b in zip(jax.tree.leaves(results["reference"][1]),
+                    jax.tree.leaves(results["pallas"][1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+    print("values + gradients identical across backends ✓")
+
+    boundary_net = Net(lenet_mnist(), boundary="transfer+transpose")
+    loss3 = boundary_net.forward_loss(params, data, label)
+    np.testing.assert_allclose(results["reference"][0], float(loss3), rtol=1e-5)
+    print("partial-port boundary mode: same result, slower "
+          "(measured in benchmarks/table2_fwbw.py) ✓")
+
+    cov = coverage()
+    ported = sum(cov.values())
+    print(f"op coverage: {ported}/{len(cov)} blocks have a Pallas lowering")
+    for name, has in sorted(cov.items()):
+        print(f"  {'[ported]  ' if has else '[ref-only]'} {name}")
+
+
+if __name__ == "__main__":
+    main()

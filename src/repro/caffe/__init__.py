@@ -1,0 +1,10 @@
+# The paper's case study: the Caffe subset ported to the portability core.
+from repro.caffe.lenet import (
+    lenet_cifar10,
+    lenet_cifar10_solver,
+    lenet_mnist,
+    lenet_mnist_solver,
+)
+from repro.caffe.net import Net
+from repro.caffe.solver import Solver
+from repro.caffe.spec import LayerSpec, NetSpec, SolverSpec

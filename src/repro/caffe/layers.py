@@ -1,0 +1,268 @@
+"""The ported Caffe blocks, as functional executors over portable ops.
+
+Each layer implements Caffe's triple interface:
+
+    init(rng, bottom_shapes)            -> (params, top_shapes)
+    forward(params, bottoms, train)     -> (tops, cache)
+    backward(params, cache, top_diffs)  -> (bottom_diffs, param_diffs)
+
+``forward`` is built exclusively from ``repro.kernels.ops`` so the whole
+net is single-source across backends (the paper's core claim), and is
+autodiff-able (the solver uses jax.grad).  ``backward`` is the explicit
+Caffe-style backprop — kept both for fidelity to the paper's porting of
+back-propagation and as an independent oracle the tests compare against
+autodiff (our Table-1 analogue).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.caffe.spec import LayerSpec
+from repro.kernels import ops, ref
+
+
+Params = Dict[str, jax.Array]
+
+
+def _filler(rng, shape, spec: LayerSpec, fan_in: int, fan_out: int):
+    if spec.weight_filler == "xavier":
+        scale = np.sqrt(3.0 / fan_in)
+        return jax.random.uniform(rng, shape, jnp.float32, -scale, scale)
+    return spec.filler_std * jax.random.normal(rng, shape, jnp.float32)
+
+
+class Layer:
+    def __init__(self, spec: LayerSpec):
+        self.spec = spec
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def init(self, rng, bottom_shapes):
+        return {}, self.infer_shapes(bottom_shapes)
+
+    def infer_shapes(self, bottom_shapes):
+        raise NotImplementedError
+
+    def forward(self, params, bottoms, train: bool):
+        raise NotImplementedError
+
+    def backward(self, params, cache, top_diffs):
+        raise NotImplementedError
+
+
+class Convolution(Layer):
+    """im2col + GEMM convolution (the paper's §3.1)."""
+
+    def infer_shapes(self, bottom_shapes):
+        (n, c, h, w), = bottom_shapes
+        s = self.spec
+        oh = ref.conv_out_size(h, s.kernel_size, s.stride, s.pad)
+        ow = ref.conv_out_size(w, s.kernel_size, s.stride, s.pad)
+        return [(n, s.num_output, oh, ow)]
+
+    def init(self, rng, bottom_shapes):
+        (n, c, h, w), = bottom_shapes
+        s = self.spec
+        k = s.kernel_size
+        r1, r2 = jax.random.split(rng)
+        fan_in = c * k * k
+        params = {"w": _filler(r1, (s.num_output, c, k, k), s, fan_in, s.num_output)}
+        if s.bias_term:
+            params["b"] = jnp.zeros((s.num_output,), jnp.float32)
+        return params, self.infer_shapes(bottom_shapes)
+
+    def forward(self, params, bottoms, train: bool):
+        (x,) = bottoms
+        s = self.spec
+        y = ops.conv2d(
+            x, params["w"], params.get("b"), stride=s.stride, pad=s.pad
+        )
+        return [y], {"x": x}
+
+    def backward(self, params, cache, top_diffs):
+        (dy,) = top_diffs
+        s = self.spec
+        x, w = cache["x"], params["w"]
+        f, c, kh, kw = w.shape
+        n = x.shape[0]
+        oh, ow = dy.shape[2], dy.shape[3]
+        cols = ops.im2col(x, kh, kw, s.stride, s.pad)
+        dy_flat = dy.reshape(n, f, oh * ow).transpose(1, 0, 2).reshape(f, -1)
+        cols_flat = cols.transpose(1, 0, 2).reshape(c * kh * kw, -1)
+        dw = ops.matmul(dy_flat, cols_flat.T).reshape(w.shape)
+        dcols = ops.matmul(w.reshape(f, -1).T, dy_flat)
+        dcols = dcols.reshape(c * kh * kw, n, oh * ow).transpose(1, 0, 2)
+        dx = ops.col2im(dcols, x.shape, kh, kw, s.stride, s.pad)
+        grads = {"w": dw}
+        if s.bias_term:
+            grads["b"] = dy.sum(axis=(0, 2, 3))
+        return [dx], grads
+
+
+class InnerProduct(Layer):
+    """GEMM + matrixPlusVectorRows (the paper's Listing 1.2)."""
+
+    def infer_shapes(self, bottom_shapes):
+        shp = bottom_shapes[0]
+        n = shp[0]
+        return [(n, self.spec.num_output)]
+
+    def init(self, rng, bottom_shapes):
+        shp = bottom_shapes[0]
+        k = int(np.prod(shp[1:]))
+        s = self.spec
+        r1, r2 = jax.random.split(rng)
+        params = {"w": _filler(r1, (k, s.num_output), s, k, s.num_output)}
+        if s.bias_term:
+            params["b"] = jnp.zeros((s.num_output,), jnp.float32)
+        return params, self.infer_shapes(bottom_shapes)
+
+    def forward(self, params, bottoms, train: bool):
+        (x,) = bottoms
+        n = x.shape[0]
+        x2 = x.reshape(n, -1)
+        y = ops.matmul(x2, params["w"])
+        if self.spec.bias_term:
+            y = ops.bias_add_rows(y, params["b"])
+        return [y], {"x": x}
+
+    def backward(self, params, cache, top_diffs):
+        (dy,) = top_diffs
+        x = cache["x"]
+        n = x.shape[0]
+        x2 = x.reshape(n, -1)
+        dw = ops.matmul(x2.T, dy)
+        dx = ops.matmul(dy, params["w"].T).reshape(x.shape)
+        grads = {"w": dw}
+        if self.spec.bias_term:
+            grads["b"] = dy.sum(axis=0)
+        return [dx], grads
+
+
+class Pooling(Layer):
+    def infer_shapes(self, bottom_shapes):
+        (n, c, h, w), = bottom_shapes
+        s = self.spec
+        oh = ref.conv_out_size(h, s.kernel_size, s.stride, s.pad)
+        ow = ref.conv_out_size(w, s.kernel_size, s.stride, s.pad)
+        return [(n, c, oh, ow)]
+
+    def forward(self, params, bottoms, train: bool):
+        (x,) = bottoms
+        s = self.spec
+        if s.pool == "max":
+            y = ops.maxpool(x, s.kernel_size, s.stride, s.pad)
+            # argmax for explicit backward (Caffe stores the mapping)
+            _, arg = ref.maxpool(x, s.kernel_size, s.stride, s.pad)
+            return [y], {"arg": arg, "x_shape": x.shape}
+        y = ops.avgpool(x, s.kernel_size, s.stride, s.pad)
+        return [y], {"x_shape": x.shape}
+
+    def backward(self, params, cache, top_diffs):
+        (dy,) = top_diffs
+        s = self.spec
+        if s.pool == "max":
+            dx = ref.maxpool_bwd(
+                dy, cache["arg"], cache["x_shape"], s.kernel_size, s.stride, s.pad
+            )
+            return [dx], {}
+        # average pool: spread gradient uniformly
+        n, c, h, w = cache["x_shape"]
+        k, st, pad = s.kernel_size, s.stride, s.pad
+        dyk = dy / (k * k)
+        dcols = jnp.broadcast_to(
+            dyk.reshape(n, c, 1, -1), (n, c, k * k, dy.shape[2] * dy.shape[3])
+        ).reshape(n, c * k * k, -1)
+        dx = ref.col2im(dcols, cache["x_shape"], k, k, st, pad)
+        return [dx], {}
+
+
+class ReLU(Layer):
+    """Caffe implements the leaky variant (paper §3, block list)."""
+
+    def infer_shapes(self, bottom_shapes):
+        return [bottom_shapes[0]]
+
+    def forward(self, params, bottoms, train: bool):
+        (x,) = bottoms
+        return [ops.relu(x, self.spec.negative_slope)], {"x": x}
+
+    def backward(self, params, cache, top_diffs):
+        (dy,) = top_diffs
+        return [ref.relu_bwd(cache["x"], dy, self.spec.negative_slope)], {}
+
+
+class Softmax(Layer):
+    def infer_shapes(self, bottom_shapes):
+        return [bottom_shapes[0]]
+
+    def forward(self, params, bottoms, train: bool):
+        (x,) = bottoms
+        p = ops.softmax(x)
+        return [p], {"p": p}
+
+    def backward(self, params, cache, top_diffs):
+        (dy,) = top_diffs
+        p = cache["p"]
+        dx = p * (dy - jnp.sum(dy * p, axis=-1, keepdims=True))
+        return [dx], {}
+
+
+class SoftmaxWithLoss(Layer):
+    def infer_shapes(self, bottom_shapes):
+        return [()]
+
+    def forward(self, params, bottoms, train: bool):
+        logits, labels = bottoms
+        loss = ops.softmax_xent_loss(logits, labels) * self.spec.loss_weight
+        probs = ref.softmax(logits)
+        return [loss], {"probs": probs, "labels": labels}
+
+    def backward(self, params, cache, top_diffs):
+        (dloss,) = top_diffs  # scalar
+        dlogits = (
+            ref.softmax_xent_bwd(cache["probs"], cache["labels"])
+            * self.spec.loss_weight
+            * dloss
+        )
+        return [dlogits, None], {}
+
+
+class Accuracy(Layer):
+    """Not a real layer (paper: 'implicitly included'); metric only."""
+
+    def infer_shapes(self, bottom_shapes):
+        return [()]
+
+    def forward(self, params, bottoms, train: bool):
+        logits, labels = bottoms
+        return [ops.accuracy(logits, labels, self.spec.top_k)], {}
+
+    def backward(self, params, cache, top_diffs):
+        return [None, None], {}
+
+
+LAYER_TYPES = {
+    "Convolution": Convolution,
+    "InnerProduct": InnerProduct,
+    "Pooling": Pooling,
+    "ReLU": ReLU,
+    "Softmax": Softmax,
+    "SoftmaxWithLoss": SoftmaxWithLoss,
+    "Accuracy": Accuracy,
+}
+
+
+def build_layer(spec: LayerSpec) -> Layer:
+    try:
+        return LAYER_TYPES[spec.type](spec)
+    except KeyError as e:
+        raise KeyError(
+            f"unknown layer type {spec.type!r}; known: {sorted(LAYER_TYPES)}"
+        ) from e

@@ -1,0 +1,129 @@
+"""Net — Caffe's network graph executor over named blobs.
+
+Forward walks the layer list feeding named blobs (containers) through
+executors; ``forward_loss`` is the autodiff entry the solver differentiates;
+``backward_manual`` is Caffe's explicit reverse pass over layer.backward
+(used as the independent gradient oracle in tests).
+
+The ``boundary`` hook reproduces the paper's §4.3 pathology for the
+benchmarks: when set, every inter-layer blob crossing pays (a) a host
+round-trip (device_get/put) and optionally (b) a row↔column major layout
+conversion — the "unnecessary transfers + transpose per crossing" the paper
+identifies as the dominant overhead of a partial port.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.caffe.layers import Layer, build_layer
+from repro.caffe.spec import NetSpec
+from repro.core.container import MajorOrder, as_layout
+
+
+class Net:
+    def __init__(self, spec: NetSpec, boundary: Optional[str] = None):
+        """boundary: None | 'transfer' | 'transfer+transpose' (paper §4.3)."""
+        self.spec = spec
+        self.layers: List[Layer] = [build_layer(ls) for ls in spec.layers]
+        self.boundary = boundary
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng, batch_size: int):
+        shapes: Dict[str, Tuple[int, ...]] = {
+            "data": (batch_size, *self.spec.input_shape),
+            "label": (batch_size,),
+        }
+        params: Dict[str, dict] = {}
+        rngs = jax.random.split(rng, len(self.layers))
+        for layer, r in zip(self.layers, rngs):
+            bshapes = [shapes[b] for b in layer.spec.bottoms]
+            p, tshapes = layer.init(r, bshapes)
+            if p:
+                params[layer.name] = p
+            for t, ts in zip(layer.spec.tops, tshapes):
+                shapes[t] = ts
+        self.blob_shapes = shapes
+        return params
+
+    # -- the paper's partial-port boundary crossing ---------------------------
+    def _cross(self, x):
+        if self.boundary is None or x is None or x.ndim == 0:
+            return x
+        if "transpose" in self.boundary and x.ndim >= 2:
+            # row-major PHAST domain -> column-major OpenBLAS domain and back
+            x = as_layout(x, MajorOrder.ROW, MajorOrder.COLUMN)
+        # host round-trip (device -> orchestrating CPU -> device)
+        x = jax.device_put(jax.device_get(x))
+        return x
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, params, data, label=None, train: bool = True):
+        """Returns (blobs dict, caches dict)."""
+        blobs: Dict[str, jax.Array] = {"data": data}
+        if label is not None:
+            blobs["label"] = label
+        caches = {}
+        for layer in self.layers:
+            if any(b not in blobs for b in layer.spec.bottoms):
+                continue  # e.g. loss layers at inference without labels
+            bottoms = [self._cross(blobs[b]) for b in layer.spec.bottoms]
+            tops, cache = layer.forward(
+                params.get(layer.name, {}), bottoms, train
+            )
+            caches[layer.name] = cache
+            for t, v in zip(layer.spec.tops, tops):
+                blobs[t] = v
+        return blobs, caches
+
+    def forward_loss(self, params, data, label):
+        """Scalar total loss (what the solver differentiates)."""
+        blobs, _ = self.forward(params, data, label, train=True)
+        loss = jnp.zeros((), jnp.float32)
+        for layer in self.layers:
+            if layer.spec.type == "SoftmaxWithLoss":
+                loss = loss + blobs[layer.spec.tops[0]]
+        return loss
+
+    def metrics(self, params, data, label):
+        blobs, _ = self.forward(params, data, label, train=False)
+        out = {}
+        for layer in self.layers:
+            if layer.spec.type == "SoftmaxWithLoss":
+                out["loss"] = blobs[layer.spec.tops[0]]
+            if layer.spec.type == "Accuracy":
+                out["accuracy"] = blobs[layer.spec.tops[0]]
+        return out
+
+    # -- Caffe-style explicit backward (gradient oracle for tests) -----------
+    def backward_manual(self, params, data, label):
+        blobs, caches = self.forward(params, data, label, train=True)
+        diffs: Dict[str, jax.Array] = {}
+        grads: Dict[str, dict] = {}
+        for layer in reversed(self.layers):
+            if layer.name not in caches:
+                continue
+            if layer.spec.type == "Accuracy":
+                continue
+            if layer.spec.type == "SoftmaxWithLoss":
+                top_diffs = [jnp.ones((), jnp.float32)]
+            else:
+                top_diffs = [diffs.get(t) for t in layer.spec.tops]
+                if all(d is None for d in top_diffs):
+                    continue
+                top_diffs = [
+                    jnp.zeros(blobs[t].shape, blobs[t].dtype) if d is None else d
+                    for d, t in zip(top_diffs, layer.spec.tops)
+                ]
+            bdiffs, pgrads = layer.backward(
+                params.get(layer.name, {}), caches[layer.name], top_diffs
+            )
+            if pgrads:
+                grads[layer.name] = pgrads
+            for b, d in zip(layer.spec.bottoms, bdiffs):
+                if d is None or b in ("data", "label"):
+                    continue
+                diffs[b] = diffs[b] + d if b in diffs else d
+        return grads

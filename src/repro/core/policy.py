@@ -1,0 +1,103 @@
+"""Backend policy — the JAX analogue of PHAST's ``PHAST_DEVICE`` macro.
+
+PHAST selects CPU vs GPU by flipping a compile-time macro and swapping the
+Makefile; the *source does not change*.  Here the same role is played by a
+process-wide (optionally scoped) policy object that every registered op
+consults at trace time to pick its lowering:
+
+    * ``Backend.REFERENCE`` — the pure-jnp oracle ("sequential-like" code).
+    * ``Backend.PALLAS``    — the Pallas TPU kernel (``pl.pallas_call``).
+    * ``Backend.AUTO``      — PALLAS when a TPU is present, else REFERENCE.
+
+Selection sources, in priority order:
+    1. an active ``use_backend(...)`` context manager,
+    2. explicit ``set_default_backend(...)``,
+    3. the ``REPRO_BACKEND`` environment variable,
+    4. AUTO.
+
+``interpret_default()`` reports whether Pallas kernels should run in
+interpret mode (true off-TPU), so the *same* kernel source validates on CPU
+and compiles to Mosaic on TPU — the code-once / compile-twice property the
+paper demonstrates with two Makefiles.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import os
+import threading
+from typing import Iterator, Optional
+
+import jax
+
+
+class Backend(enum.Enum):
+    """Which lowering an op should use."""
+
+    REFERENCE = "reference"
+    PALLAS = "pallas"
+    AUTO = "auto"
+
+    @staticmethod
+    def parse(name: str) -> "Backend":
+        try:
+            return Backend(name.strip().lower())
+        except ValueError as e:
+            raise ValueError(
+                f"unknown backend {name!r}; expected one of "
+                f"{[b.value for b in Backend]}"
+            ) from e
+
+
+class _PolicyState(threading.local):
+    def __init__(self) -> None:
+        self.stack: list[Backend] = []
+        self.default: Optional[Backend] = None
+
+
+_STATE = _PolicyState()
+
+
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def on_tpu() -> bool:
+    return _platform() == "tpu"
+
+
+def set_default_backend(backend: Backend | str) -> None:
+    """Process-default backend (overrides env, overridden by use_backend)."""
+    if isinstance(backend, str):
+        backend = Backend.parse(backend)
+    _STATE.default = backend
+
+
+def current_backend() -> Backend:
+    """Resolve the active backend to REFERENCE or PALLAS (never AUTO)."""
+    if _STATE.stack:
+        b = _STATE.stack[-1]
+    elif _STATE.default is not None:
+        b = _STATE.default
+    else:
+        b = Backend.parse(os.environ.get("REPRO_BACKEND", "auto"))
+    if b is Backend.AUTO:
+        b = Backend.PALLAS if on_tpu() else Backend.REFERENCE
+    return b
+
+
+@contextlib.contextmanager
+def use_backend(backend: Backend | str) -> Iterator[None]:
+    """Scoped backend override — the 'second Makefile' in one line."""
+    if isinstance(backend, str):
+        backend = Backend.parse(backend)
+    _STATE.stack.append(backend)
+    try:
+        yield
+    finally:
+        _STATE.stack.pop()
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: True anywhere but a real TPU."""
+    return not on_tpu()

@@ -1,0 +1,103 @@
+"""Op registry — one canonical name, two lowerings (reference / Pallas).
+
+This is the load-bearing piece of the portability core.  PHAST ships every
+algorithm once, as templated C++ whose innermost layers are specialized per
+target at compile time.  The JAX analogue: each performance-critical op is
+*registered* under a canonical name with
+
+    reference : pure-jnp callable (the oracle; always correct; runs anywhere)
+    pallas    : Pallas TPU kernel wrapper (same signature)
+
+``dispatch(name)`` returns the callable selected by the active policy.  Ops
+fall back to ``reference`` when no kernel exists (and record that fact, so
+tests can assert full coverage where the paper's Table 1 asserts pass rates).
+
+The tuning side-table mirrors PHAST's "tuning parameters without source
+change": per-(op, key) kernel parameters (block shapes etc.) that kernels
+look up at trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.policy import Backend, current_backend
+
+
+@dataclasses.dataclass
+class OpEntry:
+    name: str
+    reference: Callable[..., Any]
+    pallas: Optional[Callable[..., Any]] = None
+    doc: str = ""
+
+    def resolve(self, backend: Backend) -> Callable[..., Any]:
+        if backend is Backend.PALLAS and self.pallas is not None:
+            return self.pallas
+        return self.reference
+
+
+_OPS: Dict[str, OpEntry] = {}
+_TUNING: Dict[tuple, Dict[str, Any]] = {}
+
+
+def register_op(
+    name: str,
+    *,
+    reference: Callable[..., Any],
+    pallas: Optional[Callable[..., Any]] = None,
+    doc: str = "",
+) -> OpEntry:
+    if name in _OPS:
+        raise ValueError(f"op {name!r} already registered")
+    entry = OpEntry(name=name, reference=reference, pallas=pallas, doc=doc)
+    _OPS[name] = entry
+    return entry
+
+
+def attach_pallas(name: str, fn: Callable[..., Any]) -> None:
+    """Attach/replace the Pallas lowering of an already-registered op."""
+    _OPS[name].pallas = fn
+
+
+def get_op(name: str) -> OpEntry:
+    try:
+        return _OPS[name]
+    except KeyError as e:
+        raise KeyError(
+            f"op {name!r} not registered; known: {sorted(_OPS)}"
+        ) from e
+
+
+def dispatch(name: str) -> Callable[..., Any]:
+    """Resolve op ``name`` under the current backend policy."""
+    return get_op(name).resolve(current_backend())
+
+
+def list_ops() -> Dict[str, OpEntry]:
+    return dict(_OPS)
+
+
+def coverage() -> Dict[str, bool]:
+    """name -> has a Pallas lowering (the 'ported to PHAST' bit per block)."""
+    return {name: e.pallas is not None for name, e in _OPS.items()}
+
+
+# ---------------------------------------------------------------------------
+# Tuning registry: per-(op, key) kernel parameters, settable from config.
+# ---------------------------------------------------------------------------
+
+def set_tuning(op: str, key: str = "default", **params: Any) -> None:
+    _TUNING[(op, key)] = dict(params)
+
+
+def get_tuning(op: str, key: str = "default", **defaults: Any) -> Dict[str, Any]:
+    out = dict(defaults)
+    out.update(_TUNING.get((op, "default"), {}))
+    if key != "default":
+        out.update(_TUNING.get((op, key), {}))
+    return out
+
+
+def clear_tuning() -> None:
+    _TUNING.clear()

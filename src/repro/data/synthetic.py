@@ -1,0 +1,132 @@
+"""Deterministic synthetic data streams (offline container: no real MNIST/
+CIFAR downloads).  Class-conditional image generators produce learnable
+structure so the LeNet reproductions actually converge; the LM stream
+produces a deterministic mixture of n-gram-ish token patterns.
+
+All generators are keyed by (seed, step) — restartable from a checkpoint
+step with no state, and shardable per host (each host materializes only its
+slice), which is the fault-tolerance story for the input pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageStreamSpec:
+    shape: Tuple[int, int, int]    # (C, H, W)
+    num_classes: int
+    batch_size: int
+    seed: int = 0
+    noise: float = 0.35
+
+
+def _class_prototypes(spec: ImageStreamSpec) -> np.ndarray:
+    """Smooth per-class prototype images (deterministic in seed)."""
+    rng = np.random.default_rng(spec.seed)
+    c, h, w = spec.shape
+    protos = np.zeros((spec.num_classes, c, h, w), np.float32)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    for cls in range(spec.num_classes):
+        for ch in range(c):
+            fx, fy = rng.uniform(0.5, 3.0, 2)
+            px, py = rng.uniform(0, 2 * np.pi, 2)
+            amp = rng.uniform(0.7, 1.3)
+            protos[cls, ch] = amp * (
+                np.sin(2 * np.pi * fx * xx / w + px)
+                * np.cos(2 * np.pi * fy * yy / h + py)
+            )
+    return protos
+
+
+class ImageStream:
+    """Infinite class-conditional stream: batch(step) is pure in (seed, step)."""
+
+    def __init__(self, spec: ImageStreamSpec):
+        self.spec = spec
+        self._protos = jnp.asarray(_class_prototypes(spec))
+
+    def batch(self, step: int, batch_size: Optional[int] = None):
+        bs = batch_size or self.spec.batch_size
+        key = jax.random.fold_in(jax.random.PRNGKey(self.spec.seed), step)
+        k1, k2 = jax.random.split(key)
+        labels = jax.random.randint(k1, (bs,), 0, self.spec.num_classes)
+        noise = self.spec.noise * jax.random.normal(
+            k2, (bs, *self.spec.shape), jnp.float32
+        )
+        data = self._protos[labels] + noise
+        return data, labels
+
+    def __iter__(self) -> Iterator:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+    def eval_iter(self, offset: int = 10_000) -> Iterator:
+        step = offset
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def mnist_like(batch_size: int, seed: int = 0) -> ImageStream:
+    return ImageStream(ImageStreamSpec((1, 28, 28), 10, batch_size, seed))
+
+
+def cifar10_like(batch_size: int, seed: int = 0) -> ImageStream:
+    return ImageStream(ImageStreamSpec((3, 32, 32), 10, batch_size, seed))
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStreamSpec:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+
+class TokenStream:
+    """Deterministic LM token stream with learnable bigram structure."""
+
+    def __init__(self, spec: TokenStreamSpec):
+        self.spec = spec
+        rng = np.random.default_rng(spec.seed)
+        v = min(spec.vocab_size, 512)
+        # sparse deterministic successor table over a reduced alphabet
+        self._succ = jnp.asarray(rng.integers(0, v, size=(v,)), jnp.int32)
+        self._v = v
+
+    def batch(self, step: int, host_id: int = 0, num_hosts: int = 1):
+        spec = self.spec
+        bs = spec.batch_size // num_hosts
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(spec.seed), step * num_hosts + host_id
+        )
+        k1, k2 = jax.random.split(key)
+        start = jax.random.randint(k1, (bs, 1), 0, self._v)
+
+        def body(tok, _):
+            nxt = self._succ[tok[:, 0]][:, None]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(body, start, None, length=spec.seq_len)
+        toks = jnp.swapaxes(toks[:, :, 0], 0, 1)      # (bs, seq)
+        # inject noise tokens so the task isn't trivially deterministic
+        noise = jax.random.bernoulli(k2, 0.1, toks.shape)
+        rand_tok = jax.random.randint(k2, toks.shape, 0, self._v)
+        toks = jnp.where(noise, rand_tok, toks)
+        inputs = toks[:, :-1]
+        targets = toks[:, 1:]
+        return inputs, targets
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

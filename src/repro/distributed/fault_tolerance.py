@@ -1,0 +1,144 @@
+"""Fault tolerance + elasticity + straggler mitigation.
+
+What a 1000+-node deployment needs, and what of it runs here:
+
+  * ``run_with_restarts`` — the supervision loop: run the train function,
+    on failure restore the latest checkpoint and continue; an injectable
+    ``FaultInjector`` exercises this in tests (kill at step k).
+  * ``ElasticPlan`` — on device loss, rebuild the largest valid mesh from
+    the surviving devices (keeping the model-parallel degree), recompute
+    the per-host data-shard assignment, and restore the checkpoint with
+    the new shardings (checkpoints are mesh-agnostic .npy shards).
+  * ``StragglerPolicy`` — deterministic data-shard reassignment: shard i
+    of step s goes to host ``perm(s)[i]``; a slow host's shard is cheap to
+    re-issue because streams are pure in (seed, step, shard).  Step-time
+    EMA detection flags hosts > ``threshold``x the median.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.distributed.checkpoint import Checkpointer
+
+
+class FaultInjector:
+    """Deterministic fault schedule for tests: raise at given steps."""
+
+    def __init__(self, fail_at: Sequence[int] = ()):  # steps that die once
+        self.fail_at = set(fail_at)
+        self.fired: set = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def run_with_restarts(
+    train_fn: Callable[[int, Any], Tuple[Any, int]],
+    ckpt: Checkpointer,
+    init_state: Any,
+    *,
+    max_restarts: int = 3,
+) -> Tuple[Any, int, int]:
+    """Supervise ``train_fn(start_step, state) -> (state, next_step)``.
+
+    On exception: restore latest checkpoint and retry (up to max_restarts).
+    Returns (state, final_step, restarts_used).
+    """
+    restarts = 0
+    state = init_state
+    step = 0
+    while True:
+        try:
+            state, step = train_fn(step, state)
+            return state, step, restarts
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            latest = ckpt.latest_step()
+            if latest is not None:
+                state = ckpt.restore(latest, state)
+                step = latest
+            else:
+                step = 0
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Re-mesh plan after losing devices.
+
+    Keeps the TP degree (model axis) intact — TP re-sharding would change
+    per-op layouts — and shrinks the data axis to the largest multiple
+    that fits, dropping stragglers/failed hosts.
+    """
+
+    n_devices: int
+    model_parallel: int
+
+    def viable(self) -> bool:
+        return self.n_devices >= self.model_parallel
+
+    @property
+    def data_parallel(self) -> int:
+        return self.n_devices // self.model_parallel
+
+    @property
+    def devices_used(self) -> int:
+        return self.data_parallel * self.model_parallel
+
+    def global_batch_for(self, per_replica_batch: int) -> int:
+        return self.data_parallel * per_replica_batch
+
+    def make_mesh(self, devices=None):
+        import jax
+
+        devs = devices if devices is not None else jax.devices()
+        devs = np.asarray(devs[: self.devices_used]).reshape(
+            self.data_parallel, self.model_parallel
+        )
+        from jax.sharding import Mesh
+
+        return Mesh(devs, ("data", "model"))
+
+
+def plan_after_failure(
+    total_devices: int, lost: int, model_parallel: int
+) -> ElasticPlan:
+    return ElasticPlan(total_devices - lost, model_parallel)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """EMA-based detection + deterministic shard reassignment."""
+
+    n_hosts: int
+    ema_alpha: float = 0.3
+    threshold: float = 2.0
+
+    def __post_init__(self):
+        self.ema = np.zeros(self.n_hosts)
+
+    def observe(self, host_times: Sequence[float]) -> List[int]:
+        t = np.asarray(host_times, dtype=np.float64)
+        self.ema = np.where(
+            self.ema == 0, t, self.ema_alpha * t + (1 - self.ema_alpha) * self.ema
+        )
+        med = float(np.median(self.ema))
+        return [i for i in range(self.n_hosts) if self.ema[i] > self.threshold * med]
+
+    def assignment(self, step: int, exclude: Sequence[int] = ()) -> Dict[int, int]:
+        """shard index -> host id for this step (deterministic permutation,
+        skipping excluded hosts; excluded hosts' shards go to the fastest)."""
+        alive = [h for h in range(self.n_hosts) if h not in set(exclude)]
+        rng = np.random.default_rng(step)
+        perm = rng.permutation(len(alive))
+        return {
+            shard: alive[perm[shard % len(alive)]]
+            for shard in range(self.n_hosts)
+        }

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the compute hot-spots (each <name>.py holds the
+# pl.pallas_call + BlockSpec tiling), with ops.py as the policy-dispatched
+# differentiable wrappers and ref.py as the pure-jnp oracles.
+from repro.kernels import ops, ref  # noqa: F401  (registers ops on import)

@@ -1,0 +1,121 @@
+"""Elementwise Pallas kernels: (leaky-)ReLU fwd/bwd and the paper's
+``matrixPlusVectorRows`` bias functor.
+
+These are the PHAST-functor-shaped ops: the functor body is trivial; the
+point is the tiling.  On TPU the unit of work is a (sublane×lane) VMEM tile,
+so the "one thread per element" CPU/GPU mapping becomes "one grid cell per
+(bm, bn) tile" — the last dim a multiple of 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.core.registry import get_tuning
+from repro.kernels.gemm import pad_to
+
+
+def _tile2d(x: jax.Array):
+    """View any-rank array as 2-D (rows, lanes) for tiling."""
+    if x.ndim == 0:
+        return x.reshape(1, 1), x.shape
+    last = x.shape[-1]
+    return x.reshape(-1, last), x.shape
+
+
+def _eltwise_call(kernel, out_dtype, *arrays, interpret=None, op_name="eltwise"):
+    if interpret is None:
+        interpret = interpret_default()
+    x2, orig_shape = _tile2d(arrays[0])
+    rest = [a.reshape(x2.shape) for a in arrays[1:]]
+    t = get_tuning(op_name, bm=256, bn=512)
+    m, n = x2.shape
+    bm, bn = min(t["bm"], m), min(t["bn"], n)
+    xs = [pad_to(a, (bm, bn)) for a in (x2, *rest)]
+    mp, np_ = xs[0].shape
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)) for _ in xs],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name=f"repro_{op_name}",
+    )(*xs)
+    return out[:m, :n].reshape(orig_shape)
+
+
+def _relu_kernel(x_ref, o_ref, *, slope: float):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x > 0, x, slope * x)
+
+
+def _relu_bwd_kernel(x_ref, dy_ref, o_ref, *, slope: float):
+    x, dy = x_ref[...], dy_ref[...]
+    o_ref[...] = jnp.where(x > 0, dy, slope * dy)
+
+
+@functools.partial(jax.jit, static_argnames=("negative_slope", "interpret"))
+def relu_pallas(x, negative_slope: float = 0.0, interpret=None):
+    return _eltwise_call(
+        functools.partial(_relu_kernel, slope=negative_slope),
+        x.dtype,
+        x,
+        interpret=interpret,
+        op_name="relu",
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("negative_slope", "interpret"))
+def relu_bwd_pallas(x, dy, negative_slope: float = 0.0, interpret=None):
+    return _eltwise_call(
+        functools.partial(_relu_bwd_kernel, slope=negative_slope),
+        x.dtype,
+        x,
+        dy,
+        interpret=interpret,
+        op_name="relu",
+    )
+
+
+def _bias_rows_kernel(m_ref, v_ref, o_ref):
+    # v block is (1, bn): broadcast down rows — the matrixPlusVectorRows functor
+    o_ref[...] = m_ref[...] + v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bias_add_rows_pallas(m: jax.Array, vec: jax.Array, interpret=None):
+    """m: (M,N) += vec (N,) broadcast over rows (Listing 1.2's functor)."""
+    if interpret is None:
+        interpret = interpret_default()
+    t = get_tuning("bias_add", bm=256, bn=512)
+    mm, n = m.shape
+    bm, bn = min(t["bm"], mm), min(t["bn"], n)
+    mp = pad_to(m, (bm, bn))
+    vp = pad_to(vec.reshape(1, -1), (1, bn))
+    grid = (mp.shape[0] // bm, mp.shape[1] // bn)
+    out = pl.pallas_call(
+        _bias_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(mp.shape, m.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name="repro_bias_add_rows",
+    )(mp, vp)
+    return out[:mm, :n]

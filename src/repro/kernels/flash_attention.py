@@ -1,0 +1,451 @@
+"""Blockwise (flash) attention Pallas kernels — GQA, causal, sliding-window.
+
+The LM-zoo's dominant compute hot-spot.  TPU-native design: online-softmax
+accumulation in VMEM f32 scratch across the sequential KV-block grid axis;
+Q/KV tiles are MXU-aligned; GQA is expressed *in the BlockSpec index maps*
+(kv block index = q_head // group) so grouped KV is never materialized
+g-fold — the paper's "avoid layout-conversion copies at boundaries" lesson
+applied to head layout.
+
+Kernels:
+  _flash_fwd   : grid (B, Hq, nQ, nK) -> out, lse
+  _flash_dq    : grid (B, Hq, nQ, nK) -> dq
+  _flash_dkv   : grid (B, Hkv, nK, g*nQ) -> dk, dv  (inner axis walks the
+                 g q-heads of the group × their q blocks; scratch persists)
+  _flash_decode: single-q-row attention against a KV cache with *dynamic*
+                 valid length (SMEM scalar), for serve_step.
+
+Causal/window block skipping uses pl.when so fully-masked tiles do no MXU
+work (they still schedule — negligible next to the saved matmuls).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.core.registry import get_tuning
+
+NEG_INF = float(-1e30)
+
+
+def _mask(s, iq, ik, bq, bk, *, causal, window, sk):
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    m = kpos < sk  # kv padding
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return jnp.where(m, s, NEG_INF)
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+    *, scale, causal, window, n_k, bq, bk, sk,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level skip for causality / window
+    run = jnp.bool_(True)
+    if causal:
+        run &= ik * bk <= (iq + 1) * bq - 1
+    if window is not None:
+        run &= (ik + 1) * bk - 1 > iq * bq - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = _mask(s, iq, ik, bq, bk, causal=causal, window=window, sk=sk)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
+
+
+def _pad_seq(x, block, axis):
+    pad = (-x.shape[axis]) % block
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Returns (out (B,Sq,Hq,D), lse (B,Hq,Sq))."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_attention", bq=128, bk=128)
+    bq, bk = min(t["bq"], sq), min(t["bk"], sk)
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), bq, 2)    # (B,Hq,Sq',D)
+    kt = _pad_seq(k.transpose(0, 2, 1, 3), bk, 2)    # (B,Hkv,Sk',D)
+    vt = _pad_seq(v.transpose(0, 2, 1, 3), bk, 2)
+    n_q, n_k = qt.shape[2] // bq, kt.shape[2] // bk
+    grid = (b, hq, n_q, n_k)
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _flash_fwd_kernel,
+            scale=scale, causal=causal, window=window,
+            n_k=n_k, bq=bq, bk=bk, sk=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(qt.shape, q.dtype),
+            jax.ShapeDtypeStruct(qt.shape[:3], jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_fwd",
+    )(qt, kt, vt)
+    out = out[:, :, :sq].transpose(0, 2, 1, 3)
+    return out, lse[:, :, :sq]
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _flash_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref, dq_ref, acc_ref,
+    *, scale, causal, window, n_k, bq, bk, sk,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = jnp.bool_(True)
+    if causal:
+        run &= ik * bk <= (iq + 1) * bq - 1
+    if window is not None:
+        run &= (ik + 1) * bk - 1 > iq * bq - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]                  # (bq,1)
+        dd = dd_ref[0, 0][:, None]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = _mask(s, iq, ik, bq, bk, causal=causal, window=window, sk=sk)
+        p = jnp.exp(s - lse)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - dd)
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dd_ref, dk_ref, dv_ref,
+    dk_acc, dv_acc,
+    *, scale, causal, window, n_q, n_inner, bq, bk, sk, sq,
+):
+    ik, inner = pl.program_id(2), pl.program_id(3)
+    iq = inner % n_q
+
+    @pl.when(inner == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    run = jnp.bool_(True)
+    if causal:
+        run &= ik * bk <= (iq + 1) * bq - 1
+    if window is not None:
+        run &= (ik + 1) * bk - 1 > iq * bq - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        dd = dd_ref[0, 0][:, None]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = _mask(s, iq, ik, bq, bk, causal=causal, window=window, sk=sk)
+        # mask padded q rows too (their lse is garbage)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        p = jnp.where(qpos < sq, jnp.exp(s - lse), 0.0)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - dd)
+        dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+
+    @pl.when(inner == n_inner - 1)
+    def _done():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "interpret"),
+)
+def flash_attention_bwd_pallas(
+    q, k, v, out, lse, do,
+    *, causal=True, window=None, scale=None, interpret=None,
+):
+    """Returns (dq, dk, dv)."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_attention", bq=128, bk=128)
+    bq, bk = min(t["bq"], sq), min(t["bk"], sk)
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), bq, 2)
+    kt = _pad_seq(k.transpose(0, 2, 1, 3), bk, 2)
+    vt = _pad_seq(v.transpose(0, 2, 1, 3), bk, 2)
+    dot = _pad_seq(do.transpose(0, 2, 1, 3), bq, 2)
+    ot = _pad_seq(out.transpose(0, 2, 1, 3), bq, 2)
+    dd = jnp.sum(dot.astype(jnp.float32) * ot.astype(jnp.float32), axis=-1)
+    lse_p = _pad_seq(lse, bq, 2)
+    n_q, n_k = qt.shape[2] // bq, kt.shape[2] // bk
+    # --- dq ---
+    grid = (b, hq, n_q, n_k)
+    dq = pl.pallas_call(
+        functools.partial(
+            _flash_dq_kernel,
+            scale=scale, causal=causal, window=window,
+            n_k=n_k, bq=bq, bk=bk, sk=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j, g=g: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b_, h, i, j: (b_, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_dq",
+    )(qt, kt, vt, dot, lse_p, dd)
+    # --- dk, dv --- inner axis = (q-head-in-group, q-block)
+    n_inner = g * n_q
+    grid2 = (b, hkv, n_k, n_inner)
+
+    def qix(b_, h, jk, inner, g=g, n_q=n_q):
+        return (b_, h * g + inner // n_q, inner % n_q, 0)
+
+    def qix3(b_, h, jk, inner, g=g, n_q=n_q):
+        return (b_, h * g + inner // n_q, inner % n_q)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _flash_dkv_kernel,
+            scale=scale, causal=causal, window=window,
+            n_q=n_q, n_inner=n_inner, bq=bq, bk=bk, sk=sk, sq=sq,
+        ),
+        grid=grid2,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), qix),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, jk, inner: (b_, h, jk, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, jk, inner: (b_, h, jk, 0)),
+            pl.BlockSpec((1, 1, bq, d), qix),
+            pl.BlockSpec((1, 1, bq), qix3),
+            pl.BlockSpec((1, 1, bq), qix3),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, jk, inner: (b_, h, jk, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, jk, inner: (b_, h, jk, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(kt.shape, k.dtype),
+            jax.ShapeDtypeStruct(vt.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, d), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_dkv",
+    )(qt, kt, vt, dot, lse_p, dd)
+    dq = dq[:, :, :sq].transpose(0, 2, 1, 3)
+    dk = dk[:, :, :sk].transpose(0, 2, 1, 3)
+    dv = dv[:, :, :sk].transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token vs a KV cache of dynamic valid length (SMEM scalar)
+# ---------------------------------------------------------------------------
+
+def _flash_decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, n_k, bk, window,
+):
+    ik = pl.program_id(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip blocks entirely beyond the valid length (or before the window)
+    run = ik * bk < cache_len
+    if window is not None:
+        run &= (ik + 1) * bk - 1 >= cache_len - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (1*gq, d) rows=heads grp
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < cache_len
+        if window is not None:
+            valid &= kpos >= cache_len - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_decode_pallas(
+    q: jax.Array,        # (B, Hq, D)  one token per sequence
+    k_cache: jax.Array,  # (B, Smax, Hkv, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # int32 scalar: valid prefix length (incl. new tok)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_decode", bk=512)
+    bk = min(t["bk"], smax)
+    kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), bk, 2)  # (B,Hkv,S',D)
+    vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), bk, 2)
+    n_k = kt.shape[2] // bk
+    # group query heads of one kv head into rows of a single matmul
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, n_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_decode_kernel, scale=scale, n_k=n_k, bk=bk, window=window
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_decode",
+    )(cache_len.reshape(1).astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,87 @@
+"""Tiled GEMM Pallas kernel — the workhorse behind Caffe's im2col+GEMM conv
+and the InnerProduct layer, and the LM stack's projections.
+
+TPU adaptation of the paper's GEMM usage: instead of delegating to OpenBLAS
+(CPU) / cuBLAS (GPU), the portable op carries its own MXU-tiled kernel.
+Grid = (M/bm, N/bn, K/bk); the K axis is the innermost, sequential
+("arbitrary") dimension so a VMEM f32 scratch accumulator persists across K
+steps; output is written once on the last K step.  Block shapes are
+MXU-aligned (multiples of 128 in the lane dim) and come from the tuning
+registry — PHAST's "tuning parameters without source change".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.core.registry import get_tuning
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def pad_to(x: jax.Array, mults: tuple) -> jax.Array:
+    """Zero-pad trailing edges so every dim is a multiple of ``mults``."""
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def gemm_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(M,K) @ (K,N) -> (M,N) via the tiled Pallas kernel."""
+    if interpret is None:
+        interpret = interpret_default()
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    t = get_tuning("gemm", bm=128, bn=128, bk=128)
+    bm, bn, bk = (min(t["bm"], m), min(t["bn"], n), min(t["bk"], k))
+    ap = pad_to(a, (bm, bk))
+    bp = pad_to(b, (bk, bn))
+    mp, kp = ap.shape
+    np_ = bp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=grid[2], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_gemm",
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,154 @@
+"""im2col / col2im Pallas kernels — the paper's signature transformation.
+
+Caffe's original im2col is a penta-loop with loop-carried indices; the
+paper's PHAST port *merges all loops and re-parameterizes with one flat
+index* so every thread is independent.  The TPU-native re-think: the unit
+of parallel work is not an element but a VMEM tile, and the (kh, kw) factor
+of the flat index space is tiny and static — so we peel it into a static
+Python loop *inside* the kernel (unrolled at trace time; each iteration is a
+static slice, which Mosaic lowers to cheap vector moves), while the grid
+runs over (batch, channel-block).  This keeps the "every output element is
+written exactly once, no cross-cell dependency" property of the paper's
+flat-index form.
+
+im2col:  (N, C, H, W)            -> (N, C*KH*KW, OH*OW)
+col2im:  (N, C*KH*KW, OH*OW)     -> (N, C, H, W)   [adjoint / scatter-add]
+
+col2im is implemented in *gather* form (race-free: each input pixel sums
+the ≤ KH*KW column entries that reference it) for stride == 1; other
+strides fall back to the reference — recorded like the paper records its
+partially-ported blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.kernels.ref import conv_out_size
+
+
+def _im2col_kernel(x_ref, o_ref, *, kh, kw, stride, oh, ow, cb):
+    # x_ref: (1, cb, HP, WP) padded input block
+    # o_ref: (1, cb*kh*kw, oh*ow)
+    x = x_ref[0]                                     # (cb, HP, WP)
+    parts = []
+    for i in range(kh):                              # static unroll: the
+        for j in range(kw):                          # merged penta-loop's
+            # (kh,kw) factor — each iter is a static strided slice
+            win = jax.lax.slice(
+                x,
+                (0, i, j),
+                (cb, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )                                        # (cb, oh, ow)
+            parts.append(win.reshape(cb, 1, oh * ow))
+    # row ordering matches the flat index (c, i, j): row = c*kh*kw + i*kw + j
+    o_ref[0] = jnp.concatenate(parts, axis=1).reshape(cb * kh * kw, oh * ow)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kh", "kw", "stride", "pad", "interpret")
+)
+def im2col_pallas(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 0,
+    interpret=None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    n, c, h, w = x.shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    hp, wp = xp.shape[2], xp.shape[3]
+    cb = c  # channel block: LeNet-scale C fits VMEM whole; tune for big C
+    grid = (n, c // cb)
+    out = pl.pallas_call(
+        functools.partial(
+            _im2col_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow, cb=cb
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, cb, hp, wp), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec(
+            (1, cb * kh * kw, oh * ow), lambda i, j: (i, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, c * kh * kw, oh * ow), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name="repro_im2col",
+    )(xp)
+    return out
+
+
+def _col2im_kernel(c_ref, o_ref, *, kh, kw, oh, ow, h, w, pad, cb):
+    # gather form, stride == 1:
+    #   out[y, x] = sum_{i,j} cols[(i*kw+j), y+pad-i, x+pad-j]  (in-bounds)
+    # Implemented by padding the (oh, ow) grid so every shift is a static
+    # slice of the same padded buffer.
+    cols = c_ref[0]                                  # (cb*kh*kw, oh*ow)
+    cols = cols.reshape(cb, kh * kw, oh, ow)
+    # pad the (oh, ow) grid so every (y+pad-i, x+pad-j) shift is a static
+    # in-bounds slice of the same padded buffer
+    acc = jnp.zeros((cb, h, w), jnp.float32)
+    big = jnp.pad(
+        cols,
+        ((0, 0), (0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1)),
+    )  # (cb, kh*kw, oh + 2kh-2, ow + 2kw-2)
+    for i in range(kh):
+        for j in range(kw):
+            # out[y,x] += cols[i*kw+j, y+pad-i, x+pad-j]
+            # big index offset: (y + pad - i) + (kh-1) in padded coords
+            ys = pad - i + (kh - 1)
+            xs = pad - j + (kw - 1)
+            acc = acc + jax.lax.slice(
+                big[:, i * kw + j],
+                (0, ys, xs),
+                (cb, ys + h, xs + w),
+            ).astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("x_shape", "kh", "kw", "stride", "pad", "interpret")
+)
+def col2im_pallas(
+    cols: jax.Array,
+    x_shape,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+    interpret=None,
+) -> jax.Array:
+    if stride != 1:
+        raise NotImplementedError("col2im_pallas supports stride=1; use ref")
+    if interpret is None:
+        interpret = interpret_default()
+    n, c, h, w = x_shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    cb = c
+    grid = (n, c // cb)
+    out = pl.pallas_call(
+        functools.partial(
+            _col2im_kernel, kh=kh, kw=kw, oh=oh, ow=ow, h=h, w=w, pad=pad, cb=cb
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cb * kh * kw, oh * ow), lambda i, j: (i, j, 0))
+        ],
+        out_specs=pl.BlockSpec((1, cb, h, w), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h, w), cols.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name="repro_col2im",
+    )(cols)
+    return out

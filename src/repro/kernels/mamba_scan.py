@@ -1,0 +1,141 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+TPU-native layout of the SSD algorithm (arXiv:2405.21060): grid
+(B, H, n_chunks) with the chunk axis sequential; the running (P, N) state
+lives in VMEM f32 scratch across chunk steps.  Every compute inside the
+kernel is a 2-D MXU matmul:
+
+    cb       = C @ B^T                      (L,L)   intra-chunk kernel
+    y_intra  = (cb ⊙ seg ⊙ dt_u) @ x        (L,P)
+    y_inter  = (C ⊙ e^cum) @ state^T        (L,P)
+    state'   = e^{cum_L} state + x^T @ (B ⊙ decay·dt)   (P,N)
+
+Supports n_groups == 1 (the Mamba-2 2.7B / Zamba2 configuration); grouped
+B/C falls back to the reference oracle.  Backward is the reference vjp
+(recorded, like the paper's partially-ported blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.core.registry import get_tuning
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hf_ref, state_ref,
+    *, n_c: int, chunk: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)           # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    a = a_ref[0, 0]                                   # scalar
+    bmat = b_ref[0].astype(jnp.float32)               # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)               # (L, N)
+
+    dA = dt * a                                       # (L,)
+    cum = jnp.cumsum(dA)                              # (L,)
+    seg = cum[:, None] - cum[None, :]                 # (L, L)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    seg = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)
+    att = cb * seg * dt[None, :]
+    y = jnp.dot(att, x, preferred_element_type=jnp.float32)
+    state = state_ref[...]                            # (P, N)
+    y += jnp.dot(
+        cmat * jnp.exp(cum)[:, None], state.T,
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    decay = jnp.exp(cum[-1] - cum) * dt               # (L,)
+    state_ref[...] = jnp.exp(cum[-1]) * state + jnp.dot(
+        x.T, bmat * decay[:, None], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ic == n_c - 1)
+    def _done():
+        hf_ref[0, 0] = state_ref[...].astype(hf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,    # (B, S, H, P)
+    dt: jax.Array,   # (B, S, H)
+    A: jax.Array,    # (H,)
+    B_: jax.Array,   # (B, S, 1, N)  — n_groups == 1
+    C: jax.Array,    # (B, S, 1, N)
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,   # (B, H, P, N)
+    interpret=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    if interpret is None:
+        interpret = interpret_default()
+    b, s, h, p = x.shape
+    assert B_.shape[2] == 1, "pallas SSD kernel supports n_groups=1"
+    n = B_.shape[3]
+    t = get_tuning("ssd_scan", chunk=chunk)
+    chunk = t["chunk"]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    n_c = sp // chunk
+    h0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    grid = (b, h, n_c)
+    y, hf = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_c=n_c, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, ih, ic: (b_, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, ih, ic: (b_, ic, ih)),
+            pl.BlockSpec((1, 1), lambda b_, ih, ic: (0, ih)),
+            pl.BlockSpec((1, chunk, n), lambda b_, ih, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, ih, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, ih, ic: (b_, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b_, ih, ic: (b_, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, ih, ic: (b_, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sp, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_ssd_scan",
+    )(
+        x,
+        dt,
+        A.reshape(1, h).astype(jnp.float32),
+        B_.reshape(b, sp, n),
+        C.reshape(b, sp, n),
+        h0,
+    )
+    return y[:, :s], hf

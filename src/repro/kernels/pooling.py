@@ -1,0 +1,154 @@
+"""MaxPool Pallas kernels (forward with argmax bookkeeping + backward).
+
+Caffe's pooling stores, during forward, the index of the winning element of
+each window; backward scatters gradients through that mapping.  The paper
+parallelized only the outer loop; the TPU re-think parallelizes over
+(batch, channel-block) grid cells with the whole spatial plane in VMEM and
+unrolls the static k×k window loop — same flat-index independence property,
+tile-sized work units.
+
+Backward is implemented race-free in gather form for the non-overlapping
+case (stride >= kernel, which covers LeNet's 2×2/2 and 3×3/3 pools);
+overlapping pools fall back to the reference scatter (recorded, like the
+paper's partially-ported blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.kernels.ref import conv_out_size
+
+
+def _maxpool_kernel(x_ref, o_ref, a_ref, *, k, stride, oh, ow, wp, cb):
+    x = x_ref[0]                                     # (cb, HP, WP)
+    best = None
+    arg = None
+    for i in range(k):
+        for j in range(k):
+            win = jax.lax.slice(
+                x,
+                (0, i, j),
+                (cb, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )                                        # (cb, oh, ow)
+            # absolute flat index of this candidate in the padded plane
+            rows = (jnp.arange(oh) * stride + i)[:, None]
+            cols = (jnp.arange(ow) * stride + j)[None, :]
+            idx = jnp.broadcast_to(rows * wp + cols, win.shape).astype(jnp.int32)
+            if best is None:
+                best, arg = win, idx
+            else:
+                take = win > best
+                best = jnp.where(take, win, best)
+                arg = jnp.where(take, idx, arg)
+    o_ref[0] = best
+    a_ref[0] = arg
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad", "interpret"))
+def maxpool_pallas(x: jax.Array, k: int, stride: int, pad: int = 0, interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    n, c, h, w = x.shape
+    oh = conv_out_size(h, k, stride, pad)
+    ow = conv_out_size(w, k, stride, pad)
+    neg = jnp.finfo(x.dtype).min
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (pad, pad), (pad, pad)), constant_values=neg
+    )
+    hp, wp = xp.shape[2], xp.shape[3]
+    cb = c
+    grid = (n, c // cb)
+    out, arg = pl.pallas_call(
+        functools.partial(
+            _maxpool_kernel, k=k, stride=stride, oh=oh, ow=ow, wp=wp, cb=cb
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, cb, hp, wp), lambda i, j: (i, j, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, cb, oh, ow), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, cb, oh, ow), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c, oh, ow), x.dtype),
+            jax.ShapeDtypeStruct((n, c, oh, ow), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name="repro_maxpool",
+    )(xp)
+    return out, arg
+
+
+def _maxpool_bwd_kernel(dy_ref, a_ref, o_ref, *, k, stride, oh, ow, h, w, pad, wp, cb):
+    # Non-overlapping gather form: input pixel (y, x) belongs to at most one
+    # window (y // stride, x // stride); it receives dy iff the stored argmax
+    # equals its own flat padded-plane index.  Pure broadcast/compare — no
+    # scatter, no races.
+    dy = dy_ref[0]                                   # (cb, oh, ow)
+    arg = a_ref[0]
+    hp = h + 2 * pad
+    # upsample window values to pixel granularity (repeat = reshape+bcast)
+    dy_up = jnp.repeat(jnp.repeat(dy, stride, axis=1), stride, axis=2)
+    arg_up = jnp.repeat(jnp.repeat(arg, stride, axis=1), stride, axis=2)
+    hh, ww_ = oh * stride, ow * stride
+    rows = jax.lax.broadcasted_iota(jnp.int32, (hh, ww_), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (hh, ww_), 1)
+    self_idx = rows * wp + cols                       # flat padded index
+    grad = jnp.where(arg_up == self_idx[None], dy_up, 0)
+    # embed into the padded plane (windows may not cover the bottom/right rim)
+    grad = grad[:, : min(hh, hp), : min(ww_, wp)]
+    grad = jnp.pad(
+        grad,
+        (
+            (0, 0),
+            (0, hp - grad.shape[1]),
+            (0, wp - grad.shape[2]),
+        ),
+    )
+    o_ref[0] = jax.lax.slice(grad, (0, pad, pad), (cb, pad + h, pad + w))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("x_shape", "k", "stride", "pad", "interpret")
+)
+def maxpool_bwd_pallas(
+    dy: jax.Array, argmax: jax.Array, x_shape, k: int, stride: int,
+    pad: int = 0, interpret=None,
+):
+    if stride < k:
+        raise NotImplementedError("overlapping pool bwd: use reference")
+    if interpret is None:
+        interpret = interpret_default()
+    n, c, h, w = x_shape
+    oh, ow = dy.shape[2], dy.shape[3]
+    wp = w + 2 * pad
+    cb = c
+    grid = (n, c // cb)
+    out = pl.pallas_call(
+        functools.partial(
+            _maxpool_bwd_kernel,
+            k=k, stride=stride, oh=oh, ow=ow, h=h, w=w, pad=pad, wp=wp, cb=cb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cb, oh, ow), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, cb, oh, ow), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, h, w), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, h, w), dy.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        name="repro_maxpool_bwd",
+    )(dy, argmax)
+    return out

@@ -1,0 +1,437 @@
+"""Pure-jnp reference oracles for every kernel in ``repro.kernels``.
+
+These are the "sequential-like, high-level" implementations in the paper's
+sense: correct everywhere, used (a) as the REFERENCE backend lowering,
+(b) as the ground truth every Pallas kernel is allclose-tested against,
+(c) as the vjp fallback for kernels whose backward pass is not yet ported
+(mirroring the paper's incremental-porting strategy).
+
+Conventions:
+  conv/pool tensors are NCHW (Caffe's layout);
+  attention tensors are (B, S, H, D);
+  matrices are row-major logical (M, K) @ (K, N) -> (M, N).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+def gemm(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    """(M,K) @ (K,N) with f32 accumulation (MXU semantics)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def bias_add_rows(m: jax.Array, vec: jax.Array) -> jax.Array:
+    """The paper's matrixPlusVectorRows functor: m[i,:] += vec."""
+    return m + vec[None, :]
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2im  (the paper's merged penta-loop, flat-index form)
+# ---------------------------------------------------------------------------
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+def im2col(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """NCHW image -> (N, C*KH*KW, OH*OW) column matrix.
+
+    Caffe's original is a penta-loop over (c, kh, kw, oh, ow); the paper's
+    port merges the loops into one flat index so each element is independent.
+    Reference realization: a vectorized gather over the same flat index
+    decomposition.
+    """
+    n, c, h, w = x.shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    # flat index space: (c, i, j, oy, ox); decompose exactly like the port
+    i_idx = jnp.arange(kh)
+    j_idx = jnp.arange(kw)
+    oy = jnp.arange(oh) * stride
+    ox = jnp.arange(ow) * stride
+    rows = i_idx[:, None, None, None] + oy[None, None, :, None]   # (kh,1,oh,1)
+    cols = j_idx[None, :, None, None] + ox[None, None, None, :]   # (1,kw,1,ow)
+    rows = jnp.broadcast_to(rows, (kh, kw, oh, ow))
+    cols = jnp.broadcast_to(cols, (kh, kw, oh, ow))
+    patches = xp[:, :, rows, cols]                     # (n, c, kh, kw, oh, ow)
+    return patches.reshape(n, c * kh * kw, oh * ow)
+
+
+def col2im(
+    cols: jax.Array,
+    x_shape: Tuple[int, int, int, int],
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Adjoint of im2col: scatter-add columns back to NCHW image."""
+    n, c, h, w = x_shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    patches = cols.reshape(n, c, kh, kw, oh, ow)
+    hp, wp = h + 2 * pad, w + 2 * pad
+    out = jnp.zeros((n, c, hp, wp), cols.dtype)
+    i_idx = jnp.arange(kh)
+    j_idx = jnp.arange(kw)
+    oy = jnp.arange(oh) * stride
+    ox = jnp.arange(ow) * stride
+    rows = jnp.broadcast_to(
+        i_idx[:, None, None, None] + oy[None, None, :, None], (kh, kw, oh, ow)
+    )
+    cols_ix = jnp.broadcast_to(
+        j_idx[None, :, None, None] + ox[None, None, None, :], (kh, kw, oh, ow)
+    )
+    out = out.at[:, :, rows, cols_ix].add(patches)
+    return out[:, :, pad : pad + h, pad : pad + w]
+
+
+# ---------------------------------------------------------------------------
+# Convolution (im2col + GEMM, Caffe style)
+# ---------------------------------------------------------------------------
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """x: (N,C,H,W), w: (F,C,KH,KW), b: (F,) -> (N,F,OH,OW)."""
+    n, c, h, wd = x.shape
+    f, _, kh, kw = w.shape
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(wd, kw, stride, pad)
+    cols = im2col(x, kh, kw, stride, pad)              # (n, c*kh*kw, oh*ow)
+    wmat = w.reshape(f, c * kh * kw)
+    out = jnp.einsum(
+        "fk,nko->nfo", wmat, cols, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    if b is not None:
+        out = out + b[None, :, None]
+    return out.reshape(n, f, oh, ow)
+
+
+def conv2d_bwd(
+    x: jax.Array,
+    w: jax.Array,
+    dy: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    has_bias: bool = True,
+):
+    """Gradients of conv2d wrt (x, w, b). dy: (N,F,OH,OW)."""
+    n, c, h, wd = x.shape
+    f, _, kh, kw = w.shape
+    oh, ow = dy.shape[2], dy.shape[3]
+    dy_mat = dy.reshape(n, f, oh * ow)
+    cols = im2col(x, kh, kw, stride, pad)              # (n, k, o)
+    dwmat = jnp.einsum(
+        "nfo,nko->fk", dy_mat, cols, preferred_element_type=jnp.float32
+    ).astype(w.dtype)
+    dw = dwmat.reshape(f, c, kh, kw)
+    wmat = w.reshape(f, c * kh * kw)
+    dcols = jnp.einsum(
+        "fk,nfo->nko", wmat, dy_mat, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    dx = col2im(dcols, x.shape, kh, kw, stride, pad)
+    db = dy.sum(axis=(0, 2, 3)) if has_bias else None
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# Pooling (max / average) with argmax bookkeeping (Caffe stores the mapping)
+# ---------------------------------------------------------------------------
+
+def maxpool(
+    x: jax.Array, k: int, stride: int, pad: int = 0
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out, argmax_flat). argmax indexes into the padded HxW plane."""
+    n, c, h, w = x.shape
+    oh = conv_out_size(h, k, stride, pad)
+    ow = conv_out_size(w, k, stride, pad)
+    neg = jnp.finfo(x.dtype).min
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)), constant_values=neg)
+    hp, wp = xp.shape[2], xp.shape[3]
+    oy = jnp.arange(oh) * stride
+    ox = jnp.arange(ow) * stride
+    rows = oy[:, None, None, None] + jnp.arange(k)[None, None, :, None]
+    cols = ox[None, :, None, None] + jnp.arange(k)[None, None, None, :]
+    rows = jnp.broadcast_to(rows, (oh, ow, k, k))
+    cols = jnp.broadcast_to(cols, (oh, ow, k, k))
+    windows = xp[:, :, rows, cols]                      # (n,c,oh,ow,k,k)
+    wflat = windows.reshape(n, c, oh, ow, k * k)
+    out = wflat.max(axis=-1)
+    arg_local = wflat.argmax(axis=-1)                   # index within window
+    ky, kx = arg_local // k, arg_local % k
+    arg_global = (rows[None, None, :, :, 0, 0][..., None, None] * 0)  # placeholder broadcast
+    abs_r = oy[None, None, :, None] + ky
+    abs_c = ox[None, None, None, :] + kx
+    argmax = abs_r * wp + abs_c                          # flat into padded plane
+    del arg_global
+    return out, argmax
+
+
+def maxpool_bwd(
+    dy: jax.Array,
+    argmax: jax.Array,
+    x_shape: Tuple[int, int, int, int],
+    k: int,
+    stride: int,
+    pad: int = 0,
+) -> jax.Array:
+    n, c, h, w = x_shape
+    hp, wp = h + 2 * pad, w + 2 * pad
+    flat = jnp.zeros((n, c, hp * wp), dy.dtype)
+    oh, ow = dy.shape[2], dy.shape[3]
+    flat = flat.at[
+        jnp.arange(n)[:, None, None],
+        jnp.arange(c)[None, :, None],
+        argmax.reshape(n, c, oh * ow),
+    ].add(dy.reshape(n, c, oh * ow))
+    out = flat.reshape(n, c, hp, wp)
+    return out[:, :, pad : pad + h, pad : pad + w]
+
+
+def avgpool(x: jax.Array, k: int, stride: int, pad: int = 0) -> jax.Array:
+    n, c, h, w = x.shape
+    oh = conv_out_size(h, k, stride, pad)
+    ow = conv_out_size(w, k, stride, pad)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oy = jnp.arange(oh) * stride
+    ox = jnp.arange(ow) * stride
+    rows = jnp.broadcast_to(
+        oy[:, None, None, None] + jnp.arange(k)[None, None, :, None], (oh, ow, k, k)
+    )
+    cols = jnp.broadcast_to(
+        ox[None, :, None, None] + jnp.arange(k)[None, None, None, :], (oh, ow, k, k)
+    )
+    windows = xp[:, :, rows, cols]
+    return windows.mean(axis=(-1, -2))
+
+
+# ---------------------------------------------------------------------------
+# Elementwise (Caffe's ReLU is leaky-capable)
+# ---------------------------------------------------------------------------
+
+def relu(x: jax.Array, negative_slope: float = 0.0) -> jax.Array:
+    return jnp.where(x > 0, x, negative_slope * x)
+
+
+def relu_bwd(x: jax.Array, dy: jax.Array, negative_slope: float = 0.0) -> jax.Array:
+    return jnp.where(x > 0, dy, negative_slope * dy)
+
+
+# ---------------------------------------------------------------------------
+# Softmax / cross-entropy (fused, Caffe's SoftmaxWithLoss)
+# ---------------------------------------------------------------------------
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    m = jax.lax.stop_gradient(x.max(axis=axis, keepdims=True))
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def softmax_xent(
+    logits: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(B, V) logits, (B,) int labels -> (mean loss, probs)."""
+    m = logits.max(axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.exp(shifted).sum(axis=-1, keepdims=True))
+    logp = shifted - lse
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return nll.mean(), jnp.exp(logp)
+
+
+def softmax_xent_bwd(probs: jax.Array, labels: jax.Array) -> jax.Array:
+    b, v = probs.shape
+    onehot = jax.nn.one_hot(labels, v, dtype=probs.dtype)
+    return (probs - onehot) / b
+
+
+def accuracy(logits: jax.Array, labels: jax.Array, top_k: int = 1) -> jax.Array:
+    if top_k == 1:
+        return (logits.argmax(axis=-1) == labels).mean()
+    _, idx = jax.lax.top_k(logits, top_k)
+    return (idx == labels[:, None]).any(axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optionally causal / sliding-window) — oracle for flash
+# ---------------------------------------------------------------------------
+
+def mha_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference GQA attention. q_offset: absolute position of q[0] (decode)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) — chunked oracle
+# ---------------------------------------------------------------------------
+
+def ssd_scan(
+    x: jax.Array,    # (B, S, H, P)   heads x headdim
+    dt: jax.Array,   # (B, S, H)      softplus-activated step
+    A: jax.Array,    # (H,)           negative decay rate
+    B_: jax.Array,   # (B, S, G, N)   input proj (G state groups)
+    C: jax.Array,    # (B, S, G, N)   output proj
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD: y_t = C_t^T h_t, h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t.
+
+    Chunked formulation (arXiv:2405.21060): intra-chunk quadratic term +
+    inter-chunk recurrent state passing. Returns (y, final_state).
+    """
+    b, s, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    assert h % g == 0
+    if s % chunk != 0:
+        pad_len = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_len), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // chunk
+    rep = h // g
+    # reshape to chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B_.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,L,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+    dA = dtc * A[None, None, None, :]                  # (b,nc,L,h)  log-decay
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    # intra-chunk: y_intra[t] = sum_{u<=t} C_t . B_u x_u * exp(cum_t - cum_u) dt_u
+    decay = jnp.exp(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    )                                                   # (b,nc,t,u,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bclhn,bcuhn->bcluh", Cc, Bc)       # C_t . B_u
+    att = cb * decay * dtc[:, :, None, :, :]            # (b,nc,t,u,h)
+    y_intra = jnp.einsum("bcluh,bcuhp->bclhp", att, xc)
+    # chunk summaries: state contribution of chunk  = sum_u exp(cumL - cum_u) dt_u B_u x_u
+    chunk_decay = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,L,h)
+    states = jnp.einsum(
+        "bclh,bclhn,bclhp->bchpn", chunk_decay * dtc, Bc, xc
+    )                                                    # (b,nc,h,p,n)
+    # inter-chunk recurrence over nc
+    total_decay = jnp.exp(cum[:, :, -1, :])              # (b,nc,h)
+    h0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), x.dtype)
+    )
+
+    def step(carry, inp):
+        st, td = inp                                     # (b,h,p,n), (b,h)
+        new = carry * td[:, :, None, None] + st
+        return new, carry                                # emit state *before* chunk
+
+    fin, prev_states = jax.lax.scan(
+        step,
+        h0.astype(jnp.float32),
+        (
+            jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(total_decay, 1, 0).astype(jnp.float32),
+        ),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,nc,h,p,n)
+    # inter-chunk output: y_inter[t] = C_t . (exp(cum_t) h_prev)
+    y_inter = jnp.einsum(
+        "bclhn,bclh,bchpn->bclhp",
+        Cc.astype(jnp.float32),
+        jnp.exp(cum),
+        prev_states,
+    ).astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    return y, fin.astype(x.dtype)
+
+
+def ssd_decode_step(
+    x: jax.Array,   # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,   # (H,)
+    B_: jax.Array,  # (B, G, N)
+    C: jax.Array,   # (B, G, N)
+    state: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update (decode path)."""
+    b, h, p = x.shape
+    g, n = B_.shape[1], B_.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B_, rep, axis=1)     # (B,H,N)
+    Ch = jnp.repeat(C, rep, axis=1)
+    decay = jnp.exp(dt * A[None, :])     # (B,H)
+    new_state = (
+        state * decay[:, :, None, None]
+        + (dt[:, :, None] * x)[..., None] * Bh[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w
+
+
+def layernorm(
+    x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype)) * w + b

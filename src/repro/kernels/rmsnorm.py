@@ -1,0 +1,107 @@
+"""Fused RMSNorm Pallas kernel (forward + backward).
+
+Not in Caffe, but the LM-zoo's ubiquitous normalization; a textbook case of
+the paper's "merge small activities into one kernel" lesson (mean-square,
+rsqrt, scale, weight-multiply in one VMEM pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.policy import interpret_default
+from repro.core.registry import get_tuning
+from repro.kernels.gemm import pad_to
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = ((x * jax.lax.rsqrt(var + eps)).astype(o_ref.dtype)) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_pallas(x: jax.Array, w: jax.Array, eps: float = 1e-6, interpret=None):
+    if interpret is None:
+        interpret = interpret_default()
+    orig = x.shape
+    d = orig[-1]
+    x2 = x.reshape(-1, d)
+    r = x2.shape[0]
+    t = get_tuning("rmsnorm", br=256)
+    br = min(t["br"], r)
+    xp = pad_to(x2, (br, d))
+    grid = (xp.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        name="repro_rmsnorm",
+    )(xp, w.reshape(1, d))
+    return out[:r].reshape(orig)
+
+
+def _rmsnorm_bwd_kernel(x_ref, w_ref, dy_ref, dx_ref, dwp_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = x * inv
+    dxhat = dy * w
+    # dx = inv * (dxhat - xhat * mean(dxhat * xhat))
+    dx = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True))
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dwp_ref[...] = jnp.sum(dy * xhat, axis=0, keepdims=True).astype(
+        dwp_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_bwd_pallas(
+    x: jax.Array, w: jax.Array, dy: jax.Array, eps: float = 1e-6, interpret=None
+):
+    """Returns (dx, dw)."""
+    if interpret is None:
+        interpret = interpret_default()
+    orig = x.shape
+    d = orig[-1]
+    x2, dy2 = x.reshape(-1, d), dy.reshape(-1, d)
+    r = x2.shape[0]
+    t = get_tuning("rmsnorm", br=256)
+    br = min(t["br"], r)
+    xp, dyp = pad_to(x2, (br, d)), pad_to(dy2, (br, d))
+    grid = (xp.shape[0] // br,)
+    dx, dw_part = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            jax.ShapeDtypeStruct((grid[0], d), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        name="repro_rmsnorm_bwd",
+    )(xp, w.reshape(1, d), dyp)
+    return dx[:r].reshape(orig), dw_part.sum(axis=0).astype(w.dtype)

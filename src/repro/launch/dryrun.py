@@ -1,0 +1,215 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+512 placeholder host devices and extract the roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--resume]
+
+The os.environ assignment below is the FIRST executable statement — before
+ANY other import — because jax locks the device count on first init.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, input_specs
+from repro.configs.registry import all_archs, get_arch
+from repro.distributed.sharding import use_mesh
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    decode_state_shape,
+    make_serve_decode_step,
+    make_serve_prefill,
+    make_train_step,
+    train_state_shape,
+)
+from repro.optim.optimizers import OptConfig
+from repro.roofline import analysis as RA
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": m.argument_size_in_bytes,
+            "output_bytes": m.output_size_in_bytes,
+            "temp_bytes": m.temp_size_in_bytes,
+            "generated_code_bytes": m.generated_code_size_in_bytes,
+            "alias_bytes": m.alias_size_in_bytes,
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost(compiled) -> dict:
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return dict(c) if c else {}
+
+
+def dryrun_cell(
+    arch: str, shape_name: str, multi_pod: bool, *, microbatches: int = 1
+) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape_name):
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skip",
+            "reason": "full-attention arch: long_500k out of contract "
+                      "(see DESIGN.md §Arch-applicability)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    chips = mesh.devices.size
+    opt = OptConfig()
+    t0 = time.time()
+    with use_mesh(mesh, data_axes=data_axes, sequence_parallel=True):
+        if shape.kind == "train":
+            step = make_train_step(cfg, opt, microbatches=microbatches)
+            state_shape = train_state_shape(cfg, opt)
+            batch_shape = input_specs(cfg, shape)
+            state_sh = {
+                "params": SH.param_shardings(mesh, cfg, state_shape["params"]),
+                "opt": SH.opt_state_shardings(mesh, cfg, state_shape["opt"]),
+            }
+            batch_sh = SH.batch_shardings(mesh, cfg, batch_shape)
+            jfn = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jfn.lower(state_shape, batch_shape)
+            model_flops = RA.model_flops_train(cfg, shape)
+        elif shape.kind == "prefill":
+            step = make_serve_prefill(cfg)
+            pshape = jax.eval_shape(
+                lambda: __import__("repro.models.model", fromlist=["build_model"])
+                .build_model(cfg).init_params(jax.random.PRNGKey(0))
+            )
+            batch_shape = input_specs(cfg, shape)
+            p_sh = SH.param_shardings(mesh, cfg, pshape)
+            batch_sh = SH.batch_shardings(mesh, cfg, batch_shape)
+            jfn = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            lowered = jfn.lower(pshape, batch_shape)
+            model_flops = 2.0 * cfg.active_param_count() * (
+                shape.seq_len * shape.global_batch
+            )
+        else:  # decode
+            step = make_serve_decode_step(cfg)
+            pshape = jax.eval_shape(
+                lambda: __import__("repro.models.model", fromlist=["build_model"])
+                .build_model(cfg).init_params(jax.random.PRNGKey(0))
+            )
+            state_shape = decode_state_shape(
+                cfg, shape.global_batch, shape.seq_len
+            )
+            tok_shape = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            p_sh = SH.param_shardings(mesh, cfg, pshape)
+            st_sh = SH.decode_state_shardings(mesh, cfg, shape, state_shape)
+            tok_sh = SH.token_shardings(mesh, cfg, shape)
+            jfn = jax.jit(
+                step,
+                in_shardings=(p_sh, st_sh, tok_sh),
+                out_shardings=(tok_sh, st_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jfn.lower(pshape, state_shape, tok_shape)
+            model_flops = RA.model_flops_decode(cfg, shape)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_stats(compiled)
+    cost = _cost(compiled)
+    hlo = compiled.as_text()
+    roof = RA.analyze(
+        arch, shape_name, mesh_name, chips, cost, hlo, model_flops,
+        bytes_per_device=(
+            mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+            + mem.get("output_bytes", 0) - mem.get("alias_bytes", 0)
+        ),
+    )
+    rec = {
+        "status": "ok",
+        "coll_by_kind": getattr(RA.analyze, "last_by_kind", {}),
+        "memory": mem,
+        "cost_flops": cost.get("flops"),
+        "cost_bytes": cost.get("bytes accessed"),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        **roof.to_dict(),
+    }
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file (perf iterations)")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        if args.tag:
+            tag += f"__{args.tag}"
+        path = outdir / f"{tag}.json"
+        if args.resume and path.exists():
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        t0 = time.time()
+        try:
+            rec = dryrun_cell(arch, shape, mp,
+                              microbatches=args.microbatches)
+        except Exception as e:
+            rec = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            failures += 1
+        rec["wall_s"] = round(time.time() - t0, 1)
+        path.write_text(json.dumps(rec, indent=2, default=str))
+        print(f"  -> {rec['status']} ({rec['wall_s']}s)", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

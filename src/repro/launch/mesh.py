@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 1):
+    """Elastic mesh for whatever devices survive (fault-tolerant restart)."""
+    assert n_devices % model_parallel == 0, (n_devices, model_parallel)
+    return jax.make_mesh(
+        (n_devices // model_parallel, model_parallel), ("data", "model")
+    )
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes_of(mesh) -> Tuple[str, ...]:
+    return ("model",) if "model" in mesh.axis_names else ()

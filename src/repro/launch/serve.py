@@ -1,0 +1,88 @@
+"""Serving driver — batched prefill + decode with KV/SSM caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b-smoke \
+        --batch 4 --prompt-len 16 --gen 32
+
+Greedy decode over the synthetic token distribution; reports tokens/s and
+verifies the cache path incrementally matches teacher-forced prefill
+(--check) — the serving analogue of the paper's layer-by-layer regression
+testing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.models import lm as LM
+from repro.models.model import build_model
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--check", action="store_true",
+                    help="verify decode path against teacher-forced forward")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    max_len = args.prompt_len + args.gen + 1
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    state = model.init_decode_state(args.batch, max_len)
+    if cfg.family == "vlm":
+        vision = jnp.zeros((args.batch, cfg.n_vision_tokens, cfg.d_model),
+                           cfg.dtype_())
+        state = LM.prefill_vlm_cross_cache(cfg, params, vision, state)
+
+    # prompt consumption through the decode path (incremental prefill)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, state = decode(params, state, prompt[:, i])
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    generated = [tok]
+    for _ in range(args.gen - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    total_tokens = args.batch * (args.prompt_len + args.gen)
+    print(f"decoded {args.gen} tokens x batch {args.batch} "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. prefill)")
+    gen = jnp.stack(generated, axis=1)
+    print("sample:", gen[0, :16].tolist())
+
+    if args.check and cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        # teacher-forced: logits at last prompt position must match decode's
+        h = LM.forward(cfg, params, prompt, remat=False)
+        want = LM.lm_logits(cfg, params, h[:, -1:, :])[:, 0]
+        state2 = model.init_decode_state(args.batch, max_len)
+        got = None
+        for i in range(args.prompt_len):
+            got, state2 = model.decode_step(params, state2, prompt[:, i])
+        import numpy as np
+
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+        print("decode path matches teacher-forced forward ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

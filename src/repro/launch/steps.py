@@ -1,0 +1,150 @@
+"""Step builders: jit-able train_step / serve_step closures per cell.
+
+``make_train_step`` is the GSPMD path (pjit + sharding constraints).
+``make_manual_dp_train_step`` is the shard_map path with explicit,
+optionally *compressed* gradient psum — the distributed-optimization
+feature the GSPMD path can't express (wire-format compression).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import Model, build_model
+from repro.optim import compress as GC
+from repro.optim.optimizers import OptConfig, apply_updates, init_opt_state
+
+
+def make_train_step(
+    cfg: ArchConfig, opt: OptConfig, *, microbatches: int = 1
+) -> Callable:
+    """GSPMD train step; microbatches > 1 = gradient accumulation (scan over
+    batch slices) — divides activation residency by the microbatch count."""
+    model = build_model(cfg)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params, opt_state = state["params"], state["opt"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_i, g_i = jax.value_and_grad(model.train_loss)(
+                    params, mbatch
+                )
+                l, g = carry
+                return (l + loss_i, jax.tree.map(jnp.add, g, g_i)), None
+
+            zero = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ),
+            )
+            (loss, grads), _ = jax.lax.scan(acc_step, zero, mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params, new_opt = apply_updates(opt, grads, opt_state, cfg.dtype_())
+        return {"params": new_params, "opt": new_opt}, loss
+
+    return train_step
+
+
+def make_serve_decode_step(cfg: ArchConfig) -> Callable:
+    model = build_model(cfg)
+
+    def serve_step(params, state, token):
+        logits, state = model.decode_step(params, state, token)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    return serve_step
+
+
+def make_serve_prefill(cfg: ArchConfig) -> Callable:
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def init_train_state(cfg: ArchConfig, opt: OptConfig, rng) -> Dict[str, Any]:
+    model = build_model(cfg)
+    params = model.init_params(rng)
+    return {"params": params, "opt": init_opt_state(opt, params)}
+
+
+def train_state_shape(cfg: ArchConfig, opt: OptConfig):
+    """ShapeDtypeStruct pytree of the train state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    )
+
+
+def decode_state_shape(cfg: ArchConfig, batch: int, max_len: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_decode_state(batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Manual-DP (shard_map) path with compressed gradient collectives
+# ---------------------------------------------------------------------------
+
+def make_manual_dp_train_step(
+    cfg: ArchConfig, opt: OptConfig, mesh, codec: str = "bf16"
+) -> Callable:
+    """Pure data-parallel train step over the flattened device axis.
+
+    Params replicated; per-shard grads psum'ed with wire compression +
+    error feedback (state carried in opt_state['ef']).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    model = build_model(cfg)
+    axis = mesh.axis_names
+    flat_axes = tuple(axis)
+
+    def step(state, batch):
+        def worker(state, batch):
+            params, opt_state = state["params"], state["opt"]
+            loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            red, new_ef = GC.psum_compressed(
+                grads, opt_state["ef"], flat_axes[0], codec
+            )
+            for a in flat_axes[1:]:
+                red = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, a), red
+                )
+            new_params, new_opt = apply_updates(
+                opt, red, {k: v for k, v in opt_state.items() if k != "ef"},
+                cfg.dtype_(),
+            )
+            new_opt["ef"] = new_ef
+            loss = jax.lax.pmean(loss, flat_axes)
+            return {"params": new_params, "opt": new_opt}, loss
+
+        rep = jax.tree.map(lambda _: P(), state)
+        bspec = jax.tree.map(lambda _: P(flat_axes[0]), batch)
+        return shard_map(
+            worker, mesh=mesh,
+            in_specs=(rep, bspec),
+            out_specs=(rep, P()),
+            check_rep=False,
+        )(state, batch)
+
+    return step

@@ -1,0 +1,382 @@
+"""Reusable model components for the architecture zoo.
+
+Everything is built on the portable ops (``repro.kernels.ops``) so each
+architecture is single-source across backends — the paper's property,
+generalized from Caffe blocks to transformer blocks.
+
+Sharding: activations/params pass through ``shard`` hints (no-ops without a
+mesh) so the same code lowers on 1 CPU device and on the 512-chip mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+
+
+Params = Dict[str, jax.Array]
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None):
+    """Projection over the last axis via the portable matmul."""
+    lead = x.shape[:-1]
+    y = ops.matmul(x.reshape(-1, x.shape[-1]), w)
+    if b is not None:
+        y = ops.bias_add_rows(y, b)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def norm(cfg: ArchConfig, w: jax.Array, x: jax.Array) -> jax.Array:
+    return ops.rmsnorm(x, w)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchConfig, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., head_dim//2), f32."""
+    hd = cfg.head_dim_
+    inv = 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, D/2) for decode."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]  # broadcast over H
+        if cos.ndim < x.ndim:
+            cos, sin = jnp.expand_dims(cos, 0), jnp.expand_dims(sin, 0)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (self / cross, train / decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, rng, *, cross: bool = False) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d)
+    dt = cfg.dtype_()
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * s).astype(dt),
+        "ln": jnp.ones((d,), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((hkv * hd,), dt)
+        p["bv"] = jnp.zeros((hkv * hd,), dt)
+    if cross:
+        p["gate"] = jnp.zeros((), dt)  # llama-vision tanh gate
+    return p
+
+
+def attention_block(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,                       # (B, S, d)
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    kv_src: Optional[jax.Array] = None,  # cross-attention memory (B, Sk, d)
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    xn = norm(cfg, p["ln"], x)
+    # SP gather-once: norm runs on the seq-sharded residual; the normed
+    # activation is gathered ONCE here and reused by all three projections
+    # (instead of GSPMD re-gathering per dot — perf iteration L1, §Perf).
+    xn = shard(xn, ("data", None, None))
+    src = norm(cfg, p["ln"], kv_src) if kv_src is not None else xn
+    q = dense(xn, p["wq"], p.get("bq")).reshape(b, s, h, hd)
+    k = dense(src, p["wk"], p.get("bk")).reshape(b, src.shape[1], hkv, hd)
+    v = dense(src, p["wv"], p.get("bv")).reshape(b, src.shape[1], hkv, hd)
+    if kv_src is None:  # self-attention: rotary positions
+        if positions is None:
+            positions = jnp.arange(s)
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # TP over q heads when divisible; KV heads replicate across TP when the
+    # GQA group count is below the TP degree (Megatron GQA convention).
+    from repro.distributed.sharding import axis_size
+    tp = axis_size("model")
+    q = shard(q, ("data", None, "model" if h % max(tp, 1) == 0 else "auto", None))
+    kv_axis = "model" if hkv % max(tp, 1) == 0 else None
+    k = shard(k, ("data", None, kv_axis, None))
+    v = shard(v, ("data", None, kv_axis, None))
+    o = ops.attention(
+        q, k, v, causal=causal and kv_src is None, window=window
+    )
+    o = dense(o.reshape(b, s, h * hd), p["wo"])
+    if "gate" in p:
+        o = jnp.tanh(p["gate"]) * o
+    return x + o
+
+
+def attention_decode_block(
+    cfg: ArchConfig,
+    p: Params,
+    x: jax.Array,                       # (B, d) one token
+    cache_k: jax.Array,                 # (B, Smax, Hkv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,                     # scalar int32
+    *,
+    window: Optional[int] = None,
+    cross: bool = False,
+    cross_len: Optional[jax.Array] = None,
+):
+    b, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    xn = norm(cfg, p["ln"], x)
+    q = dense(xn, p["wq"], p.get("bq")).reshape(b, h, hd)
+    if not cross:
+        k_new = dense(xn, p["wk"], p.get("bk")).reshape(b, hkv, hd)
+        v_new = dense(xn, p["wv"], p.get("bv")).reshape(b, hkv, hd)
+        cos, sin = rope_freqs(cfg, pos[None])           # (1, hd/2)
+        q = apply_rope(q.reshape(b, 1, h, hd), cos, sin).reshape(b, h, hd)
+        k_new = apply_rope(
+            k_new.reshape(b, 1, hkv, hd), cos, sin
+        ).reshape(b, hkv, hd)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new[:, None], pos, axis=1
+        )
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new[:, None], pos, axis=1
+        )
+        cache_len = pos + 1
+    else:
+        cache_len = cross_len if cross_len is not None else cache_k.shape[1]
+    o = ops.attention_decode(
+        q, cache_k, cache_v, jnp.asarray(cache_len, jnp.int32), window=window
+    )
+    o = dense(o.reshape(b, h * hd), p["wo"])
+    if "gate" in p:
+        o = jnp.tanh(p["gate"]) * o
+    return x + o, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, rng, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = cfg.dtype_()
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(ff)
+    return {
+        "wg": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(dt),
+        "wi": (jax.random.normal(ks[1], (d, ff)) * s_in).astype(dt),
+        "wo": (jax.random.normal(ks[2], (ff, d)) * s_out).astype(dt),
+        "ln": jnp.ones((d,), dt),
+    }
+
+
+def mlp_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    xn = norm(cfg, p["ln"], x)
+    xn = shard(xn, ("data", None, None))   # SP gather-once (see attention)
+    h = jax.nn.silu(dense(xn, p["wg"])) * dense(xn, p["wi"])
+    h = shard(h, ("data", None, "model"))
+    return x + dense(h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-based dispatch; EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ArchConfig, rng) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    dt = cfg.dtype_()
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(ff)
+    return {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (e, d, ff)) * s_in).astype(dt),
+        "wi": (jax.random.normal(ks[2], (e, d, ff)) * s_in).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, ff, d)) * s_out).astype(dt),
+        "ln": jnp.ones((d,), dt),
+    }
+
+
+def moe_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Token-drop capacity MoE, GShard *grouped* formulation.
+
+    Tokens are split into G groups (= data shards) with group-LOCAL
+    capacity, so dispatch/scatter is local to each data shard; expert
+    tensors carry the E axis for EP over the model axis (or ff-TP when E
+    doesn't divide it).  This replaced a global-capacity scatter that
+    GSPMD lowered to replicated 5.4 GB buffers per layer — perf iteration
+    M1, §Perf (~an order of magnitude of collective traffic).
+    """
+    from repro.distributed.sharding import axis_size
+
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = axis_size("data")
+    if t % g != 0:
+        g = 1
+    tl = t // g
+    xn = norm(cfg, p["ln"], x).reshape(g, tl, d)
+    xn = shard(xn, ("data", None, None))
+    logits = jnp.einsum(
+        "gtd,de->gte", xn.astype(jnp.float32), p["router"],
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)               # (g, tl, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    cap = max(1, int(np.ceil(tl * k / e * cfg.capacity_factor)))
+
+    def dispatch_group(xg, idxg):
+        flat_e = idxg.reshape(tl * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        ranks = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+        keep = rank < cap
+        rank_c = jnp.minimum(rank, cap - 1)
+        tok = jnp.arange(tl * k) // k
+        buf = jnp.zeros((e, cap, d), xg.dtype)
+        buf = buf.at[flat_e, rank_c].add(
+            xg[tok] * keep[:, None].astype(xg.dtype)
+        )
+        return buf, flat_e, rank_c, keep
+
+    buf, flat_e, rank_c, keep = jax.vmap(dispatch_group)(xn, idx)
+    # dispatch mirror of M4: build the buffer d-sharded (scatter + its
+    # backward gather stay local), THEN all-to-all into the EP layout
+    # (perf iteration M5, §Perf)
+    buf = shard(buf, ("data", None, None, "model"))
+    buf = shard(buf, ("data", "model", None, None))    # G x E (EP)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", buf, p["wg"],
+                   preferred_element_type=jnp.float32).astype(xn.dtype)
+    ) * jnp.einsum("gecd,edf->gecf", buf, p["wi"],
+                   preferred_element_type=jnp.float32).astype(xn.dtype)
+    h = shard(h, ("data", "model", None, None))
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["wo"],
+                       preferred_element_type=jnp.float32).astype(xn.dtype)
+    # combine: reshard E-sharded -> d-sharded (all-to-all, ~payload/TP per
+    # device) so the (e,c) gather below is LOCAL.  Gathering across the
+    # model-sharded E dim made GSPMD emit masked-gathers + full (tl*k, d)
+    # f32 all-reduces — 2.4 TB/device/step (perf iteration M4, §Perf).
+    out_e = shard(out_e, ("data", None, None, "model"))
+    pulled = jax.vmap(
+        lambda oe, fe, rc, kp: oe[fe, rc] * kp[:, None].astype(oe.dtype)
+    )(out_e, flat_e, rank_c, keep)                     # (g, tl*k, d)
+    combined = (
+        pulled.reshape(g, tl, k, d) * gates[..., None].astype(xn.dtype)
+    ).sum(axis=2)
+    return x + combined.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (conv1d + SSD), train and decode paths
+# ---------------------------------------------------------------------------
+
+def init_mamba(cfg: ArchConfig, rng) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(rng, 4)
+    dt = cfg.dtype_()
+    s = 1.0 / np.sqrt(d)
+    return {
+        # in_proj emits [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di + 2 * n + h)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(dt),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (di, d)) / np.sqrt(di)).astype(dt),
+        "ln": jnp.ones((d,), dt),
+        "ln_inner": jnp.ones((di,), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B,S,di), w: (K,di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(k)
+    )
+    return out
+
+
+def _split_mamba_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    b_ = zxbcdt[..., 2 * di : 2 * di + n]
+    c_ = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xs, b_, c_, dt
+
+
+def mamba_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xn = norm(cfg, p["ln"], x)
+    z, xs, b_, c_, dt = _split_mamba_proj(cfg, dense(xn, p["w_in"]))
+    xs = _causal_conv(xs, p["conv_w"])
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y = ops.ssd_scan(
+        xs.reshape(b, s, h, hd),
+        dt,
+        a,
+        b_.reshape(b, s, 1, n),
+        c_.reshape(b, s, 1, n),
+        chunk=cfg.ssm_chunk,
+    )
+    y = y + xs.reshape(b, s, h, hd) * p["d_skip"][None, None, :, None]
+    y = (y.reshape(b, s, di) * jax.nn.silu(z)).astype(x.dtype)
+    y = ops.rmsnorm(y, p["ln_inner"])
+    return x + dense(y, p["w_out"])
+
+
+def mamba_decode_block(
+    cfg: ArchConfig, p: Params, x: jax.Array,
+    ssm_state: jax.Array,      # (B, H, P, N)
+    conv_state: jax.Array,     # (B, K-1, di)
+):
+    b, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xn = norm(cfg, p["ln"], x)
+    z, xs, b_, c_, dt = _split_mamba_proj(cfg, dense(xn, p["w_in"]))
+    # rolling causal conv state
+    k = cfg.ssm_conv
+    window = jnp.concatenate([conv_state, xs[:, None]], axis=1)  # (B, K, di)
+    xs = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
+    conv_state = window[:, 1:]
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = ops.ssd_decode_step(
+        xs.reshape(b, h, hd), dt, a, b_.reshape(b, 1, n), c_.reshape(b, 1, n),
+        ssm_state,
+    )
+    y = y + xs.reshape(b, h, hd) * p["d_skip"][None, :, None]
+    y = (y.reshape(b, di) * jax.nn.silu(z)).astype(x.dtype)
+    y = ops.rmsnorm(y, p["ln_inner"])
+    return x + dense(y, p["w_out"]), ssm_state, conv_state

@@ -1,0 +1,163 @@
+"""Encoder-decoder family (seamless-m4t-medium backbone).
+
+The audio frontend is a stub per the assignment: ``frames`` are precomputed
+frame embeddings (B, S_enc, d).  Encoder: non-causal self-attention stack.
+Decoder: causal self-attention + cross-attention to encoder memory + MLP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models import components as C
+from repro.models.lm import _stacked, _xent
+
+
+def init_params(cfg: ArchConfig, rng) -> Dict[str, Any]:
+    dt = cfg.dtype_()
+    r_emb, r_enc, r_dec, r_head = jax.random.split(rng, 4)
+    def enc_layer(r):
+        r1, r2 = jax.random.split(r)
+        return {"attn": C.init_attention(cfg, r1), "mlp": C.init_mlp(cfg, r2)}
+    def dec_layer(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        return {
+            "attn": C.init_attention(cfg, r1),
+            "cross": C.init_attention(cfg, r2),
+            "mlp": C.init_mlp(cfg, r3),
+        }
+    return {
+        "embed": (
+            jax.random.normal(r_emb, (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dt),
+        "enc_layers": _stacked(enc_layer, r_enc, cfg.encoder_layers),
+        "dec_layers": _stacked(dec_layer, r_dec, cfg.n_layers),
+        "ln_enc": jnp.ones((cfg.d_model,), dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "lm_head": (
+            jax.random.normal(r_head, (cfg.d_model, cfg.vocab_size))
+            / np.sqrt(cfg.d_model)
+        ).astype(dt),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames: jax.Array, *, remat=True):
+    x = shard(frames.astype(cfg.dtype_()), ("data", None, None))
+    pos = jnp.arange(x.shape[1])
+
+    def layer(x, p):
+        x = C.attention_block(cfg, p["attn"], x, positions=pos, causal=False)
+        return shard(C.mlp_block(cfg, p["mlp"], x), ("data", "sp", None)), None
+
+    if remat:
+        layer = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return C.norm(cfg, params["ln_enc"], x)
+
+
+def decode_train(cfg: ArchConfig, params, tokens: jax.Array, memory: jax.Array,
+                 *, remat=True):
+    x = params["embed"][tokens].astype(cfg.dtype_())
+    x = shard(x, ("data", None, None))
+    pos = jnp.arange(x.shape[1])
+
+    def layer(x, p):
+        x = C.attention_block(cfg, p["attn"], x, positions=pos, causal=True)
+        x = C.attention_block(cfg, p["cross"], x, kv_src=memory, causal=False)
+        return shard(C.mlp_block(cfg, p["mlp"], x), ("data", "sp", None)), None
+
+    if remat:
+        layer = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(layer, x, params["dec_layers"])
+    return C.norm(cfg, params["ln_f"], x)
+
+
+def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
+    frames, tokens = batch["frames"], batch["tokens"]
+    memory = encode(cfg, params, frames)
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    h = decode_train(cfg, params, inputs, memory)
+    logits = C.dense(h, params["lm_head"])
+    logits = shard(logits, ("data", None, "model"))
+    return _xent(logits, targets)
+
+
+# -- serving ---------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int):
+    dt = cfg.dtype_()
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    L = cfg.n_layers
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, hkv, hd), dt),
+        "v": jnp.zeros((L, batch, max_len, hkv, hd), dt),
+        # cross K/V precomputed from encoder memory at prefill
+        "xk": jnp.zeros((L, batch, enc_len, hkv, hd), dt),
+        "xv": jnp.zeros((L, batch, enc_len, hkv, hd), dt),
+    }
+
+
+def prefill_cross_cache(cfg: ArchConfig, params, memory, state):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def per_layer(p):
+        pa = p["cross"]
+        src = C.norm(cfg, pa["ln"], memory)
+        k = C.dense(src, pa["wk"]).reshape(*memory.shape[:2], hkv, hd)
+        v = C.dense(src, pa["wv"]).reshape(*memory.shape[:2], hkv, hd)
+        return k, v
+
+    xk, xv = jax.vmap(per_layer)(params["dec_layers"])
+    return {**state, "xk": xk, "xv": xv}
+
+
+def decode_step(cfg: ArchConfig, params, state, token: jax.Array):
+    pos = state["pos"]
+    x = params["embed"][token].astype(cfg.dtype_())
+    enc_len = state["xk"].shape[2]
+    hd = cfg.head_dim_
+
+    def body(x, inp):
+        p, ck, cv, xk, xv = inp
+        b = x.shape[0]
+        hkv = cfg.n_kv_heads
+        # causal self-attention with cache
+        pa = p["attn"]
+        xn = C.norm(cfg, pa["ln"], x)
+        q = C.dense(xn, pa["wq"]).reshape(b, cfg.n_heads, hd)
+        kn = C.dense(xn, pa["wk"]).reshape(b, hkv, hd)
+        vn = C.dense(xn, pa["wv"]).reshape(b, hkv, hd)
+        cos, sin = C.rope_freqs(cfg, pos[None])
+        q = C.apply_rope(q.reshape(b, 1, -1, hd), cos, sin).reshape(b, -1, hd)
+        kn = C.apply_rope(kn.reshape(b, 1, hkv, hd), cos, sin).reshape(b, hkv, hd)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kn[:, None], pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vn[:, None], pos, axis=1)
+        o = ops.attention_decode(q, ck, cv, pos + 1)
+        x = x + C.dense(o.reshape(b, -1), pa["wo"])
+        # cross-attention to encoder memory
+        pc = p["cross"]
+        xn = C.norm(cfg, pc["ln"], x)
+        q = C.dense(xn, pc["wq"]).reshape(b, cfg.n_heads, hd)
+        o = ops.attention_decode(q, xk, xv, jnp.asarray(enc_len, jnp.int32))
+        x = x + C.dense(o.reshape(b, -1), pc["wo"])
+        # mlp
+        pm = p["mlp"]
+        xn = C.norm(cfg, pm["ln"], x)
+        h = jax.nn.silu(C.dense(xn, pm["wg"])) * C.dense(xn, pm["wi"])
+        x = x + C.dense(h, pm["wo"])
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], state["k"], state["v"], state["xk"], state["xv"]),
+    )
+    x = C.norm(cfg, params["ln_f"], x)
+    logits = C.dense(x, params["lm_head"])
+    return logits, {**state, "k": ks, "v": vs, "pos": pos + 1}

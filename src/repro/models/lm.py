@@ -1,0 +1,426 @@
+"""Decoder-only LM family: dense / MoE / SSM (Mamba-2) / hybrid (Zamba2) /
+VLM (Llama-3.2-Vision cross-attention).
+
+Layer trunks are homogeneous and scanned (``lax.scan`` over stacked params)
+so a 100-layer model compiles one layer body — essential for the 512-device
+dry-run.  Heterogeneous patterns (Zamba2's shared attention every N blocks,
+Vision's cross-attention every N layers) scan over *groups*.
+
+Public API (all pure functions of (cfg, params, ...)):
+    init_params, train_loss, forward, lm_logits,
+    init_decode_state, decode_step, prefill
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import components as C
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stacked(init_fn, rng, n: int):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def _init_layer_dense(cfg):
+    def f(rng):
+        r1, r2 = jax.random.split(rng)
+        return {"attn": C.init_attention(cfg, r1), "mlp": C.init_mlp(cfg, r2)}
+    return f
+
+
+def _init_layer_moe(cfg):
+    def f(rng):
+        r1, r2 = jax.random.split(rng)
+        return {"attn": C.init_attention(cfg, r1), "moe": C.init_moe(cfg, r2)}
+    return f
+
+
+def _init_layer_mamba(cfg):
+    def f(rng):
+        return {"mamba": C.init_mamba(cfg, rng)}
+    return f
+
+
+def init_params(cfg: ArchConfig, rng) -> Dict[str, Any]:
+    dt = cfg.dtype_()
+    r_emb, r_layers, r_head, r_extra = jax.random.split(rng, 4)
+    params: Dict[str, Any] = {
+        "embed": (
+            jax.random.normal(r_emb, (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(r_head, (cfg.d_model, cfg.vocab_size))
+            / np.sqrt(cfg.d_model)
+        ).astype(dt)
+    fam = cfg.family
+    if fam in ("dense",):
+        params["layers"] = _stacked(_init_layer_dense(cfg), r_layers, cfg.n_layers)
+    elif fam == "moe":
+        params["layers"] = _stacked(_init_layer_moe(cfg), r_layers, cfg.n_layers)
+    elif fam == "ssm":
+        params["layers"] = _stacked(_init_layer_mamba(cfg), r_layers, cfg.n_layers)
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        def group(rng):
+            return _stacked(_init_layer_mamba(cfg), rng, cfg.attn_every)
+        params["groups"] = _stacked(group, r_layers, g)
+        ra, rm = jax.random.split(r_extra)
+        params["shared_attn"] = C.init_attention(cfg, ra)
+        params["shared_mlp"] = C.init_mlp(cfg, rm)
+    elif fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        def group(rng):
+            return _stacked(_init_layer_dense(cfg), rng, per)
+        params["groups"] = _stacked(group, r_layers, g)
+        params["cross"] = _stacked(
+            lambda r: {
+                "attn": C.init_attention(cfg, r, cross=True),
+                "mlp": C.init_mlp(cfg, jax.random.fold_in(r, 1)),
+            },
+            r_extra, g,
+        )
+    else:
+        raise ValueError(f"init_params: unsupported family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_apply(cfg: ArchConfig, p, x, positions):
+    if "mamba" in p:
+        return C.mamba_block(cfg, p["mamba"], x)
+    x = C.attention_block(
+        cfg, p["attn"], x, positions=positions, causal=True, window=cfg.window
+    )
+    if "moe" in p:
+        return C.moe_block(cfg, p["moe"], x)
+    return C.mlp_block(cfg, p["mlp"], x)
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,                  # (B, S)
+    *,
+    vision: Optional[jax.Array] = None,  # (B, P, d) VLM patch embeddings
+    remat: bool = True,
+) -> jax.Array:
+    x = params["embed"][tokens].astype(cfg.dtype_())
+    x = shard(x, ("data", "sp", None))
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+
+    def layer(x, p):
+        # residual stream is sequence-parallel between blocks (SP)
+        return shard(_layer_apply(cfg, p, x, positions), ("data", "sp", None)), None
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    if cfg.family in ("dense", "moe", "ssm"):
+        x, _ = jax.lax.scan(layer, x, params["layers"])
+    elif cfg.family == "hybrid":
+        def group(x, gp):
+            x, _ = jax.lax.scan(layer, x, gp["inner"])
+            x = C.attention_block(
+                cfg, gp["shared_attn"], x, positions=positions, causal=True
+            )
+            x = C.mlp_block(cfg, gp["shared_mlp"], x)
+            return x, None
+        if remat:
+            group = jax.checkpoint(group)
+        # shared params broadcast into every group step
+        g = cfg.n_layers // cfg.attn_every
+        gp = {
+            "inner": params["groups"],
+            "shared_attn": jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (g, *l.shape)), params["shared_attn"]
+            ),
+            "shared_mlp": jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (g, *l.shape)), params["shared_mlp"]
+            ),
+        }
+        x, _ = jax.lax.scan(group, x, gp)
+    elif cfg.family == "vlm":
+        assert vision is not None, "vlm needs vision embeddings"
+        def group(x, gp):
+            x, _ = jax.lax.scan(layer, x, gp["self"])
+            x = C.attention_block(
+                cfg, gp["cross"]["attn"], x, kv_src=vision, causal=False
+            )
+            x = C.mlp_block(cfg, gp["cross"]["mlp"], x)
+            return x, None
+        if remat:
+            group = jax.checkpoint(group)
+        x, _ = jax.lax.scan(
+            group, x, {"self": params["groups"], "cross": params["cross"]}
+        )
+    else:
+        raise ValueError(cfg.family)
+    return C.norm(cfg, params["ln_f"], x)
+
+
+def lm_logits(cfg: ArchConfig, params, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return C.dense(h, w)
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Stable mean NLL in f32 over (..., V) logits."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return (lse - picked).mean()
+
+
+def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    inputs = shard(inputs, ("data", None))
+    h = forward(cfg, params, inputs, vision=batch.get("vision"))
+    logits = lm_logits(cfg, params, h)
+    logits = shard(logits, ("data", None, "model"))
+    return _xent(logits, targets)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def init_decode_state(
+    cfg: ArchConfig, batch: int, max_len: int
+) -> Dict[str, jax.Array]:
+    dt = cfg.dtype_()
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    # sliding-window archs only ever need `window` cache slots (ring buffer)
+    eff = min(max_len, cfg.window) if cfg.window else max_len
+    state: Dict[str, jax.Array] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "moe"):
+        state["k"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
+        state["v"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
+    elif cfg.family == "ssm":
+        state["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        )
+        state["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
+        )
+    elif cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        state["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        )
+        state["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
+        )
+        state["k"] = jnp.zeros((g, batch, eff, hkv, hd), dt)
+        state["v"] = jnp.zeros((g, batch, eff, hkv, hd), dt)
+    elif cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1
+        state["k"] = jnp.zeros((g, per, batch, eff, hkv, hd), dt)
+        state["v"] = jnp.zeros((g, per, batch, eff, hkv, hd), dt)
+        # cross K/V filled by prefill from vision embeddings
+        state["xk"] = jnp.zeros((g, batch, cfg.n_vision_tokens, hkv, hd), dt)
+        state["xv"] = jnp.zeros((g, batch, cfg.n_vision_tokens, hkv, hd), dt)
+    else:
+        raise ValueError(cfg.family)
+    return state
+
+
+def _cache_index(cfg: ArchConfig, pos: jax.Array) -> jax.Array:
+    return pos % cfg.window if cfg.window else pos
+
+
+def _cache_update(cfg: ArchConfig, cache: jax.Array, new: jax.Array,
+                  idx: jax.Array) -> jax.Array:
+    """Write one token's K/V at ``idx`` into a (B, S, Hkv, hd) cache.
+
+    When the cache's sequence dim is sharded (context-parallel decode for
+    GQA head counts below the TP degree), a dynamic-update-slice forces
+    GSPMD to all-gather the cache; an elementwise masked write partitions
+    cleanly instead (perf iteration D2, §Perf).
+    """
+    from repro.distributed.sharding import active_mesh, axis_size
+
+    tp = max(axis_size("model"), 1)
+    seq_sharded = (
+        active_mesh() is not None
+        and cfg.n_kv_heads % tp != 0
+        and cache.shape[1] % tp == 0
+    )
+    if seq_sharded:
+        pos_iota = jax.lax.broadcasted_iota(
+            jnp.int32, (1, cache.shape[1], 1, 1), 1
+        )
+        return jnp.where(pos_iota == idx, new[:, None].astype(cache.dtype),
+                         cache)
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new[:, None], idx, axis=1
+    )
+
+
+def decode_step(
+    cfg: ArchConfig, params, state, token: jax.Array  # (B,) int32
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One token for every sequence in the batch; returns (logits, state)."""
+    pos = state["pos"]
+    x = params["embed"][token].astype(cfg.dtype_())   # (B, d)
+    idx = _cache_index(cfg, pos)
+    cache_len = jnp.minimum(pos + 1, cfg.window) if cfg.window else pos + 1
+
+    def attn_dec(p, x, ck, cv):
+        b, d = x.shape
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        xn = C.norm(cfg, p["ln"], x)
+        q = C.dense(xn, p["wq"], p.get("bq")).reshape(b, cfg.n_heads, hd)
+        k_new = C.dense(xn, p["wk"], p.get("bk")).reshape(b, hkv, hd)
+        v_new = C.dense(xn, p["wv"], p.get("bv")).reshape(b, hkv, hd)
+        cos, sin = C.rope_freqs(cfg, pos[None])
+        q = C.apply_rope(q.reshape(b, 1, -1, hd), cos, sin).reshape(b, -1, hd)
+        k_new = C.apply_rope(
+            k_new.reshape(b, 1, hkv, hd), cos, sin
+        ).reshape(b, hkv, hd)
+        ck = _cache_update(cfg, ck, k_new, idx)
+        cv = _cache_update(cfg, cv, v_new, idx)
+        o = ops.attention_decode(q, ck, cv, jnp.asarray(cache_len, jnp.int32))
+        return x + C.dense(o.reshape(b, -1), p["wo"]), ck, cv
+
+    def mlp_dec(p, x):
+        xn = C.norm(cfg, p["ln"], x)
+        h = jax.nn.silu(C.dense(xn, p["wg"])) * C.dense(xn, p["wi"])
+        return x + C.dense(h, p["wo"])
+
+    def moe_dec(p, x):
+        return C.moe_block(cfg, p, x[:, None, :])[:, 0, :]
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        def body(x, inp):
+            p, ck, cv = inp
+            x, ck, cv = attn_dec(p["attn"], x, ck, cv)
+            x = moe_dec(p["moe"], x) if "moe" in p else mlp_dec(p["mlp"], x)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
+        state = {**state, "k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(x, inp):
+            p, s_ssm, s_conv = inp
+            x, s_ssm, s_conv = C.mamba_decode_block(
+                cfg, p["mamba"], x, s_ssm, s_conv
+            )
+            return x, (s_ssm, s_conv)
+        x, (ssm, conv) = jax.lax.scan(
+            body, x, (params["layers"], state["ssm"], state["conv"])
+        )
+        state = {**state, "ssm": ssm, "conv": conv}
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        a = cfg.attn_every
+        ssm_g = state["ssm"].reshape(g, a, *state["ssm"].shape[1:])
+        conv_g = state["conv"].reshape(g, a, *state["conv"].shape[1:])
+
+        def group(x, inp):
+            gp, s_ssm, s_conv, ck, cv = inp
+
+            def inner(x, i2):
+                p, s1, s2 = i2
+                x, s1, s2 = C.mamba_decode_block(cfg, p["mamba"], x, s1, s2)
+                return x, (s1, s2)
+            x, (s_ssm, s_conv) = jax.lax.scan(inner, x, (gp, s_ssm, s_conv))
+            x, ck, cv = attn_dec(params["shared_attn"], x, ck, cv)
+            x = mlp_dec(params["shared_mlp"], x)
+            return x, (s_ssm, s_conv, ck, cv)
+
+        x, (ssm, conv, ks, vs) = jax.lax.scan(
+            group, x, (params["groups"], ssm_g, conv_g, state["k"], state["v"])
+        )
+        state = {
+            **state,
+            "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
+            "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
+            "k": ks, "v": vs,
+        }
+    elif fam == "vlm":
+        def group(x, inp):
+            gp, cp, ck, cv, xk, xv = inp
+
+            def inner(x, i2):
+                p, ck1, cv1 = i2
+                x, ck1, cv1 = attn_dec(p["attn"], x, ck1, cv1)
+                x = mlp_dec(p["mlp"], x)
+                return x, (ck1, cv1)
+            x, (ck, cv) = jax.lax.scan(inner, x, (gp, ck, cv))
+            # cross-attention to static vision K/V
+            b = x.shape[0]
+            hd = cfg.head_dim_
+            pa = cp["attn"]
+            xn = C.norm(cfg, pa["ln"], x)
+            q = C.dense(xn, pa["wq"]).reshape(b, cfg.n_heads, hd)
+            o = ops.attention_decode(
+                q, xk, xv, jnp.asarray(cfg.n_vision_tokens, jnp.int32)
+            )
+            x = x + jnp.tanh(pa["gate"]) * C.dense(o.reshape(b, -1), pa["wo"])
+            x = mlp_dec(cp["mlp"], x)
+            return x, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            group, x,
+            (params["groups"], params["cross"], state["k"], state["v"],
+             state["xk"], state["xv"]),
+        )
+        state = {**state, "k": ks, "v": vs}
+    else:
+        raise ValueError(fam)
+
+    x = C.norm(cfg, params["ln_f"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = C.dense(x, w)
+    state = {**state, "pos": pos + 1}
+    return logits, state
+
+
+def prefill(
+    cfg: ArchConfig, params, tokens: jax.Array,
+    *, vision: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Prefill = forward pass producing last-position logits (caches omitted
+    in the benchmarked path; decode cells measure steady-state decode)."""
+    h = forward(cfg, params, tokens, vision=vision, remat=False)
+    return lm_logits(cfg, params, h[:, -1:, :])[:, 0]
+
+
+def prefill_vlm_cross_cache(cfg: ArchConfig, params, vision, state):
+    """Fill the static cross K/V from vision embeddings (VLM serving)."""
+    g = cfg.n_layers // cfg.cross_attn_every
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def per_group(cp):
+        pa = cp["attn"]
+        src = C.norm(cfg, pa["ln"], vision)
+        k = C.dense(src, pa["wk"]).reshape(*vision.shape[:2], hkv, hd)
+        v = C.dense(src, pa["wv"]).reshape(*vision.shape[:2], hkv, hd)
+        return k, v
+
+    xk, xv = jax.vmap(per_group)(params["cross"])
+    return {**state, "xk": xk, "xv": xv}

@@ -1,0 +1,69 @@
+"""Family dispatcher — one uniform Model facade over the zoo.
+
+``build_model(cfg)`` returns a ``Model`` whose methods close over the
+config; the launcher/dry-run/smoke tests talk only to this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable[..., Any]
+    train_loss: Callable[..., jax.Array]
+    prefill: Callable[..., jax.Array]
+    init_decode_state: Callable[..., Dict[str, jax.Array]]
+    decode_step: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        def init_decode_state(batch: int, max_len: int):
+            return encdec.init_decode_state(
+                cfg, batch, max_len, enc_len=max(max_len // 4, 8)
+            )
+
+        def prefill_fn(params, batch):
+            memory = encdec.encode(cfg, params, batch["frames"], remat=False)
+            h = encdec.decode_train(cfg, params, batch["tokens"], memory,
+                                    remat=False)
+            from repro.models import components as C
+            return C.dense(h[:, -1:, :], params["lm_head"])[:, 0]
+
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: encdec.init_params(cfg, rng),
+            train_loss=lambda params, batch: encdec.train_loss(cfg, params, batch),
+            prefill=prefill_fn,
+            init_decode_state=init_decode_state,
+            decode_step=lambda params, state, token: encdec.decode_step(
+                cfg, params, state, token
+            ),
+        )
+
+    def prefill_fn(params, batch):
+        return lm.prefill(
+            cfg, params, batch["tokens"], vision=batch.get("vision")
+        )
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: lm.init_params(cfg, rng),
+        train_loss=lambda params, batch: lm.train_loss(cfg, params, batch),
+        prefill=prefill_fn,
+        init_decode_state=lambda batch, max_len: lm.init_decode_state(
+            cfg, batch, max_len
+        ),
+        decode_step=lambda params, state, token: lm.decode_step(
+            cfg, params, state, token
+        ),
+    )

@@ -1,0 +1,103 @@
+"""Optimizers — pure pytree transforms (no external deps).
+
+Mixed-precision convention for LM training: compute/checkpoint params in
+bf16; the optimizer holds f32 master weights + moments and re-casts after
+each update (the usual large-scale recipe).  Caffe's solver uses the plain
+SGD+momentum in ``repro.caffe.solver``; this module serves the LM stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def init_opt_state(cfg: OptConfig, params) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+    }
+    if cfg.name == "adamw":
+        state["m"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        state["v"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    else:
+        state["mom"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return state
+
+
+def apply_updates(
+    cfg: OptConfig, grads, opt_state, param_dtype
+) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params (cast to param_dtype), new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    master = opt_state["master"]
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         opt_state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         opt_state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(w, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + cfg.eps)
+            return w - lr * (u + cfg.weight_decay * w)
+
+        new_master = jax.tree.map(upd, master, m, v)
+        new_state = {"step": step, "master": new_master, "m": m, "v": v}
+    else:
+        mom = jax.tree.map(
+            lambda v_, g, w: cfg.momentum * v_ + g + cfg.weight_decay * w,
+            opt_state["mom"], grads, master,
+        )
+        new_master = jax.tree.map(lambda w, v_: w - lr * v_, master, mom)
+        new_state = {"step": step, "master": new_master, "mom": mom}
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), new_master)
+    return new_params, new_state

@@ -1,0 +1,349 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program under-reports flops/bytes/collectives by ~n_layers.
+This module re-derives the three roofline inputs from the optimized HLO
+text, scaling every while body by its ``known_trip_count`` backend config
+(emitted by XLA for lax.scan loops) and descending into fusions/calls.
+
+Counting rules (per partitioned module = per device):
+  flops:
+    dot           2 * nelems(out) * K   (K = prod of lhs contracting dims)
+    elementwise   nelems(out)
+    reduce        nelems(in)
+    while         trip * (body + cond)
+    fusion/call   cost of called computation
+  bytes (HBM traffic approximation):
+    top-level ops: sum(operand bytes) + out bytes; fusion parameters whose
+    only internal consumer is a dynamic-slice count the slice, not the full
+    buffer (the scan-reads-one-layer pattern).
+  collective bytes:
+    max(in, out) per collective op (ring traffic ~ (n-1)/n * payload),
+    counted at -start for async pairs, scaled by enclosing trip counts.
+
+Validated against cost_analysis() on loop-free programs and against the
+analytic 6*N*D for the scanned LMs (see tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "abs", "negate", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "sqrt", "rsqrt", "cbrt", "tanh", "sine", "cosine",
+    "logistic", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "sign", "atan2", "remainder", "and", "or", "xor", "not", "clamp",
+    "select", "erf",
+}
+
+_ZERO_FLOP = {
+    "parameter", "constant", "copy", "copy-start", "copy-done", "bitcast",
+    "reshape", "transpose", "broadcast", "slice", "concatenate", "gather",
+    "dynamic-slice", "dynamic-update-slice", "tuple", "get-tuple-element",
+    "iota", "pad", "reverse", "convert", "compare", "reduce-precision",
+    "after-all", "add-dependency", "partition-id", "replica-id", "domain",
+    "rng", "rng-bit-generator", "rng-get-and-update-state", "infeed",
+    "outfeed", "optimization-barrier", "send", "send-done", "recv",
+    "recv-done", "is-finite",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_SHAPE_TOKEN = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]"
+)
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line: str) -> Optional[Tuple[str, str, str]]:
+    """'%name = TYPE opcode(...)' -> (name, type_str, opcode).
+
+    TYPE may be a tuple containing comments like /*index=5*/ and layout
+    annots like {2,1,0:T(8,128)(2,1)} — regexes break on these, so scan
+    with balanced parens.
+    """
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":  # tuple type
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i : j + 1]
+        i = j + 1
+    else:  # array type token (may include layout braces)
+        j = i
+        while j < n and line[j] not in " ":
+            j += 1
+        type_str = line[i:j]
+        i = j
+    while i < n and line[i] == " ":
+        i += 1
+    j = i
+    while j < n and (line[j].isalnum() or line[j] in "-_"):
+        j += 1
+    if j >= n or line[j] != "(":
+        return None
+    opcode = line[i:j]
+    return name, type_str, opcode
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all array shapes in a type string."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_TOKEN.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+    @property
+    def out_elems(self) -> int:
+        return _shape_elems_bytes(self.type_str)[0]
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.type_str)[1]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_count: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        kinds = dict(self.coll_by_kind)
+        for k, v in o.coll_by_kind.items():
+            kinds[k] = kinds.get(k, 0.0) + v
+        return Cost(
+            self.flops + o.flops, self.bytes + o.bytes,
+            self.coll_bytes + o.coll_bytes, self.coll_count + o.coll_count,
+            kinds,
+        )
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k, self.coll_bytes * k,
+            self.coll_count * k,
+            {kk: v * k for kk, v in self.coll_by_kind.items()},
+        )
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HEADER.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            parsed = _parse_op_line(line)
+            if parsed:
+                self.computations[cur].append(Op(*parsed, line))
+
+    # -- per-op helpers ----------------------------------------------------
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.type_str for op in self.computations[comp]}
+
+    def _operand_names(self, op: Op) -> List[str]:
+        # operands are inside the first (...) after the opcode
+        start = op.line.index(op.opcode + "(") + len(op.opcode) + 1
+        depth, i = 1, start
+        while i < len(op.line) and depth:
+            if op.line[i] == "(":
+                depth += 1
+            elif op.line[i] == ")":
+                depth -= 1
+            i += 1
+        return _OPERANDS.findall(op.line[start : i - 1])
+
+    def _dot_flops(self, op: Op, syms: Dict[str, str]) -> float:
+        ops_ = self._operand_names(op)
+        if not ops_:
+            return 0.0
+        lhs_type = syms.get(ops_[0], "")
+        m = _SHAPE_TOKEN.search(lhs_type)
+        if not m:
+            return 0.0
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        cm = _CONTRACT.search(op.line)
+        k = 1
+        if cm and cm.group(1):
+            for ix in cm.group(1).split(","):
+                k *= dims[int(ix)] if int(ix) < len(dims) else 1
+        return 2.0 * op.out_elems * k
+
+    def _fusion_bytes(self, op: Op, syms: Dict[str, str]) -> float:
+        """Operand+output bytes; a fused param consumed only by
+        dynamic-slice counts the slice output instead (scan-layer reads)."""
+        total = float(op.out_bytes)
+        called = _CALLS.search(op.line)
+        inner_ds: Dict[int, int] = {}
+        if called and called.group(1) in self.computations:
+            comp = self.computations[called.group(1)]
+            # param index -> param op name
+            params = {}
+            for o in comp:
+                if o.opcode == "parameter":
+                    pm = re.search(r"parameter\((\d+)\)", o.line)
+                    if pm:
+                        params[o.name] = int(pm.group(1))
+            consumers: Dict[str, List[Op]] = {}
+            for o in comp:
+                for nm in self._operand_names(o):
+                    consumers.setdefault(nm, []).append(o)
+            for pname, pix in params.items():
+                cons = consumers.get(pname, [])
+                if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                    inner_ds[pix] = sum(c.out_bytes for c in cons)
+        operand_names = self._operand_names(op)
+        for i, nm in enumerate(operand_names):
+            if i in inner_ds:
+                total += inner_ds[i]
+            else:
+                total += _shape_elems_bytes(syms.get(nm, ""))[1]
+        return total
+
+    # -- computation cost ----------------------------------------------------
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # break cycles defensively
+        total = Cost()
+        syms = self._symbols(comp)
+        for op in self.computations.get(comp, []):
+            oc = op.opcode
+            base = oc.replace("-start", "").replace("-done", "")
+            if oc.endswith("-done"):
+                continue
+            if oc == "while":
+                body = _BODY.search(op.line)
+                cond = _COND.search(op.line)
+                trip_m = _TRIP.search(op.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                inner = Cost()
+                if body and body.group(1) in self.computations:
+                    inner = inner + self.cost_of(body.group(1))
+                if cond and cond.group(1) in self.computations:
+                    inner = inner + self.cost_of(cond.group(1))
+                total = total + inner * trip
+                continue
+            if oc in ("fusion",):
+                called = _CALLS.search(op.line)
+                if called and called.group(1) in self.computations:
+                    inner = self.cost_of(called.group(1))
+                    total = total + Cost(flops=inner.flops,
+                                         coll_bytes=inner.coll_bytes,
+                                         coll_count=inner.coll_count,
+                                         coll_by_kind=inner.coll_by_kind)
+                total.bytes += self._fusion_bytes(op, syms)
+                continue
+            if oc in ("call", "custom-call", "conditional"):
+                called = _CALLS.search(op.line)
+                if called and called.group(1) in self.computations:
+                    total = total + self.cost_of(called.group(1))
+                total.bytes += float(op.out_bytes)
+                continue
+            if base in _COLLECTIVES:
+                in_bytes = sum(
+                    _shape_elems_bytes(syms.get(nm, ""))[1]
+                    for nm in self._operand_names(op)
+                )
+                nb = float(max(op.out_bytes, in_bytes))
+                total.coll_bytes += nb
+                total.coll_count += 1
+                total.coll_by_kind[base] = total.coll_by_kind.get(base, 0.0) + nb
+                total.bytes += float(op.out_bytes)
+                continue
+            # flops
+            if oc == "dot":
+                total.flops += self._dot_flops(op, syms)
+            elif oc in ("reduce", "reduce-window"):
+                in_elems = sum(
+                    _shape_elems_bytes(syms.get(nm, ""))[0]
+                    for nm in self._operand_names(op)[: 1]
+                )
+                total.flops += float(in_elems)
+            elif oc in _ELEMENTWISE:
+                total.flops += float(op.out_elems)
+            elif oc == "convolution":
+                # not used by the LM stack; coarse lower bound
+                total.flops += 2.0 * op.out_elems
+            # bytes: top-level op reads operands, writes output
+            if oc not in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast"):
+                total.bytes += float(op.out_bytes)
+                total.bytes += sum(
+                    _shape_elems_bytes(syms.get(nm, ""))[1]
+                    for nm in self._operand_names(op)
+                )
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def cost_from_hlo_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

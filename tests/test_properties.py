@@ -1,0 +1,150 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Backend, use_backend
+from repro.core.container import Blob, MajorOrder, as_layout
+from repro.kernels import ops, ref
+from repro.optim import compress as GC
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def conv_case(draw):
+    n = draw(st.integers(1, 3))
+    c = draw(st.integers(1, 4))
+    k = draw(st.integers(1, 4))
+    stride = draw(st.integers(1, 3))
+    pad = draw(st.integers(0, 2))
+    h = draw(st.integers(k, 12))
+    w = draw(st.integers(k, 12))
+    return n, c, h, w, k, stride, pad
+
+
+@given(conv_case(), st.integers(0, 2**31 - 1))
+def test_im2col_col2im_adjoint(case, seed):
+    """<im2col(x), y> == <x, col2im(y)> — exact adjointness, any geometry."""
+    n, c, h, w, k, stride, pad = case
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, c, h, w))
+    cols = ref.im2col(x, k, k, stride, pad)
+    y = jax.random.normal(ky, cols.shape)
+    lhs = jnp.vdot(cols, y)
+    rhs = jnp.vdot(x, ref.col2im(y, x.shape, k, k, stride, pad))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 8), st.integers(2, 32), st.integers(0, 2**31 - 1),
+       st.floats(-50.0, 50.0))
+def test_softmax_shift_invariance(b, v, seed, shift):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, v)) * 5
+    p1 = ref.softmax(x)
+    p2 = ref.softmax(x + shift)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(p1.sum(-1), np.ones(b), rtol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(2, 24), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+def test_attention_causality(b, s, h, seed):
+    """Perturbing token t must not change outputs at positions < t."""
+    d = 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, s, h, d))
+    k = jax.random.normal(k2, (b, s, h, d))
+    v = jax.random.normal(k3, (b, s, h, d))
+    o1 = ref.mha_attention(q, k, v, causal=True)
+    t = s - 1
+    k_p = k.at[:, t].add(3.0)
+    v_p = v.at[:, t].add(3.0)
+    o2 = ref.mha_attention(q, k_p, v_p, causal=True)
+    np.testing.assert_allclose(o1[:, :t], o2[:, :t], rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(1, 3),
+       st.integers(0, 2**31 - 1))
+def test_ssd_scan_chunk_invariance(b, s, h, seed):
+    """Chunk size is an implementation detail: results must not depend on it."""
+    p, n = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, 1, n))
+    cm = jax.random.normal(jax.random.fold_in(ks[3], 1), (b, s, 1, n))
+    y1, f1 = ref.ssd_scan(x, dt, a, bm, cm, chunk=2)
+    y2, f2 = ref.ssd_scan(x, dt, a, bm, cm, chunk=max(s, 3))
+    np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(f1, f2, rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(1, 6), st.integers(1, 64), st.integers(0, 2**31 - 1))
+def test_ssd_linearity_in_x(heads, s, seed):
+    """The SSD map is linear in x for fixed (dt, A, B, C)."""
+    b, p, n = 1, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x1 = jax.random.normal(ks[0], (b, s, heads, p))
+    x2 = jax.random.normal(ks[1], (b, s, heads, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (b, s, heads)))
+    a = -jnp.exp(jax.random.normal(ks[3], (heads,)))
+    bm = jax.random.normal(ks[4], (b, s, 1, n))
+    cm = jax.random.normal(jax.random.fold_in(ks[4], 1), (b, s, 1, n))
+    y1, _ = ref.ssd_scan(x1, dt, a, bm, cm, chunk=8)
+    y2, _ = ref.ssd_scan(x2, dt, a, bm, cm, chunk=8)
+    y12, _ = ref.ssd_scan(x1 + 2.0 * x2, dt, a, bm, cm, chunk=8)
+    np.testing.assert_allclose(y12, y1 + 2.0 * y2, rtol=3e-3, atol=3e-3)
+
+
+@given(st.sampled_from(["bf16", "int8"]), st.integers(0, 2**31 - 1),
+       st.floats(0.001, 10.0))
+def test_compression_error_feedback_invariant(codec, seed, scale):
+    """decode(encode(g + ef)) + new_ef == g + ef exactly (EF bookkeeping)."""
+    g = {"x": jax.random.normal(jax.random.PRNGKey(seed), (16,)) * scale}
+    ef = {"x": jax.random.normal(jax.random.PRNGKey(seed + 1), (16,)) * 0.01}
+    q, s, ef2 = GC.compress(g, ef, codec)
+    deq = GC.decompress(q, s, codec)
+    np.testing.assert_allclose(
+        np.asarray(deq["x"] + ef2["x"]),
+        np.asarray(g["x"] + ef["x"]),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_layout_roundtrip_identity(r, c, seed):
+    """as_layout row->col->row is the identity (the paper's boundary
+    transpose is a pure relayout, not a value change)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (r, c))
+    y = as_layout(x, MajorOrder.ROW, MajorOrder.COLUMN)
+    z = as_layout(y, MajorOrder.COLUMN, MajorOrder.ROW)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+
+
+@given(st.integers(2, 64), st.integers(2, 32), st.integers(0, 2**31 - 1))
+def test_backend_equivalence_matmul_chain(m, n, seed):
+    """Single-source dual-backend equivalence on a random op chain."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (m, n))
+    w = jax.random.normal(k2, (n, 8))
+    b = jax.random.normal(k3, (8,))
+    outs = []
+    for be in ("reference", "pallas"):
+        with use_backend(be):
+            outs.append(ops.relu(ops.bias_add_rows(ops.matmul(x, w), b), 0.1))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+
+
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=3),
+       st.integers(0, 2**31 - 1))
+def test_blob_reshape_preserves_count(dims, seed):
+    shape = tuple(dims)
+    b = Blob(jax.random.normal(jax.random.PRNGKey(seed), shape))
+    flat = b.reshape((b.count,))
+    assert flat.count == b.count
+    np.testing.assert_array_equal(
+        np.asarray(flat.data), np.asarray(b.data).reshape(-1)
+    )
