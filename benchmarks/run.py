@@ -28,6 +28,11 @@ def main() -> None:
     table2_fwbw.main()
 
     print()
+    print("== serving: host-loop vs device-side engine (§4.3 ablation) ==")
+    from benchmarks import serve_engine
+    serve_engine.main(["--quick"] if quick else [])
+
+    print()
     print("== roofline: dry-run summary (see EXPERIMENTS.md for analysis) ==")
     import pathlib
     if pathlib.Path("experiments/dryrun").exists():

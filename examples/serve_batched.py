@@ -1,9 +1,10 @@
-"""Batched serving example — prefill + decode across heterogeneous requests.
+"""Batched serving example — continuous batching over heterogeneous requests.
 
-Serves a reduced Mamba2 (attention-free: O(1) state per sequence) with a
-continuous-batching-style loop: requests arrive with different prompt
-lengths, are left-aligned into a batch, decoded greedily; finished rows are
-replaced by the next queued request.
+Thin driver over ``repro.serving.ServingEngine``: requests arrive with
+different prompt lengths, are admitted into fixed batch slots, decoded
+greedily on-device, and finished rows are refilled from the queue — with
+one host sync per batch of decode steps instead of the per-row ``int()``
+syncs of the old host-side loop.
 
     PYTHONPATH=src python examples/serve_batched.py --requests 8 --batch 4
 """
@@ -14,10 +15,22 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.models.model import build_model
+from repro.serving import ServingEngine
+
+
+def make_requests(rng, n, vocab_size, gen):
+    """Synthetic requests; length and content drawn from *independent* keys
+    (a shared key would correlate request length with token content)."""
+    reqs = []
+    for _ in range(n):
+        rng, k_len, k_toks = jax.random.split(rng, 3)
+        plen = int(jax.random.randint(k_len, (), 4, 12))
+        toks = jax.random.randint(k_toks, (plen,), 0, vocab_size)
+        reqs.append((toks.tolist(), gen))
+    return reqs
 
 
 def main():
@@ -26,68 +39,29 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--steps-per-sync", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-
-    rng = jax.random.PRNGKey(1)
-    queue = []
-    for r in range(args.requests):
-        rng, k = jax.random.split(rng)
-        plen = int(jax.random.randint(k, (), 4, 12))
-        queue.append(jax.random.randint(k, (plen,), 0, cfg.vocab_size))
+    reqs = make_requests(jax.random.PRNGKey(1), args.requests,
+                         cfg.vocab_size, args.gen)
 
     max_len = 12 + args.gen + 1
-    state = model.init_decode_state(args.batch, max_len)
-    slots = [None] * args.batch          # request id per row
-    progress = [0] * args.batch          # tokens consumed/generated per row
-    outputs = {}
-    done = 0
-    next_req = 0
-    current = jnp.zeros((args.batch,), jnp.int32)
+    eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
+                        steps_per_sync=args.steps_per_sync)
+    rids = [eng.submit(toks, gen) for toks, gen in reqs]
 
     t0 = time.time()
-    steps = 0
-    while done < args.requests:
-        # admit new requests into free rows
-        for b in range(args.batch):
-            if slots[b] is None and next_req < args.requests:
-                slots[b] = next_req
-                progress[b] = 0
-                outputs[next_req] = []
-                next_req += 1
-        # build the next token per row (prompt feed or generated feed)
-        toks = []
-        for b in range(args.batch):
-            r = slots[b]
-            if r is None:
-                toks.append(0)
-            elif progress[b] < len(queue[r]):
-                toks.append(int(queue[r][progress[b]]))
-            else:
-                toks.append(int(outputs[r][-1]))
-        logits, state = decode(params, state, jnp.asarray(toks, jnp.int32))
-        steps += 1
-        nxt = jnp.argmax(logits, axis=-1)
-        for b in range(args.batch):
-            r = slots[b]
-            if r is None:
-                continue
-            progress[b] += 1
-            if progress[b] >= len(queue[r]):
-                outputs[r].append(int(nxt[b]))
-                if len(outputs[r]) >= args.gen:
-                    done += 1
-                    slots[b] = None
+    outs = eng.run()
     dt = time.time() - t0
     print(f"served {args.requests} requests in {dt:.2f}s "
-          f"({steps} decode steps, {args.requests*args.gen/dt:.1f} gen tok/s)")
-    for r in range(min(3, args.requests)):
-        print(f"req {r}: prompt[:4]={queue[r][:4].tolist()} "
-              f"-> gen[:8]={outputs[r][:8]}")
+          f"({eng.steps} decode steps, {eng.generated/dt:.1f} gen tok/s)")
+    for i, rid in enumerate(rids[:3]):
+        prompt = reqs[i][0]
+        print(f"req {rid}: prompt[:4]={prompt[:4]} "
+              f"-> gen[:8]={outs[rid][:8].tolist()}")
 
 
 if __name__ == "__main__":

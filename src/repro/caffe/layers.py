@@ -157,9 +157,9 @@ class Pooling(Layer):
         (x,) = bottoms
         s = self.spec
         if s.pool == "max":
-            y = ops.maxpool(x, s.kernel_size, s.stride, s.pad)
-            # argmax for explicit backward (Caffe stores the mapping)
-            _, arg = ref.maxpool(x, s.kernel_size, s.stride, s.pad)
+            # single pool evaluation yields both the output and the argmax
+            # (Caffe stores the mapping for the explicit backward)
+            y, arg = ops.maxpool_with_argmax(x, s.kernel_size, s.stride, s.pad)
             return [y], {"arg": arg, "x_shape": x.shape}
         y = ops.avgpool(x, s.kernel_size, s.stride, s.pad)
         return [y], {"x_shape": x.shape}

@@ -50,12 +50,20 @@ class Backend(enum.Enum):
 
 
 class _PolicyState(threading.local):
+    """Thread-local ``use_backend`` stack.
+
+    Only the *scoped* stack is per-thread; the process default deliberately
+    is not — serving worker threads must see ``set_default_backend(...)``
+    made from the main thread (a thread-local default silently reverted
+    workers to AUTO).
+    """
+
     def __init__(self) -> None:
         self.stack: list[Backend] = []
-        self.default: Optional[Backend] = None
 
 
 _STATE = _PolicyState()
+_DEFAULT: Optional[Backend] = None
 
 
 def _platform() -> str:
@@ -66,19 +74,24 @@ def on_tpu() -> bool:
     return _platform() == "tpu"
 
 
-def set_default_backend(backend: Backend | str) -> None:
-    """Process-default backend (overrides env, overridden by use_backend)."""
+def set_default_backend(backend: Backend | str | None) -> None:
+    """Process-default backend (overrides env, overridden by use_backend).
+
+    Shared across threads: a worker thread spawned after (or before) this
+    call observes the same default.  Pass ``None`` to clear.
+    """
+    global _DEFAULT
     if isinstance(backend, str):
         backend = Backend.parse(backend)
-    _STATE.default = backend
+    _DEFAULT = backend
 
 
 def current_backend() -> Backend:
     """Resolve the active backend to REFERENCE or PALLAS (never AUTO)."""
     if _STATE.stack:
         b = _STATE.stack[-1]
-    elif _STATE.default is not None:
-        b = _STATE.default
+    elif _DEFAULT is not None:
+        b = _DEFAULT
     else:
         b = Backend.parse(os.environ.get("REPRO_BACKEND", "auto"))
     if b is Backend.AUTO:

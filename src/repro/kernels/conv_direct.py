@@ -18,7 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
@@ -89,7 +89,7 @@ def conv2d_direct_pallas(
         out_specs=pl.BlockSpec((1, ft, oh, ow), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, wf.shape[0], oh, ow), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         name="repro_conv_direct",

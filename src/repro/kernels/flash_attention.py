@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as plc
+
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
 
@@ -154,7 +156,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         name="repro_flash_fwd",
@@ -292,7 +294,7 @@ def flash_attention_bwd_pallas(
         out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         name="repro_flash_dq",
@@ -335,7 +337,7 @@ def flash_attention_bwd_pallas(
             pltpu.VMEM((bk, d), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         name="repro_flash_dkv",
@@ -355,7 +357,7 @@ def _flash_decode_kernel(
     *, scale, n_k, bk, window,
 ):
     ik = pl.program_id(2)
-    cache_len = len_ref[0]
+    cache_len = len_ref[pl.program_id(0)]  # per-sequence valid length
 
     @pl.when(ik == 0)
     def _init():
@@ -404,7 +406,7 @@ def flash_decode_pallas(
     q: jax.Array,        # (B, Hq, D)  one token per sequence
     k_cache: jax.Array,  # (B, Smax, Hkv, D)
     v_cache: jax.Array,
-    cache_len: jax.Array,  # int32 scalar: valid prefix length (incl. new tok)
+    cache_len: jax.Array,  # int32 () or (B,): valid prefix len (incl. new tok)
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
@@ -430,7 +432,7 @@ def flash_decode_pallas(
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=plc.MemorySpace.SMEM),
             pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
@@ -443,9 +445,12 @@ def flash_decode_pallas(
             pltpu.VMEM((g, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         name="repro_flash_decode",
-    )(cache_len.reshape(1).astype(jnp.int32), qg, kt, vt)
+    )(
+        jnp.broadcast_to(cache_len.reshape(-1).astype(jnp.int32), (b,)),
+        qg, kt, vt,
+    )
     return out.reshape(b, hq, d)

@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.kernels.ref import conv_out_size
@@ -78,7 +78,7 @@ def im2col_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((n, c * kh * kw, oh * ow), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         name="repro_im2col",
@@ -146,7 +146,7 @@ def col2im_pallas(
         out_specs=pl.BlockSpec((1, cb, h, w), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, c, h, w), cols.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         name="repro_col2im",

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat as plc
+
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
 
@@ -126,7 +128,7 @@ def ssd_scan_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         name="repro_ssd_scan",

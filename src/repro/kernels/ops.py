@@ -238,49 +238,60 @@ def conv2d(
 # ---------------------------------------------------------------------------
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def _maxpool_p(x, k, stride, pad):
-    out, _ = maxpool_pallas(x, k, stride, pad)
-    return out
+def _maxpool_arg_p(x, k, stride, pad):
+    return maxpool_pallas(x, k, stride, pad)
 
 
-def _maxpool_p_fwd(x, k, stride, pad):
+def _maxpool_arg_p_fwd(x, k, stride, pad):
     out, arg = maxpool_pallas(x, k, stride, pad)
-    return out, (arg, x.shape)
+    return (out, arg), (arg, x.shape)
 
 
-def _maxpool_p_bwd(k, stride, pad, res, dy):
+def _maxpool_arg_p_bwd(k, stride, pad, res, g):
     arg, x_shape = res
-    if stride >= k:  # non-overlapping: ported bwd kernel
+    dy = g[0]  # argmax cotangent is float0
+    if stride >= k:
         return (maxpool_bwd_pallas(dy, arg, x_shape, k, stride, pad),)
     return (ref.maxpool_bwd(dy, arg, x_shape, k, stride, pad),)
 
 
-_maxpool_p.defvjp(_maxpool_p_fwd, _maxpool_p_bwd)
+_maxpool_arg_p.defvjp(_maxpool_arg_p_fwd, _maxpool_arg_p_bwd)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def _maxpool_r(x, k, stride, pad):
-    out, _ = ref.maxpool(x, k, stride, pad)
-    return out
+def _maxpool_arg_r(x, k, stride, pad):
+    return ref.maxpool(x, k, stride, pad)
 
 
-def _maxpool_r_fwd(x, k, stride, pad):
+def _maxpool_arg_r_fwd(x, k, stride, pad):
     out, arg = ref.maxpool(x, k, stride, pad)
-    return out, (arg, x.shape)
+    return (out, arg), (arg, x.shape)
 
 
-def _maxpool_r_bwd(k, stride, pad, res, dy):
+def _maxpool_arg_r_bwd(k, stride, pad, res, g):
     arg, x_shape = res
-    return (ref.maxpool_bwd(dy, arg, x_shape, k, stride, pad),)
+    return (ref.maxpool_bwd(g[0], arg, x_shape, k, stride, pad),)
 
 
-_maxpool_r.defvjp(_maxpool_r_fwd, _maxpool_r_bwd)
+_maxpool_arg_r.defvjp(_maxpool_arg_r_fwd, _maxpool_arg_r_bwd)
+
+
+def maxpool_with_argmax(x: jax.Array, k: int, stride: int, pad: int = 0):
+    """One pool evaluation returning ``(out, argmax)``.
+
+    For callers that keep the argmax themselves (the Caffe Pooling layer
+    stores the mapping for its explicit backward).  Running ``maxpool`` and
+    then the oracle again just for the argmax would double the hot-path cost
+    and could disagree on ties across backends; this dispatches once and
+    returns both from the same kernel.  Differentiable in ``out``.
+    """
+    if _pallas():
+        return _maxpool_arg_p(x, k, stride, pad)
+    return _maxpool_arg_r(x, k, stride, pad)
 
 
 def maxpool(x: jax.Array, k: int, stride: int, pad: int = 0) -> jax.Array:
-    if _pallas():
-        return _maxpool_p(x, k, stride, pad)
-    return _maxpool_r(x, k, stride, pad)
+    return maxpool_with_argmax(x, k, stride, pad)[0]
 
 
 def avgpool(x: jax.Array, k: int, stride: int, pad: int = 0) -> jax.Array:
@@ -423,7 +434,7 @@ def attention_decode(
     q: jax.Array,          # (B, Hq, D)
     k_cache: jax.Array,    # (B, Smax, Hkv, D)
     v_cache: jax.Array,
-    cache_len: jax.Array,  # int32 scalar (valid prefix incl. current token)
+    cache_len: jax.Array,  # int32 () or (B,): valid prefix incl. current token
     *,
     window: Optional[int] = None,
     scale: Optional[float] = None,
@@ -432,19 +443,23 @@ def attention_decode(
         return flash_decode_pallas(
             q, k_cache, v_cache, cache_len, window=window, scale=scale
         )
-    smax = k_cache.shape[1]
-    kpos = jnp.arange(smax)
-    mask = kpos < cache_len
-    if window is not None:
-        mask &= kpos >= cache_len - window
     b, hq, d = q.shape
+    smax = k_cache.shape[1]
+    # per-row valid lengths (continuous batching: rows at different depths)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,)
+    )
+    kpos = jnp.arange(smax)
+    mask = kpos[None, :] < lens[:, None]                    # (B, Smax)
+    if window is not None:
+        mask &= kpos[None, :] >= lens[:, None] - window
     hkv = k_cache.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
     s = jnp.einsum(
         "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
     ) * (scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32))
-    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(b, hq, d)
@@ -535,7 +550,7 @@ register_op("layernorm", reference=ref.layernorm, pallas=None,
             doc="LayerNorm (reference only)")
 register_op("attention", reference=ref.mha_attention,
             pallas=flash_attention_pallas, doc="GQA flash attention")
-register_op("attention_decode", reference=None or ref.mha_attention,
+register_op("attention_decode", reference=ref.mha_attention,
             pallas=flash_decode_pallas, doc="KV-cache decode attention")
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
             doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)")

@@ -1,0 +1,14 @@
+"""Version-portable aliases for ``jax.experimental.pallas.tpu`` symbols.
+
+JAX renamed ``TPUCompilerParams`` -> ``CompilerParams`` and
+``TPUMemorySpace`` -> ``MemorySpace`` across releases.  Kernels import the
+names from here so the same source compiles against either side of the
+rename — the library-level analogue of the paper's single-source property
+(the kernel text does not change when the toolchain does).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace

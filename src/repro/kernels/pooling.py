@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.kernels.ref import conv_out_size
@@ -80,7 +80,7 @@ def maxpool_pallas(x: jax.Array, k: int, stride: int, pad: int = 0, interpret=No
             jax.ShapeDtypeStruct((n, c, oh, ow), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         name="repro_maxpool",
@@ -146,7 +146,7 @@ def maxpool_bwd_pallas(
         out_specs=pl.BlockSpec((1, cb, h, w), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, c, h, w), dy.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         name="repro_maxpool_bwd",

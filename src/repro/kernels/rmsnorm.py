@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
@@ -46,7 +46,7 @@ def rmsnorm_pallas(x: jax.Array, w: jax.Array, eps: float = 1e-6, interpret=None
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=plc.CompilerParams(dimension_semantics=("parallel",)),
         name="repro_rmsnorm",
     )(xp, w.reshape(1, d))
     return out[:r].reshape(orig)
@@ -101,7 +101,7 @@ def rmsnorm_bwd_pallas(
             jax.ShapeDtypeStruct((grid[0], d), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=plc.CompilerParams(dimension_semantics=("parallel",)),
         name="repro_rmsnorm_bwd",
     )(xp, w.reshape(1, d), dyp)
     return dx[:r].reshape(orig), dw_part.sum(axis=0).astype(w.dtype)

@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
@@ -52,7 +52,7 @@ def softmax_pallas(x: jax.Array, interpret=None) -> jax.Array:
         out_specs=pl.BlockSpec((br, v), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=plc.CompilerParams(dimension_semantics=("parallel",)),
         name="repro_softmax",
     )(xp)
     return out[:r].reshape(orig)
@@ -100,7 +100,7 @@ def softmax_xent_pallas(logits: jax.Array, labels: jax.Array, interpret=None):
             jax.ShapeDtypeStruct(xp.shape, logits.dtype),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=plc.CompilerParams(dimension_semantics=("parallel",)),
         name="repro_softmax_xent",
     )(xp, yp)
     return nll[:b, 0].mean(), probs[:b]
@@ -136,7 +136,7 @@ def softmax_xent_bwd_pallas(probs: jax.Array, labels: jax.Array, interpret=None)
         out_specs=pl.BlockSpec((br, v), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(pp.shape, probs.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=plc.CompilerParams(dimension_semantics=("parallel",)),
         name="repro_softmax_xent_bwd",
     )(pp, yp)
     return out[:b]

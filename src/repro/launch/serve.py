@@ -1,4 +1,4 @@
-"""Serving driver — batched prefill + decode with KV/SSM caches.
+"""Serving driver — a thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b-smoke \
         --batch 4 --prompt-len 16 --gen 32
@@ -6,7 +6,9 @@
 Greedy decode over the synthetic token distribution; reports tokens/s and
 verifies the cache path incrementally matches teacher-forced prefill
 (--check) — the serving analogue of the paper's layer-by-layer regression
-testing.
+testing.  LM families run through ``repro.serving.ServingEngine`` (device-
+side control state, one host sync per batch of steps); families without
+per-row decode state (vlm, encdec) fall back to the lockstep loop.
 """
 from __future__ import annotations
 
@@ -19,27 +21,34 @@ import jax.numpy as jnp
 from repro.configs.registry import get_arch
 from repro.models import lm as LM
 from repro.models.model import build_model
+from repro.serving import ServingEngine
+from repro.serving.checks import assert_decode_matches_teacher_forced
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--check", action="store_true",
-                    help="verify decode path against teacher-forced forward")
-    args = ap.parse_args(argv)
-
-    cfg = get_arch(args.arch)
-    model = build_model(cfg)
-    rng = jax.random.PRNGKey(0)
-    params = model.init_params(rng)
+def _serve_engine(model, params, prompt, args) -> int:
+    """Continuous-batching path: every request enters through the queue."""
     max_len = args.prompt_len + args.gen + 1
-    prompt = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    eng = ServingEngine(
+        model, params, batch=args.batch, max_len=max_len,
+        steps_per_sync=args.steps_per_sync,
     )
+    rids = [
+        eng.submit(prompt[b].tolist(), args.gen) for b in range(args.batch)
+    ]
+    t0 = time.time()
+    outs = eng.run()
+    dt = time.time() - t0
+    total_tokens = args.batch * (args.prompt_len + args.gen)
+    print(f"decoded {args.gen} tokens x batch {args.batch} "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. prefill, "
+          f"{eng.steps} engine steps)")
+    print("sample:", outs[rids[0]][:16].tolist())
+    return 0
 
+
+def _serve_lockstep(model, params, prompt, args, cfg) -> int:
+    """Legacy lockstep loop for families without per-row decode state."""
+    max_len = args.prompt_len + args.gen + 1
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     state = model.init_decode_state(args.batch, max_len)
     if cfg.family == "vlm":
@@ -47,7 +56,6 @@ def main(argv=None) -> int:
                            cfg.dtype_())
         state = LM.prefill_vlm_cross_cache(cfg, params, vision, state)
 
-    # prompt consumption through the decode path (incremental prefill)
     t0 = time.time()
     logits = None
     for i in range(args.prompt_len):
@@ -65,20 +73,35 @@ def main(argv=None) -> int:
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. prefill)")
     gen = jnp.stack(generated, axis=1)
     print("sample:", gen[0, :16].tolist())
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--check", action="store_true",
+                    help="verify decode path against teacher-forced forward")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        rc = _serve_engine(model, params, prompt, args)
+    else:
+        rc = _serve_lockstep(model, params, prompt, args, cfg)
 
     if args.check and cfg.family in ("dense", "moe", "ssm", "hybrid"):
-        # teacher-forced: logits at last prompt position must match decode's
-        h = LM.forward(cfg, params, prompt, remat=False)
-        want = LM.lm_logits(cfg, params, h[:, -1:, :])[:, 0]
-        state2 = model.init_decode_state(args.batch, max_len)
-        got = None
-        for i in range(args.prompt_len):
-            got, state2 = model.decode_step(params, state2, prompt[:, i])
-        import numpy as np
-
-        np.testing.assert_allclose(
-            np.asarray(got, np.float32), np.asarray(want, np.float32),
-            rtol=2e-2, atol=2e-2,
+        assert_decode_matches_teacher_forced(
+            model, params, prompt, args.prompt_len + args.gen + 1
         )
         print("decode path matches teacher-forced forward ✓")
     return 0

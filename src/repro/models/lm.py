@@ -206,13 +206,16 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 # ---------------------------------------------------------------------------
 
 def init_decode_state(
-    cfg: ArchConfig, batch: int, max_len: int
+    cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False
 ) -> Dict[str, jax.Array]:
+    """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
+    rows may sit at different sequence depths (continuous batching)."""
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     # sliding-window archs only ever need `window` cache slots (ring buffer)
     eff = min(max_len, cfg.window) if cfg.window else max_len
-    state: Dict[str, jax.Array] = {"pos": jnp.zeros((), jnp.int32)}
+    pos0 = jnp.zeros((batch,) if per_row_pos else (), jnp.int32)
+    state: Dict[str, jax.Array] = {"pos": pos0}
     if cfg.family in ("dense", "moe"):
         state["k"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
         state["v"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
@@ -269,11 +272,14 @@ def _cache_update(cfg: ArchConfig, cache: jax.Array, new: jax.Array,
         and cfg.n_kv_heads % tp != 0
         and cache.shape[1] % tp == 0
     )
-    if seq_sharded:
+    if seq_sharded or idx.ndim == 1:
+        # per-row idx (continuous batching) uses the same elementwise masked
+        # write — each row lands at its own slot in one fused op
         pos_iota = jax.lax.broadcasted_iota(
             jnp.int32, (1, cache.shape[1], 1, 1), 1
         )
-        return jnp.where(pos_iota == idx, new[:, None].astype(cache.dtype),
+        idx_b = idx.reshape(-1, 1, 1, 1) if idx.ndim == 1 else idx
+        return jnp.where(pos_iota == idx_b, new[:, None].astype(cache.dtype),
                          cache)
     return jax.lax.dynamic_update_slice_in_dim(
         cache, new[:, None], idx, axis=1
@@ -283,11 +289,16 @@ def _cache_update(cfg: ArchConfig, cache: jax.Array, new: jax.Array,
 def decode_step(
     cfg: ArchConfig, params, state, token: jax.Array  # (B,) int32
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One token for every sequence in the batch; returns (logits, state)."""
+    """One token for every sequence in the batch; returns (logits, state).
+
+    ``state["pos"]`` may be a scalar (all rows in lockstep) or a (B,) vector
+    (rows at independent depths — the continuous-batching serving engine).
+    """
     pos = state["pos"]
     x = params["embed"][token].astype(cfg.dtype_())   # (B, d)
     idx = _cache_index(cfg, pos)
     cache_len = jnp.minimum(pos + 1, cfg.window) if cfg.window else pos + 1
+    rope_pos = pos[..., None] if pos.ndim == 1 else pos[None]
 
     def attn_dec(p, x, ck, cv):
         b, d = x.shape
@@ -296,7 +307,7 @@ def decode_step(
         q = C.dense(xn, p["wq"], p.get("bq")).reshape(b, cfg.n_heads, hd)
         k_new = C.dense(xn, p["wk"], p.get("bk")).reshape(b, hkv, hd)
         v_new = C.dense(xn, p["wv"], p.get("bv")).reshape(b, hkv, hd)
-        cos, sin = C.rope_freqs(cfg, pos[None])
+        cos, sin = C.rope_freqs(cfg, rope_pos)
         q = C.apply_rope(q.reshape(b, 1, -1, hd), cos, sin).reshape(b, -1, hd)
         k_new = C.apply_rope(
             k_new.reshape(b, 1, hkv, hd), cos, sin
@@ -408,6 +419,44 @@ def prefill(
     in the benchmarked path; decode cells measure steady-state decode)."""
     h = forward(cfg, params, tokens, vision=vision, remat=False)
     return lm_logits(cfg, params, h[:, -1:, :])[:, 0]
+
+
+def reset_decode_rows(
+    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array  # (B,) bool
+) -> Dict[str, jax.Array]:
+    """Zero the decode caches of the rows selected by ``mask``.
+
+    The slot-refill path of the serving engine: a finished row's caches are
+    reset in place (no retracing, no reallocation) before a queued request
+    is admitted into it.  Requires ``per_row_pos`` state — with a scalar
+    ``pos`` the rows share a clock and cannot be reset independently.
+    """
+    if state["pos"].ndim != 1:
+        raise ValueError(
+            "reset_decode_rows needs per_row_pos=True decode state"
+        )
+    known = {"k", "v", "ssm", "conv", "xk", "xv"}
+    unknown = set(state) - known - {"pos"}
+    if unknown:
+        # fail loudly: a silently-skipped cache key would leak the previous
+        # request's state into the slot's next occupant
+        raise ValueError(
+            f"reset_decode_rows: unhandled decode-state keys {sorted(unknown)}"
+            " — declare their batch axis here before serving with them"
+        )
+    out = dict(state)
+    out["pos"] = jnp.where(mask, 0, state["pos"])
+    for key in known & set(state):
+        v = state[key]
+        # batch axis: (layers/groups, B, ...) except the VLM self-attn cache,
+        # which is (groups, per, B, ...)
+        axis = 2 if cfg.family == "vlm" and key in ("k", "v") else 1
+        shape = [1] * v.ndim
+        shape[axis] = mask.shape[0]
+        out[key] = jnp.where(
+            mask.reshape(shape), jnp.zeros((), v.dtype), v
+        )
+    return out
 
 
 def prefill_vlm_cross_cache(cfg: ArchConfig, params, vision, state):

@@ -23,6 +23,9 @@ class Model:
     prefill: Callable[..., jax.Array]
     init_decode_state: Callable[..., Dict[str, jax.Array]]
     decode_step: Callable[..., Any]
+    # zero selected batch rows' decode caches (serving slot refill); raises
+    # for families without per-row decode state support
+    reset_decode_rows: Callable[..., Dict[str, jax.Array]] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -39,6 +42,12 @@ def build_model(cfg: ArchConfig) -> Model:
             from repro.models import components as C
             return C.dense(h[:, -1:, :], params["lm_head"])[:, 0]
 
+        def no_reset(state, mask):
+            raise NotImplementedError(
+                "encdec decode state has no per-row reset (serving engine "
+                "supports the LM families)"
+            )
+
         return Model(
             cfg=cfg,
             init_params=lambda rng: encdec.init_params(cfg, rng),
@@ -48,6 +57,7 @@ def build_model(cfg: ArchConfig) -> Model:
             decode_step=lambda params, state, token: encdec.decode_step(
                 cfg, params, state, token
             ),
+            reset_decode_rows=no_reset,
         )
 
     def prefill_fn(params, batch):
@@ -60,10 +70,13 @@ def build_model(cfg: ArchConfig) -> Model:
         init_params=lambda rng: lm.init_params(cfg, rng),
         train_loss=lambda params, batch: lm.train_loss(cfg, params, batch),
         prefill=prefill_fn,
-        init_decode_state=lambda batch, max_len: lm.init_decode_state(
-            cfg, batch, max_len
+        init_decode_state=lambda batch, max_len, **kw: lm.init_decode_state(
+            cfg, batch, max_len, **kw
         ),
         decode_step=lambda params, state, token: lm.decode_step(
             cfg, params, state, token
+        ),
+        reset_decode_rows=lambda state, mask: lm.reset_decode_rows(
+            cfg, state, mask
         ),
     )

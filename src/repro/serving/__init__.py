@@ -1,0 +1,19 @@
+"""Continuous-batching serving subsystem (device-side control state)."""
+from repro.serving.engine import (
+    ServingEngine,
+    SlotState,
+    engine_step,
+    init_slots,
+    serve_all,
+)
+from repro.serving.queue import Request, RequestQueue
+
+__all__ = [
+    "Request",
+    "RequestQueue",
+    "ServingEngine",
+    "SlotState",
+    "engine_step",
+    "init_slots",
+    "serve_all",
+]

@@ -1,0 +1,44 @@
+"""Serving regression checks — the paper's layer-by-layer discipline
+applied to the decode path.
+
+``teacher_forced_logits`` / ``decode_logits`` give the two sides of the
+parity check previously buried behind ``serve.py --check``: incremental
+decode through the cache must reproduce the teacher-forced forward at the
+last prompt position.  ``tests/test_serving.py`` runs it as a real test
+under both backends; the CLI keeps a ``--check`` flag wired to the same
+helper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm as LM
+from repro.models.model import Model
+
+
+def teacher_forced_logits(model: Model, params, prompt: jnp.ndarray):
+    """Last-position logits from the full (non-cached) forward."""
+    h = LM.forward(model.cfg, params, prompt, remat=False)
+    return LM.lm_logits(model.cfg, params, h[:, -1:, :])[:, 0]
+
+
+def decode_logits(model: Model, params, prompt: jnp.ndarray, max_len: int):
+    """Last-position logits from incremental decode through the cache."""
+    state = model.init_decode_state(prompt.shape[0], max_len)
+    got = None
+    for i in range(prompt.shape[1]):
+        got, state = model.decode_step(params, state, prompt[:, i])
+    return got
+
+
+def assert_decode_matches_teacher_forced(
+    model: Model, params, prompt, max_len: int,
+    rtol: float = 2e-2, atol: float = 2e-2,
+) -> None:
+    want = teacher_forced_logits(model, params, prompt)
+    got = decode_logits(model, params, prompt, max_len)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=rtol, atol=atol,
+    )

@@ -1,0 +1,69 @@
+"""Host-side request queue for the serving engine.
+
+The queue is the only part of serving that legitimately lives on the host:
+requests arrive from the outside world with ragged prompt lengths.  The
+moment a request is admitted into a batch slot it becomes fixed-shape
+device state (`SlotState`) and never crosses back until it is finished —
+the anti-pattern the paper's §4.3 measures (a host crossing per layer per
+step) is confined to admission time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    req_id: int
+    tokens: np.ndarray        # (prompt_len,) int32
+    max_new_tokens: int
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+class RequestQueue:
+    """FIFO of pending requests; thread-safe submit (serving workers)."""
+
+    def __init__(self, max_len: Optional[int] = None) -> None:
+        self._q: Deque[Request] = deque()
+        self._next_id = 0
+        self._lock = threading.Lock()
+        self.max_len = max_len
+
+    def submit(self, tokens: Sequence[int], max_new_tokens: int) -> int:
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if toks.size == 0:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.max_len is not None and toks.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {toks.size + max_new_tokens} slots "
+                f"> engine max_len {self.max_len}"
+            )
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._q.append(Request(rid, toks, int(max_new_tokens)))
+        return rid
+
+    def pop(self) -> Request:
+        with self._lock:
+            return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return len(self._q) > 0
