@@ -28,7 +28,7 @@ def main() -> None:
     table2_fwbw.main()
 
     print()
-    print("== serving: host-loop vs device-side engine (§4.3 ablation) ==")
+    print("== serving: host-loop vs engine + paged-vs-contiguous KV ==")
     from benchmarks import serve_engine
     serve_engine.main(["--quick"] if quick else [])
 

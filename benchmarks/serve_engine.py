@@ -13,6 +13,10 @@ loops here are that ablation, applied to continuous batching:
 Same model, same requests, greedy decode; reported number is generated
 tokens per second.
 
+A second ablation compares the two KV-cache layouts on an attention arch
+at mixed prompt lengths (paged pool capped at half the contiguous slab):
+gen tok/s and peak resident KV bytes, outputs token-identical.
+
     PYTHONPATH=src python -m benchmarks.serve_engine [--quick]
 """
 from __future__ import annotations
@@ -100,9 +104,10 @@ def run_host_loop(model, params, reqs, batch, max_len):
             "outputs": outputs}
 
 
-def run_engine(model, params, reqs, batch, max_len, steps_per_sync):
+def run_engine(model, params, reqs, batch, max_len, steps_per_sync,
+               **engine_kwargs):
     eng = ServingEngine(model, params, batch=batch, max_len=max_len,
-                        steps_per_sync=steps_per_sync)
+                        steps_per_sync=steps_per_sync, **engine_kwargs)
     # compile outside the timed region (a server compiles once at startup):
     # a throwaway workload drives admit + fused-step traces once
     for _ in range(batch):
@@ -110,13 +115,60 @@ def run_engine(model, params, reqs, batch, max_len, steps_per_sync):
     eng.run()
     eng.outputs.clear()
     eng.steps = eng.generated = 0
+    eng.peak_pages_in_use = 0
 
     rids = [eng.submit(t, g) for t, g in reqs]
     t0 = time.perf_counter()
     outs = eng.run()
     dt = time.perf_counter() - t0
     return {"tok_s": eng.generated / dt, "steps": eng.steps, "seconds": dt,
+            "kv_bytes": eng.kv_resident_bytes(peak=True),
             "outputs": {i: outs[r].tolist() for i, r in enumerate(rids)}}
+
+
+def compare_layouts(args):
+    """Paged vs contiguous at mixed prompt lengths (the memory ablation).
+
+    Prompt lengths span >= 8x, so the contiguous slab (B x max_len per
+    row, sized for the *longest* request) is mostly idle padding.  The
+    paged engine's pool is capped at half the slab; throughput must hold
+    while peak resident KV drops to roughly the live-token footprint."""
+    cfg = get_arch(args.kv_arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    lo, hi = 4, 33                            # >= 8x spread
+    max_len = hi + args.gen + 1
+    reqs = make_requests(1, args.requests, cfg.vocab_size, args.gen,
+                         lo=lo, hi=hi)
+    page = args.page_size
+    # pool deliberately below the contiguous equivalent (half the slab),
+    # but never below the largest single request's worst-case need — a
+    # request bigger than the whole pool is rejected at submit
+    from repro.serving.pager import pages_needed
+    full_pool = args.batch * (-(-max_len // page))
+    max_need = max(pages_needed(len(t) + g, page) for t, g in reqs)
+    rows = {}
+    for name, kw in (
+        ("contiguous", dict(layout="contiguous")),
+        ("paged", dict(layout="paged", page_size=page,
+                       n_pages=max(max_need, full_pool // 2))),
+    ):
+        rows[name] = run_engine(model, params, reqs, args.batch, max_len,
+                                args.steps_per_sync, **kw)
+    for i in range(len(reqs)):
+        a, b = rows["contiguous"]["outputs"][i], rows["paged"]["outputs"][i]
+        assert a == b, f"request {i}: contiguous {a} != paged {b}"
+    print(f"arch={args.kv_arch} requests={args.requests} batch={args.batch} "
+          f"gen={args.gen} prompt_len {lo}..{hi - 1} page_size={page}")
+    print(f"  {'layout':<12} {'gen tok/s':>10} {'peak KV bytes':>14} "
+          f"{'vs slab':>8}")
+    slab = rows["contiguous"]["kv_bytes"]
+    for name in ("contiguous", "paged"):
+        r = rows[name]
+        print(f"  {name:<12} {r['tok_s']:>10.1f} {r['kv_bytes']:>14d} "
+              f"{r['kv_bytes'] / slab:>7.0%}")
+    print("  (outputs token-identical)")
+    return rows
 
 
 def main(argv=None):
@@ -126,10 +178,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--kv-arch", default="qwen2.5-3b-smoke",
+                    help="attention arch for the paged-vs-contiguous ablation")
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal sizes: CI driver-rot check, not a benchmark")
     args = ap.parse_args(argv)
     if args.quick:
         args.requests, args.gen = 8, 16
+    if args.smoke:
+        args.requests, args.gen, args.batch = 3, 6, 2
 
     cfg = get_arch(args.arch)
     model = build_model(cfg)
@@ -155,7 +214,10 @@ def main(argv=None):
               f"{r['seconds']:>8.2f}")
     print(f"  speedup: {eng['tok_s'] / host['tok_s']:.2f}x "
           f"(outputs token-identical)")
-    return {"host": host, "engine": eng}
+    print()
+    print("-- KV layout: paged vs contiguous (mixed prompt lengths) --")
+    layouts = compare_layouts(args)
+    return {"host": host, "engine": eng, "layouts": layouts}
 
 
 if __name__ == "__main__":

@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--layout", choices=["contiguous", "paged"],
+                    default="contiguous",
+                    help="KV-cache layout (paged: resident KV tracks live "
+                         "tokens, not batch*max_len)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -50,7 +56,9 @@ def main():
 
     max_len = 12 + args.gen + 1
     eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
-                        steps_per_sync=args.steps_per_sync)
+                        steps_per_sync=args.steps_per_sync,
+                        layout=args.layout, page_size=args.page_size,
+                        n_pages=args.n_pages)
     rids = [eng.submit(toks, gen) for toks, gen in reqs]
 
     t0 = time.time()
@@ -58,6 +66,10 @@ def main():
     dt = time.time() - t0
     print(f"served {args.requests} requests in {dt:.2f}s "
           f"({eng.steps} decode steps, {eng.generated/dt:.1f} gen tok/s)")
+    s = eng.stats()
+    if "kv_pages" in s:   # attention-free archs have no pages to report
+        print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
+              f"pages resident")
     for i, rid in enumerate(rids[:3]):
         prompt = reqs[i][0]
         print(f"req {rid}: prompt[:4]={prompt[:4]} "

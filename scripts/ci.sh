@@ -1,10 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point: install dev deps, then run the tier-1 verify
 # command from ROADMAP.md verbatim.
+#
+#   ./scripts/ci.sh            tier-1 test suite
+#   ./scripts/ci.sh --smoke    benchmark-driver smoke: a few serving-engine
+#                              steps under PALLAS (interpret off-TPU), so
+#                              the benchmark entry points can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt ||
     echo "warning: dev-dep install failed (offline?); property tests will skip"
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    REPRO_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.serve_engine --smoke
+    exit 0
+fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -14,6 +14,12 @@ Kernels:
                  g q-heads of the group × their q blocks; scratch persists)
   _flash_decode: single-q-row attention against a KV cache with *dynamic*
                  valid length (SMEM scalar), for serve_step.
+  _flash_decode_paged: the same online softmax against a *paged* cache —
+                 the per-row block table is a scalar-prefetch operand, so
+                 the physical page each grid step DMAs is chosen in the
+                 BlockSpec index map (the paper's "keep layout conversion
+                 out of the compute loop" lesson: the gather costs an index
+                 lookup, never a materialized copy of the cache).
 
 Causal/window block skipping uses pl.when so fully-masked tiles do no MXU
 work (they still schedule — negligible next to the saved matmuls).
@@ -352,6 +358,46 @@ def flash_attention_bwd_pallas(
 # Decode: one new token vs a KV cache of dynamic valid length (SMEM scalar)
 # ---------------------------------------------------------------------------
 
+# The contiguous and paged decode kernels share one online-softmax block
+# (init / accumulate-a-KV-tile / finalize) so a numerics change cannot
+# de-synchronize the two layouts; they differ only in how a grid step maps
+# to cache positions (kpos_base) and in which tiles are skipped (`run`).
+
+def _decode_init(acc_ref, m_ref, l_ref):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+
+def _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  kpos_base, cache_len, window, scale):
+    q = q_ref[0, 0].astype(jnp.float32)           # (g, d) rows = heads grp
+    k = k_ref[0, 0].astype(jnp.float32)           # (tile, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = kpos_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos < cache_len
+    if window is not None:
+        valid &= kpos >= cache_len - window
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
+def _decode_finalize(o_ref, acc_ref, l_ref):
+    l = l_ref[...]
+    o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)).astype(
+        o_ref.dtype
+    )
+
+
 def _flash_decode_kernel(
     len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     *, scale, n_k, bk, window,
@@ -361,9 +407,7 @@ def _flash_decode_kernel(
 
     @pl.when(ik == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
+        _decode_init(acc_ref, m_ref, l_ref)
 
     # skip blocks entirely beyond the valid length (or before the window)
     run = ik * bk < cache_len
@@ -372,31 +416,13 @@ def _flash_decode_kernel(
 
     @pl.when(run)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32)           # (1*gq, d) rows=heads grp
-        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        valid = kpos < cache_len
-        if window is not None:
-            valid &= kpos >= cache_len - window
-        s = jnp.where(valid, s, NEG_INF)
-        m_prev, l_prev = m_ref[...], l_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            p, v, preferred_element_type=jnp.float32
-        )
-        m_ref[...] = m_new
+        _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      kpos_base=ik * bk, cache_len=cache_len,
+                      window=window, scale=scale)
 
     @pl.when(ik == n_k - 1)
     def _done():
-        l = l_ref[...]
-        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)).astype(
-            o_ref.dtype
-        )
+        _decode_finalize(o_ref, acc_ref, l_ref)
 
 
 @functools.partial(
@@ -453,4 +479,104 @@ def flash_decode_pallas(
         jnp.broadcast_to(cache_len.reshape(-1).astype(jnp.int32), (b,)),
         qg, kt, vt,
     )
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: block-table-indirect KV pages, gathered in the index map
+# ---------------------------------------------------------------------------
+
+def _flash_decode_paged_kernel(
+    len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, n_b, page, window,
+):
+    ib, j = pl.program_id(0), pl.program_id(2)
+    cache_len = len_ref[ib]
+
+    @pl.when(j == 0)
+    def _init():
+        _decode_init(acc_ref, m_ref, l_ref)
+
+    # skip unmapped pages and pages entirely beyond the valid prefix
+    run = (bt_ref[ib, j] >= 0) & (j * page < cache_len)
+    if window is not None:
+        run &= (j + 1) * page - 1 >= cache_len - window
+
+    @pl.when(run)
+    def _body():
+        _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      kpos_base=j * page, cache_len=cache_len,
+                      window=window, scale=scale)
+
+    @pl.when(j == n_b - 1)
+    def _done():
+        _decode_finalize(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_decode_paged_pallas(
+    q: jax.Array,            # (B, Hq, D)  one token per sequence
+    k_pages: jax.Array,      # (n_pages, page_size, Hkv, D) shared page pool
+    v_pages: jax.Array,
+    cache_len: jax.Array,    # int32 () or (B,): valid prefix incl. new token
+    block_table: jax.Array,  # (B, max_blocks) int32; -1 = unmapped
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Decode attention over the paged KV layout (contract: pager.py).
+
+    Grid (B, Hkv, max_blocks); the KV BlockSpec index maps read the
+    scalar-prefetched block table to select the physical page — unmapped
+    blocks clamp to page 0 and are skipped by ``pl.when``, so their DMA is
+    harmless and no MXU work runs.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    n_b = block_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    kt = k_pages.transpose(0, 2, 1, 3)            # (n_pages, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    qg = q.reshape(b, hkv, g, d)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,)
+    )
+
+    def kv_ix(b_, h, j, lens_ref, bt_ref):
+        return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # lens, block table
+        grid=(b, hkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_decode_paged_kernel,
+            scale=scale, n_b=n_b, page=page, window=window,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+        compiler_params=plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_decode_paged",
+    )(lens, block_table, qg, kt, vt)
     return out.reshape(b, hq, d)

@@ -31,6 +31,7 @@ from repro.kernels.eltwise import (
 from repro.kernels.flash_attention import (
     flash_attention_bwd_pallas,
     flash_attention_pallas,
+    flash_decode_paged_pallas,
     flash_decode_pallas,
 )
 from repro.kernels.gemm import gemm_pallas
@@ -430,19 +431,9 @@ def attention(
     return ref.mha_attention(q, k, v, causal=causal, window=window, scale=scale)
 
 
-def attention_decode(
-    q: jax.Array,          # (B, Hq, D)
-    k_cache: jax.Array,    # (B, Smax, Hkv, D)
-    v_cache: jax.Array,
-    cache_len: jax.Array,  # int32 () or (B,): valid prefix incl. current token
-    *,
-    window: Optional[int] = None,
-    scale: Optional[float] = None,
-) -> jax.Array:
-    if _pallas():
-        return flash_decode_pallas(
-            q, k_cache, v_cache, cache_len, window=window, scale=scale
-        )
+def _attention_decode_ref(q, k_cache, v_cache, cache_len, *,
+                          window=None, scale=None):
+    """jnp oracle: one query row per sequence against a (B,Smax,Hkv,D) cache."""
     b, hq, d = q.shape
     smax = k_cache.shape[1]
     # per-row valid lengths (continuous batching: rows at different depths)
@@ -463,6 +454,57 @@ def attention_decode(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(b, hq, d)
+
+
+def _attention_decode_paged_ref(q, k_pages, v_pages, cache_len, block_table,
+                                *, window=None, scale=None):
+    """Paged oracle: gather each row's pages into a logical (B,S,Hkv,D)
+    cache, then run the dense math.  Unmapped blocks (-1) gather page 0;
+    their garbage keys sit at ``kpos >= cache_len`` and are masked."""
+    b = q.shape[0]
+    n_pages, page, hkv, d = k_pages.shape
+    bt = jnp.clip(block_table, 0, n_pages - 1)
+    k = k_pages[bt].reshape(b, -1, hkv, d)       # (B, max_blocks*page, ...)
+    v = v_pages[bt].reshape(b, -1, hkv, d)
+    return _attention_decode_ref(q, k, v, cache_len, window=window,
+                                 scale=scale)
+
+
+def attention_decode(
+    q: jax.Array,          # (B, Hq, D)
+    k_cache: jax.Array,    # contiguous: (B, Smax, Hkv, D);
+                           # paged: (n_pages, page_size, Hkv, D) page pool
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # int32 () or (B,): valid prefix incl. current token
+    *,
+    block_table: Optional[jax.Array] = None,   # (B, max_blocks) int32, paged
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token decode attention over a KV cache.
+
+    The cache layout is the ``KVCacheLayout`` switch point: with
+    ``block_table=None`` the caches are the contiguous per-row slab; with a
+    block table they are a shared page pool (``repro.serving.pager``
+    documents the contract).  Both layouts have a reference and a Pallas
+    lowering kept in lock-step.
+    """
+    if block_table is not None:
+        if _pallas():
+            return flash_decode_paged_pallas(
+                q, k_cache, v_cache, cache_len, block_table,
+                window=window, scale=scale,
+            )
+        return _attention_decode_paged_ref(
+            q, k_cache, v_cache, cache_len, block_table,
+            window=window, scale=scale,
+        )
+    if _pallas():
+        return flash_decode_pallas(
+            q, k_cache, v_cache, cache_len, window=window, scale=scale
+        )
+    return _attention_decode_ref(q, k_cache, v_cache, cache_len,
+                                 window=window, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -552,5 +594,8 @@ register_op("attention", reference=ref.mha_attention,
             pallas=flash_attention_pallas, doc="GQA flash attention")
 register_op("attention_decode", reference=ref.mha_attention,
             pallas=flash_decode_pallas, doc="KV-cache decode attention")
+register_op("attention_decode_paged", reference=_attention_decode_paged_ref,
+            pallas=flash_decode_paged_pallas,
+            doc="block-table paged decode attention")
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
             doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)")

@@ -31,6 +31,8 @@ def _serve_engine(model, params, prompt, args) -> int:
     eng = ServingEngine(
         model, params, batch=args.batch, max_len=max_len,
         steps_per_sync=args.steps_per_sync,
+        layout=args.layout, page_size=args.page_size, n_pages=args.n_pages,
+        temperature=args.temperature, top_k=args.top_k,
     )
     rids = [
         eng.submit(prompt[b].tolist(), args.gen) for b in range(args.batch)
@@ -42,6 +44,10 @@ def _serve_engine(model, params, prompt, args) -> int:
     print(f"decoded {args.gen} tokens x batch {args.batch} "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. prefill, "
           f"{eng.steps} engine steps)")
+    s = eng.stats()
+    if "kv_pages" in s:   # attention-free archs have no pages to report
+        print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
+              f"pages ({int(s['kv_resident_bytes_peak'])} resident bytes)")
     print("sample:", outs[rids[0]][:16].tolist())
     return 0
 
@@ -83,6 +89,15 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--layout", choices=["contiguous", "paged"],
+                    default="contiguous",
+                    help="KV-cache layout (paged: pool+block-table)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size (default: batch*max_len/page_size)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 samples with per-request keys")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify decode path against teacher-forced forward")
     args = ap.parse_args(argv)
@@ -97,6 +112,10 @@ def main(argv=None) -> int:
     if cfg.family in ("dense", "moe", "ssm", "hybrid"):
         rc = _serve_engine(model, params, prompt, args)
     else:
+        if args.layout != "contiguous" or args.temperature > 0 or args.top_k:
+            print(f"warning: --layout/--temperature/--top-k are engine "
+                  f"features; the {cfg.family} fallback loop is lockstep "
+                  f"greedy over the contiguous cache and ignores them")
         rc = _serve_lockstep(model, params, prompt, args, cfg)
 
     if args.check and cfg.family in ("dense", "moe", "ssm", "hybrid"):

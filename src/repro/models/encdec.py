@@ -16,7 +16,7 @@ from repro.configs.base import ArchConfig
 from repro.distributed.sharding import shard
 from repro.kernels import ops
 from repro.models import components as C
-from repro.models.lm import _stacked, _xent
+from repro.models.lm import _cache_update, _stacked, _xent
 
 
 def init_params(cfg: ArchConfig, rng) -> Dict[str, Any]:
@@ -90,12 +90,17 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 
 # -- serving ---------------------------------------------------------------
 
-def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int):
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+                      *, per_row_pos: bool = False):
+    """Decode state.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector —
+    signature parity with ``lm.init_decode_state`` so the serving engine's
+    slot-refill path (per-row depths, masked cache writes) is not
+    attention-LM-only by accident."""
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     L = cfg.n_layers
     return {
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,) if per_row_pos else (), jnp.int32),
         "k": jnp.zeros((L, batch, max_len, hkv, hd), dt),
         "v": jnp.zeros((L, batch, max_len, hkv, hd), dt),
         # cross K/V precomputed from encoder memory at prefill
@@ -118,11 +123,19 @@ def prefill_cross_cache(cfg: ArchConfig, params, memory, state):
     return {**state, "xk": xk, "xv": xv}
 
 
-def decode_step(cfg: ArchConfig, params, state, token: jax.Array):
+def decode_step(cfg: ArchConfig, params, state, token: jax.Array,
+                *, active: Optional[jax.Array] = None):
     pos = state["pos"]
     x = params["embed"][token].astype(cfg.dtype_())
     enc_len = state["xk"].shape[2]
     hd = cfg.head_dim_
+    rope_pos = pos[..., None] if pos.ndim == 1 else pos[None]
+    # per-row depths (continuous batching): masked writes, inactive rows
+    # routed to slot -1 (dropped) — same idiom as the LM decode path
+    if active is not None and pos.ndim == 1:
+        w_idx = jnp.where(active, pos, -1)
+    else:
+        w_idx = pos
 
     def body(x, inp):
         p, ck, cv, xk, xv = inp
@@ -134,11 +147,11 @@ def decode_step(cfg: ArchConfig, params, state, token: jax.Array):
         q = C.dense(xn, pa["wq"]).reshape(b, cfg.n_heads, hd)
         kn = C.dense(xn, pa["wk"]).reshape(b, hkv, hd)
         vn = C.dense(xn, pa["wv"]).reshape(b, hkv, hd)
-        cos, sin = C.rope_freqs(cfg, pos[None])
+        cos, sin = C.rope_freqs(cfg, rope_pos)
         q = C.apply_rope(q.reshape(b, 1, -1, hd), cos, sin).reshape(b, -1, hd)
         kn = C.apply_rope(kn.reshape(b, 1, hkv, hd), cos, sin).reshape(b, hkv, hd)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, kn[:, None], pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, vn[:, None], pos, axis=1)
+        ck = _cache_update(cfg, ck, kn, w_idx)
+        cv = _cache_update(cfg, cv, vn, w_idx)
         o = ops.attention_decode(q, ck, cv, pos + 1)
         x = x + C.dense(o.reshape(b, -1), pa["wo"])
         # cross-attention to encoder memory
@@ -160,4 +173,8 @@ def decode_step(cfg: ArchConfig, params, state, token: jax.Array):
     )
     x = C.norm(cfg, params["ln_f"], x)
     logits = C.dense(x, params["lm_head"])
-    return logits, {**state, "k": ks, "v": vs, "pos": pos + 1}
+    if active is not None and pos.ndim == 1:
+        new_pos = pos + active.astype(jnp.int32)
+    else:
+        new_pos = pos + 1
+    return logits, {**state, "k": ks, "v": vs, "pos": new_pos}

@@ -206,17 +206,50 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 # ---------------------------------------------------------------------------
 
 def init_decode_state(
-    cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False
+    cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False,
+    layout: str = "contiguous", page_size: int = 16,
+    n_pages: Optional[int] = None,
 ) -> Dict[str, jax.Array]:
     """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
-    rows may sit at different sequence depths (continuous batching)."""
+    rows may sit at different sequence depths (continuous batching).
+
+    ``layout`` picks the KV-cache representation (``KVCacheLayout``):
+    ``"contiguous"`` is the dense ``(layers, B, max_len, Hkv, hd)`` slab;
+    ``"paged"`` replaces it with a page pool + per-row block table + free
+    list (see ``repro.serving.pager`` for the layout contract), so resident
+    KV memory scales with live tokens instead of ``B x max_len``.  SSM and
+    conv state is recurrent (O(1) per row) and stays contiguous under
+    either layout; only attention K/V pages.
+    """
+    if layout not in ("contiguous", "paged"):
+        raise ValueError(f"unknown KV-cache layout {layout!r}")
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     # sliding-window archs only ever need `window` cache slots (ring buffer)
     eff = min(max_len, cfg.window) if cfg.window else max_len
     pos0 = jnp.zeros((batch,) if per_row_pos else (), jnp.int32)
     state: Dict[str, jax.Array] = {"pos": pos0}
+
+    def paged_kv(stacks: int) -> Dict[str, jax.Array]:
+        # paged writes at *absolute* positions (no window ring): block ids
+        # are position // page_size, so the table covers max_len
+        from repro.serving import pager as P
+
+        max_blocks = -(-max_len // page_size)
+        pages = batch * max_blocks if n_pages is None else n_pages
+        ps = P.init_pager(pages)
+        return {
+            "kp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
+            "vp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
+            "block_table": P.init_block_table(batch, max_blocks),
+            "page_free": ps.free,
+            "page_top": ps.top,
+        }
+
     if cfg.family in ("dense", "moe"):
+        if layout == "paged":
+            state.update(paged_kv(cfg.n_layers))
+            return state
         state["k"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
         state["v"] = jnp.zeros((cfg.n_layers, batch, eff, hkv, hd), dt)
     elif cfg.family == "ssm":
@@ -236,9 +269,17 @@ def init_decode_state(
         state["conv"] = jnp.zeros(
             (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
         )
+        if layout == "paged":
+            state.update(paged_kv(g))
+            return state
         state["k"] = jnp.zeros((g, batch, eff, hkv, hd), dt)
         state["v"] = jnp.zeros((g, batch, eff, hkv, hd), dt)
     elif cfg.family == "vlm":
+        if layout == "paged":
+            raise NotImplementedError(
+                "paged KV layout: vlm's grouped self-attn cache not yet "
+                "paged (serving engine families are dense/moe/ssm/hybrid)"
+            )
         g = cfg.n_layers // cfg.cross_attn_every
         per = cfg.cross_attn_every - 1
         state["k"] = jnp.zeros((g, per, batch, eff, hkv, hd), dt)
@@ -287,18 +328,47 @@ def _cache_update(cfg: ArchConfig, cache: jax.Array, new: jax.Array,
 
 
 def decode_step(
-    cfg: ArchConfig, params, state, token: jax.Array  # (B,) int32
+    cfg: ArchConfig, params, state, token: jax.Array,  # (B,) int32
+    *, active: Optional[jax.Array] = None,             # (B,) bool
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One token for every sequence in the batch; returns (logits, state).
 
     ``state["pos"]`` may be a scalar (all rows in lockstep) or a (B,) vector
     (rows at independent depths — the continuous-batching serving engine).
+
+    ``active`` (requires per-row ``pos``) masks rows that are between
+    requests: their caches are not written, no pages are allocated, and
+    their ``pos`` does not advance.  The layout is picked by the state dict
+    itself: a ``block_table`` key means paged (see ``repro.serving.pager``
+    for the contract), otherwise the contiguous slab path runs unchanged.
     """
     pos = state["pos"]
+    paged = "block_table" in state
     x = params["embed"][token].astype(cfg.dtype_())   # (B, d)
-    idx = _cache_index(cfg, pos)
-    cache_len = jnp.minimum(pos + 1, cfg.window) if cfg.window else pos + 1
+    # paged layout uses absolute positions (window masking in attention);
+    # the contiguous layout ring-indexes sliding-window caches
+    idx = pos if paged else _cache_index(cfg, pos)
+    if cfg.window and not paged:
+        cache_len = jnp.minimum(pos + 1, cfg.window)
+    else:
+        cache_len = pos + 1
     rope_pos = pos[..., None] if pos.ndim == 1 else pos[None]
+
+    if paged:
+        from repro.serving import pager as PG
+
+        pstate, bt = PG.alloc_on_write(
+            PG.PagerState(state["page_free"], state["page_top"]),
+            state["block_table"], idx, active,
+            page_size=state["kp"].shape[2],
+        )
+        state = {**state, "page_free": pstate.free, "page_top": pstate.top,
+                 "block_table": bt}
+    # contiguous masked-write: routing inactive rows to slot -1 drops them
+    if active is not None and not paged and idx.ndim == 1:
+        w_idx = jnp.where(active, idx, -1)
+    else:
+        w_idx = idx
 
     def attn_dec(p, x, ck, cv):
         b, d = x.shape
@@ -312,9 +382,22 @@ def decode_step(
         k_new = C.apply_rope(
             k_new.reshape(b, 1, hkv, hd), cos, sin
         ).reshape(b, hkv, hd)
-        ck = _cache_update(cfg, ck, k_new, idx)
-        cv = _cache_update(cfg, cv, v_new, idx)
-        o = ops.attention_decode(q, ck, cv, jnp.asarray(cache_len, jnp.int32))
+        if paged:
+            from repro.serving import pager as PG
+
+            bt = state["block_table"]
+            ck = PG.write_page(ck, k_new, bt, idx, active)
+            cv = PG.write_page(cv, v_new, bt, idx, active)
+            o = ops.attention_decode(
+                q, ck, cv, jnp.asarray(cache_len, jnp.int32),
+                block_table=bt, window=cfg.window,
+            )
+        else:
+            ck = _cache_update(cfg, ck, k_new, w_idx)
+            cv = _cache_update(cfg, cv, v_new, w_idx)
+            o = ops.attention_decode(
+                q, ck, cv, jnp.asarray(cache_len, jnp.int32)
+            )
         return x + C.dense(o.reshape(b, -1), p["wo"]), ck, cv
 
     def mlp_dec(p, x):
@@ -325,6 +408,8 @@ def decode_step(
     def moe_dec(p, x):
         return C.moe_block(cfg, p, x[:, None, :])[:, 0, :]
 
+    kk, vk = ("kp", "vp") if paged else ("k", "v")
+
     fam = cfg.family
     if fam in ("dense", "moe"):
         def body(x, inp):
@@ -332,8 +417,8 @@ def decode_step(
             x, ck, cv = attn_dec(p["attn"], x, ck, cv)
             x = moe_dec(p["moe"], x) if "moe" in p else mlp_dec(p["mlp"], x)
             return x, (ck, cv)
-        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state["k"], state["v"]))
-        state = {**state, "k": ks, "v": vs}
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state[kk], state[vk]))
+        state = {**state, kk: ks, vk: vs}
     elif fam == "ssm":
         def body(x, inp):
             p, s_ssm, s_conv = inp
@@ -364,13 +449,13 @@ def decode_step(
             return x, (s_ssm, s_conv, ck, cv)
 
         x, (ssm, conv, ks, vs) = jax.lax.scan(
-            group, x, (params["groups"], ssm_g, conv_g, state["k"], state["v"])
+            group, x, (params["groups"], ssm_g, conv_g, state[kk], state[vk])
         )
         state = {
             **state,
             "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
             "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
-            "k": ks, "v": vs,
+            kk: ks, vk: vs,
         }
     elif fam == "vlm":
         def group(x, inp):
@@ -407,7 +492,10 @@ def decode_step(
     x = C.norm(cfg, params["ln_f"], x)
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = C.dense(x, w)
-    state = {**state, "pos": pos + 1}
+    if active is not None and pos.ndim == 1:
+        state = {**state, "pos": pos + active.astype(jnp.int32)}
+    else:
+        state = {**state, "pos": pos + 1}
     return logits, state
 
 
@@ -436,7 +524,8 @@ def reset_decode_rows(
             "reset_decode_rows needs per_row_pos=True decode state"
         )
     known = {"k", "v", "ssm", "conv", "xk", "xv"}
-    unknown = set(state) - known - {"pos"}
+    paged_keys = {"kp", "vp", "block_table", "page_free", "page_top"}
+    unknown = set(state) - known - paged_keys - {"pos"}
     if unknown:
         # fail loudly: a silently-skipped cache key would leak the previous
         # request's state into the slot's next occupant
@@ -446,6 +535,18 @@ def reset_decode_rows(
         )
     out = dict(state)
     out["pos"] = jnp.where(mask, 0, state["pos"])
+    if "block_table" in state:
+        # paged layout: a reset row *releases* its pages (the pool is global
+        # and is never zeroed — a recycled page is fully overwritten by its
+        # next owner before any masked-in read can see it)
+        from repro.serving import pager as PG
+
+        pstate, bt = PG.release_rows(
+            PG.PagerState(state["page_free"], state["page_top"]),
+            state["block_table"], mask,
+        )
+        out["block_table"] = bt
+        out["page_free"], out["page_top"] = pstate.free, pstate.top
     for key in known & set(state):
         v = state[key]
         # batch axis: (layers/groups, B, ...) except the VLM self-attn cache,

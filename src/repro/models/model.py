@@ -30,9 +30,9 @@ class Model:
 
 def build_model(cfg: ArchConfig) -> Model:
     if cfg.family == "encdec":
-        def init_decode_state(batch: int, max_len: int):
+        def init_decode_state(batch: int, max_len: int, **kw):
             return encdec.init_decode_state(
-                cfg, batch, max_len, enc_len=max(max_len // 4, 8)
+                cfg, batch, max_len, enc_len=max(max_len // 4, 8), **kw
             )
 
         def prefill_fn(params, batch):
@@ -54,8 +54,8 @@ def build_model(cfg: ArchConfig) -> Model:
             train_loss=lambda params, batch: encdec.train_loss(cfg, params, batch),
             prefill=prefill_fn,
             init_decode_state=init_decode_state,
-            decode_step=lambda params, state, token: encdec.decode_step(
-                cfg, params, state, token
+            decode_step=lambda params, state, token, **kw: encdec.decode_step(
+                cfg, params, state, token, **kw
             ),
             reset_decode_rows=no_reset,
         )
@@ -73,8 +73,8 @@ def build_model(cfg: ArchConfig) -> Model:
         init_decode_state=lambda batch, max_len, **kw: lm.init_decode_state(
             cfg, batch, max_len, **kw
         ),
-        decode_step=lambda params, state, token: lm.decode_step(
-            cfg, params, state, token
+        decode_step=lambda params, state, token, **kw: lm.decode_step(
+            cfg, params, state, token, **kw
         ),
         reset_decode_rows=lambda state, mask: lm.reset_decode_rows(
             cfg, state, mask

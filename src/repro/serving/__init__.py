@@ -6,14 +6,30 @@ from repro.serving.engine import (
     init_slots,
     serve_all,
 )
+from repro.serving.pager import (
+    PagerState,
+    alloc_on_write,
+    init_block_table,
+    init_pager,
+    pages_needed,
+    release_rows,
+    write_page,
+)
 from repro.serving.queue import Request, RequestQueue
 
 __all__ = [
+    "PagerState",
     "Request",
     "RequestQueue",
     "ServingEngine",
     "SlotState",
+    "alloc_on_write",
     "engine_step",
+    "init_block_table",
+    "init_pager",
     "init_slots",
+    "pages_needed",
+    "release_rows",
     "serve_all",
+    "write_page",
 ]

@@ -16,6 +16,13 @@ row per decode step.  Here the whole control state lives on-device:
     there is (at most) one host sync per *batch of steps*.
   * slot refill — a jitted masked-write ``admit`` with fixed shapes: new
     requests enter free rows without retracing anything.
+  * KV layout — ``layout="paged"`` swaps the dense per-row cache slab for
+    a page pool + block table + device-side free list (contract in
+    ``repro.serving.pager``).  Admission reserves pages (host arithmetic,
+    no sync), decode allocates them lazily on first write, harvest
+    releases them — so resident KV tracks live tokens, and the pool may be
+    much smaller than ``batch x max_len``.  All of it is the same
+    masked-write, fixed-shape discipline: nothing retraces.
 
 Supported families: dense / moe / ssm / hybrid (everything whose decode
 state supports per-row positions; VLM cross-caches would additionally need
@@ -47,6 +54,7 @@ class SlotState(NamedTuple):
     total_len: jax.Array   # (B,) int32: prompt_len + max_new_tokens
     progress: jax.Array    # (B,) int32: tokens fed to the model so far
     active: jax.Array      # (B,) bool: row currently serving a request
+    rng: jax.Array         # (B, 2) uint32: per-row PRNG key (sampling)
 
 
 def init_slots(batch: int, max_len: int) -> SlotState:
@@ -56,10 +64,33 @@ def init_slots(batch: int, max_len: int) -> SlotState:
         total_len=jnp.ones((batch,), jnp.int32),
         progress=jnp.zeros((batch,), jnp.int32),
         active=jnp.zeros((batch,), bool),
+        rng=jnp.zeros((batch, 2), jnp.uint32),
     )
 
 
-def engine_step(model: Model, params, mstate, slots: SlotState):
+def _sample(logits, slots: SlotState, *, temperature: float, top_k: int):
+    """Next-token choice + advanced per-row keys.
+
+    ``temperature``/``top_k`` are trace-time constants (engine config), so
+    the greedy path compiles to exactly the pre-sampling graph.  Each
+    sampling row consumes a subkey and carries the successor, so the token
+    stream of a row depends only on its admission-time key — refills and
+    batch composition cannot perturb it.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), slots.rng
+    keys = jax.vmap(jax.random.split)(slots.rng)      # (B, 2, 2)
+    carry, sub = keys[:, 0], keys[:, 1]
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    nxt = jax.vmap(jax.random.categorical)(sub, lg).astype(jnp.int32)
+    return nxt, carry
+
+
+def engine_step(model: Model, params, mstate, slots: SlotState,
+                *, temperature: float = 0.0, top_k: int = 0):
     """One decode step for every row — no host interaction.
 
     Feeding: row b feeds ``tokens[b, progress[b]]``; because generated
@@ -69,13 +100,16 @@ def engine_step(model: Model, params, mstate, slots: SlotState):
     (``progress`` reaches ``total_len - 1``: position t's feed predicts
     position t+1, and positions ``prompt_len .. total_len-1`` are
     generated).  Inactive rows still occupy their lane (fixed shapes) but
-    never advance and never write.
+    never advance, never write their caches, and — under the paged KV
+    layout — never allocate pages (the ``active`` mask flows down through
+    ``decode_step``).
     """
     b, max_len = slots.tokens.shape
     feed_idx = jnp.clip(slots.progress, 0, max_len - 1)
     tok = jnp.take_along_axis(slots.tokens, feed_idx[:, None], axis=1)[:, 0]
-    logits, mstate = model.decode_step(params, mstate, tok)
-    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits, mstate = model.decode_step(params, mstate, tok,
+                                       active=slots.active)
+    nxt, rng = _sample(logits, slots, temperature=temperature, top_k=top_k)
 
     wpos = slots.progress + 1
     # scatter the sampled token where the next feed position is generated
@@ -92,6 +126,7 @@ def engine_step(model: Model, params, mstate, slots: SlotState):
         total_len=slots.total_len,
         progress=progress,
         active=active,
+        rng=rng,
     )
 
 
@@ -101,6 +136,21 @@ class ServingEngine:
     >>> eng = ServingEngine(model, params, batch=4, max_len=64)
     >>> rid = eng.submit([3, 17, 5], max_new_tokens=16)
     >>> outs = eng.run()          # {rid: np.ndarray of generated tokens}
+
+    ``layout="paged"`` swaps the KV cache for the page-pool representation
+    (``repro.serving.pager``): admission reserves ``ceil((total_len-1)/
+    page_size)`` pages per request (host-side accounting — no device sync),
+    pages are *allocated* lazily as tokens are written, and a finished
+    row's pages return to the pool at harvest, before its slot is even
+    refilled.  Resident KV therefore scales with live tokens; ``n_pages``
+    may be far below the contiguous ``batch * max_len / page_size``.
+
+    ``temperature > 0`` enables on-device sampling (optionally top-k
+    truncated); each admitted request gets its own PRNG key derived from
+    the engine seed (host-side draw — the admission path stays sync-free),
+    so outputs are reproducible per request regardless of batch
+    composition.  The default (0) is greedy argmax, byte-identical to the
+    pre-sampling engine.
     """
 
     def __init__(
@@ -111,6 +161,12 @@ class ServingEngine:
         batch: int,
         max_len: int,
         steps_per_sync: int = 8,
+        layout: str = "contiguous",
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        seed: int = 0,
     ) -> None:
         if model.cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise NotImplementedError(
@@ -123,11 +179,33 @@ class ServingEngine:
         self.batch = batch
         self.max_len = max_len
         self.steps_per_sync = steps_per_sync
+        self.layout = layout
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
         self.queue = RequestQueue(max_len=max_len)
 
-        self._mstate = model.init_decode_state(batch, max_len,
-                                               per_row_pos=True)
+        self._mstate = model.init_decode_state(
+            batch, max_len, per_row_pos=True,
+            layout=layout, page_size=page_size, n_pages=n_pages,
+        )
+        # attention-free families have no pages regardless of the flag
+        self._paged = "block_table" in self._mstate
+        self.page_size = page_size
+        self.n_pages = (
+            int(self._mstate["page_free"].shape[0]) if self._paged else 0
+        )
+        # host-side reservation ledger: worst-case pages per occupied row.
+        # Guarantees alloc-on-write never finds the free list empty, so no
+        # device sync is needed on the admission path.
+        self._row_pages: List[int] = [0] * batch
+        self._pages_reserved = 0
+        self.peak_pages_in_use = 0
+
         self._slots = init_slots(batch, max_len)
+        # per-request key *data* is drawn host-side (no device round-trip
+        # on the admission path); rows feed it to jax.random as a raw
+        # uint32 key only when sampling is on
+        self._host_rng = np.random.Generator(np.random.Philox(seed))
         # host mirror: which request occupies each row (None = free)
         self._slot_req: List[Optional[Request]] = [None] * batch
         self.outputs: Dict[int, np.ndarray] = {}
@@ -137,12 +215,15 @@ class ServingEngine:
         def _step_n(params, mstate, slots):
             def body(_, carry):
                 ms, sl = carry
-                return engine_step(model, params, ms, sl)
+                return engine_step(model, params, ms, sl,
+                                   temperature=self.temperature,
+                                   top_k=self.top_k)
             return jax.lax.fori_loop(
                 0, steps_per_sync, body, (mstate, slots)
             )
 
-        def _admit(mstate, slots, new_tokens, new_plen, new_total, mask):
+        def _admit(mstate, slots, new_tokens, new_plen, new_total, new_rng,
+                   mask):
             mstate = model.reset_decode_rows(mstate, mask)
             return mstate, SlotState(
                 tokens=jnp.where(mask[:, None], new_tokens, slots.tokens),
@@ -150,37 +231,74 @@ class ServingEngine:
                 total_len=jnp.where(mask, new_total, slots.total_len),
                 progress=jnp.where(mask, 0, slots.progress),
                 active=slots.active | mask,
+                rng=jnp.where(mask[:, None], new_rng, slots.rng),
             )
 
         self._step_n = jax.jit(_step_n, donate_argnums=(1, 2))
         self._admit = jax.jit(_admit, donate_argnums=(0, 1))
+        # harvest-time page release (and cache scrub) for finished rows
+        self._release = jax.jit(model.reset_decode_rows, donate_argnums=(0,))
 
     # -- request intake ------------------------------------------------------
 
     def submit(self, tokens, max_new_tokens: int) -> int:
+        if self._paged:
+            need = self._pages_needed(len(tokens) + max_new_tokens)
+            if need > self.n_pages:
+                # reject now: the FIFO would otherwise starve behind a
+                # request that can never reserve enough pages
+                raise ValueError(
+                    f"request needs {need} pages > pool size {self.n_pages}"
+                )
         return self.queue.submit(tokens, max_new_tokens)
 
+    def _pages_needed(self, total_len: int) -> int:
+        from repro.serving.pager import pages_needed
+        return pages_needed(total_len, self.page_size)
+
     def _refill(self) -> int:
-        """Admit queued requests into free rows (one jitted masked write)."""
+        """Admit queued requests into free rows (one jitted masked write).
+
+        Paged layout: a request is admitted only if its worst-case page
+        count fits under the pool reservation; otherwise admission stops
+        (FIFO — no reordering past a starving request).  Contiguous
+        layout: slot availability alone gates admission, as before.
+        """
         free = [b for b, r in enumerate(self._slot_req) if r is None]
-        n = min(len(free), len(self.queue))
-        if n == 0:
+        if not free or not self.queue:
             return 0
         new_tokens = np.zeros((self.batch, self.max_len), np.int32)
         new_plen = np.ones((self.batch,), np.int32)
         new_total = np.ones((self.batch,), np.int32)
+        new_rng = np.zeros((self.batch, 2), np.uint32)
         mask = np.zeros((self.batch,), bool)
-        for b in free[:n]:
-            req = self.queue.pop()
+        n = 0
+        for b in free:
+            req = self.queue.peek()
+            if req is None:
+                break
+            need = self._pages_needed(req.total_len) if self._paged else 0
+            if self._paged and self._pages_reserved + need > self.n_pages:
+                break
+            self.queue.pop()
             self._slot_req[b] = req
+            self._row_pages[b] = need
+            self._pages_reserved += need
             new_tokens[b, : req.prompt_len] = req.tokens
             new_plen[b] = req.prompt_len
             new_total[b] = req.total_len
+            new_rng[b] = self._host_rng.integers(
+                0, 2 ** 32, size=2, dtype=np.uint32
+            )
             mask[b] = True
+            n += 1
+        if n == 0:
+            return 0
         self._mstate, self._slots = self._admit(
             self._mstate, self._slots,
             jnp.asarray(new_tokens), jnp.asarray(new_plen),
-            jnp.asarray(new_total), jnp.asarray(mask),
+            jnp.asarray(new_total), jnp.asarray(new_rng),
+            jnp.asarray(mask),
         )
         return n
 
@@ -197,11 +315,21 @@ class ServingEngine:
             self.params, self._mstate, self._slots
         )
         self.steps += self.steps_per_sync
-        # the one host sync of the cycle
-        active, tokens = jax.device_get(
-            (self._slots.active, self._slots.tokens)
-        )
+        # the one host sync of the cycle (page_top rides along — no extra)
+        if self._paged:
+            active, tokens, page_top = jax.device_get(
+                (self._slots.active, self._slots.tokens,
+                 self._mstate["page_top"])
+            )
+            self.peak_pages_in_use = max(
+                self.peak_pages_in_use, self.n_pages - int(page_top)
+            )
+        else:
+            active, tokens = jax.device_get(
+                (self._slots.active, self._slots.tokens)
+            )
         finished = 0
+        release = np.zeros((self.batch,), bool)
         for b, req in enumerate(self._slot_req):
             if req is None or active[b]:
                 continue
@@ -209,7 +337,14 @@ class ServingEngine:
             self.outputs[req.req_id] = out
             self.generated += out.size
             self._slot_req[b] = None
+            self._pages_reserved -= self._row_pages[b]
+            self._row_pages[b] = 0
+            release[b] = True
             finished += 1
+        if finished and self._paged:
+            # free-on-completion: the finished rows' pages return to the
+            # pool now, not when the slot happens to be refilled
+            self._mstate = self._release(self._mstate, jnp.asarray(release))
         return finished
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -218,12 +353,43 @@ class ServingEngine:
             self.step()
         return self.outputs
 
+    def kv_bytes_per_page(self) -> int:
+        """Bytes one page occupies across all layer slabs (K and V)."""
+        if not self._paged:
+            return 0
+        kp = self._mstate["kp"]
+        stacks, _, page, hkv, hd = kp.shape
+        return 2 * kp.dtype.itemsize * stacks * page * hkv * hd
+
+    def kv_resident_bytes(self, *, peak: bool = False) -> int:
+        """Resident KV-cache footprint: allocated bytes under the paged
+        layout (current or peak), the full slab under contiguous."""
+        if self._paged:
+            pages = (
+                self.peak_pages_in_use if peak
+                else self.n_pages - int(self._mstate["page_top"])
+            )
+            return pages * self.kv_bytes_per_page()
+        total = 0
+        for key in ("k", "v", "xk", "xv"):
+            if key in self._mstate:
+                arr = self._mstate[key]
+                total += arr.dtype.itemsize * int(np.prod(arr.shape))
+        return total
+
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "decode_steps": float(self.steps),
             "generated_tokens": float(self.generated),
             "batch": float(self.batch),
         }
+        if self._paged:
+            out["kv_pages"] = float(self.n_pages)
+            out["kv_pages_peak"] = float(self.peak_pages_in_use)
+            out["kv_resident_bytes_peak"] = float(
+                self.kv_resident_bytes(peak=True)
+            )
+        return out
 
 
 def serve_all(
@@ -234,13 +400,14 @@ def serve_all(
     batch: int,
     max_len: int,
     steps_per_sync: int = 8,
+    **engine_kwargs,
 ) -> Dict[int, np.ndarray]:
     """Convenience: submit ``[(tokens, max_new_tokens), ...]`` and drain.
 
     Returns outputs keyed by submission order (0..n-1)."""
     eng = ServingEngine(
         model, params, batch=batch, max_len=max_len,
-        steps_per_sync=steps_per_sync,
+        steps_per_sync=steps_per_sync, **engine_kwargs,
     )
     for tokens, gen in requests:
         eng.submit(tokens, gen)

@@ -1,0 +1,170 @@
+"""Device-side page allocator for the paged KV-cache layout.
+
+The paper's central lesson is that performance portability comes from
+hiding a data structure's *layout* behind one high-level abstraction so the
+same calling code targets every backend.  The KV cache has two layouts
+behind ``ops.attention_decode`` (the ``KVCacheLayout`` contract):
+
+  contiguous   ``(layers, B, max_len, Hkv, hd)`` slab — token ``p`` of row
+               ``b`` lives at ``cache[:, b, p]`` (ring-indexed by
+               ``p % window`` for sliding-window archs).  Memory is
+               ``B x max_len`` regardless of actual prompt lengths.
+  paged        a pool of fixed-size pages plus a per-row block table.
+               Memory scales with *live tokens*, not ``B x max_len``.
+
+Block-table layout contract (shared by the jnp reference path and
+``flash_decode_paged_pallas`` — keep them in lock-step):
+
+  * page pool      ``(layers, n_pages, page_size, Hkv, hd)`` — one slab per
+    layer (or per shared-attention group for the hybrid family), all slabs
+    indexed by the same page ids.
+  * block table    ``(B, max_blocks)`` int32.  Token at absolute position
+    ``p`` of row ``b`` lives in page ``block_table[b, p // page_size]`` at
+    slot ``p % page_size``.  ``-1`` marks an unmapped block; readers must
+    treat unmapped blocks as fully masked and writers must drop the write.
+  * positions are *absolute* (no ring): sliding-window archs mask old
+    tokens in attention instead of recycling slots, so a live windowed row
+    does not release pages mid-request (documented trade-off — the win is
+    cross-request reuse, which dominates at mixed prompt lengths).
+  * freed pages are recycled **without zeroing**: a new owner writes
+    positions ``0..pos`` sequentially before any read at ``kpos < pos+1``
+    can see them, so stale data is never observable.
+
+Allocator state is two device arrays (the free list as a stack), so
+allocation and release are pure ``jnp`` and run *inside* jitted steps with
+fixed shapes — the same masked-write idiom as the serving engine's slot
+refill; nothing retraces:
+
+  * ``free``  ``(n_pages,)`` int32 — entries ``[0, top)`` are free page
+    ids; entries above ``top`` are stale (owned by block tables).
+  * ``top``   ``()`` int32 — number of free pages.
+
+``alloc_on_write`` maps the block a row is about to write (pop from the
+stack top; rows ranked by batch index within one step), ``release_rows``
+pushes a completed row's pages back.  Conservation invariant (the
+hypothesis property in ``tests/test_pager.py``): the free-list prefix and
+the mapped block-table entries always partition ``0..n_pages-1`` with no
+page owned twice.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagerState(NamedTuple):
+    """Free-list stack as device arrays (a pytree; jit/donation friendly)."""
+
+    free: jax.Array  # (n_pages,) int32: free[:top] are free page ids
+    top: jax.Array   # ()        int32: number of free pages
+
+
+def init_pager(n_pages: int) -> PagerState:
+    return PagerState(
+        free=jnp.arange(n_pages, dtype=jnp.int32),
+        top=jnp.asarray(n_pages, jnp.int32),
+    )
+
+
+def init_block_table(batch: int, max_blocks: int) -> jax.Array:
+    return jnp.full((batch, max_blocks), -1, jnp.int32)
+
+
+def pages_needed(total_len: int, page_size: int) -> int:
+    """Pages a request reserves at admission (host-side accounting).
+
+    A request of ``total_len`` tokens writes cache positions
+    ``0..total_len-2`` (the feed at the last position only *predicts*, its
+    token is never cached), touching ``ceil((total_len-1)/page_size)``
+    blocks.  Admission reserves this worst case so alloc-on-write can never
+    find the free list empty mid-request.
+    """
+    return max(1, -(-(total_len - 1) // page_size))
+
+
+def alloc_on_write(
+    pager: PagerState,
+    block_table: jax.Array,          # (B, max_blocks) int32
+    idx: jax.Array,                  # () or (B,) int32: position being written
+    active: Optional[jax.Array] = None,   # (B,) bool; None = all rows
+    *,
+    page_size: int,
+) -> Tuple[PagerState, jax.Array]:
+    """Map the block covering ``idx`` for every row that needs one.
+
+    Pure ``jnp``, fixed shapes: rows needing a page are ranked by batch
+    index and pop ``free[top-1-rank]``.  A row whose block is already
+    mapped, out of range, or inactive is untouched; if the free list runs
+    dry the remaining rows simply stay unmapped (writes to unmapped blocks
+    drop — admission-time reservation prevents this for live requests).
+    """
+    b, max_blocks = block_table.shape
+    idx_b = jnp.broadcast_to(jnp.asarray(idx, jnp.int32).reshape(-1), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    blk = idx_b // page_size
+    in_range = blk < max_blocks
+    blk_c = jnp.clip(blk, 0, max_blocks - 1)
+    cur = jnp.take_along_axis(block_table, blk_c[:, None], axis=1)[:, 0]
+    need = active & in_range & (cur < 0)
+    rank = jnp.cumsum(need) - 1                     # rank among needy rows
+    grant = need & (rank < pager.top)
+    n_pages = pager.free.shape[0]
+    src = jnp.clip(pager.top - 1 - rank, 0, n_pages - 1)
+    page = jnp.where(grant, pager.free[src], cur)
+    col = jax.lax.broadcasted_iota(jnp.int32, block_table.shape, 1)
+    block_table = jnp.where(
+        grant[:, None] & (col == blk_c[:, None]), page[:, None], block_table
+    )
+    top = pager.top - jnp.sum(grant, dtype=jnp.int32)
+    return PagerState(pager.free, top), block_table
+
+
+def release_rows(
+    pager: PagerState,
+    block_table: jax.Array,   # (B, max_blocks) int32
+    mask: jax.Array,          # (B,) bool: rows whose pages return to the pool
+) -> Tuple[PagerState, jax.Array]:
+    """Push every mapped page of the masked rows back onto the free stack
+    and unmap their block-table rows.  Releasing an already-empty row is a
+    no-op, so release-on-completion and release-at-admission compose."""
+    n_pages = pager.free.shape[0]
+    give = mask[:, None] & (block_table >= 0)
+    pages = jnp.where(give, block_table, -1).reshape(-1)
+    is_page = pages >= 0
+    rank = jnp.cumsum(is_page) - 1
+    dst = jnp.where(is_page, pager.top + rank, n_pages)   # sentinel: dropped
+    free = pager.free.at[dst].set(pages, mode="drop")
+    top = pager.top + jnp.sum(is_page, dtype=jnp.int32)
+    block_table = jnp.where(mask[:, None], -1, block_table)
+    return PagerState(free, top), block_table
+
+
+def write_page(
+    pool: jax.Array,                 # (n_pages, page_size, Hkv, hd)
+    new: jax.Array,                  # (B, Hkv, hd): one token per row
+    block_table: jax.Array,          # (B, max_blocks) int32
+    idx: jax.Array,                  # () or (B,) int32: absolute position
+    active: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Write one token's K or V through the block table.
+
+    One fused scatter: each row lands at (page, slot) =
+    (``bt[b, idx//P]``, ``idx % P``); rows that are inactive, out of range,
+    or unmapped are routed to an out-of-bounds sentinel page and dropped.
+    """
+    n_pages, page_size = pool.shape[0], pool.shape[1]
+    b, max_blocks = block_table.shape
+    idx_b = jnp.broadcast_to(jnp.asarray(idx, jnp.int32).reshape(-1), (b,))
+    blk = idx_b // page_size
+    blk_c = jnp.clip(blk, 0, max_blocks - 1)
+    page = jnp.take_along_axis(block_table, blk_c[:, None], axis=1)[:, 0]
+    ok = (blk < max_blocks) & (page >= 0)
+    if active is not None:
+        ok &= active
+    page = jnp.where(ok, page, n_pages)
+    return pool.at[page, idx_b % page_size].set(
+        new.astype(pool.dtype), mode="drop"
+    )

@@ -58,6 +58,12 @@ class RequestQueue:
             self._q.append(Request(rid, toks, int(max_new_tokens)))
         return rid
 
+    def peek(self) -> Optional[Request]:
+        """Head of the queue without removing it (admission-control look:
+        the engine checks page availability *before* committing a pop)."""
+        with self._lock:
+            return self._q[0] if self._q else None
+
     def pop(self) -> Request:
         with self._lock:
             return self._q.popleft()

@@ -1,0 +1,164 @@
+"""Property tests for the device-side page allocator (`repro.serving.pager`).
+
+The layout contract's conservation law: at every moment the free-list
+prefix and the mapped block-table entries *partition* the page set — no
+page is simultaneously free and mapped, mapped by two rows, or lost.
+Interleaved alloc-on-write / release sequences exercise it: hypothesis
+generates them when installed; a seeded fallback sweep always runs, so
+the invariant is covered even where dev deps are absent.  A separate
+case checks the allocator state round-trips through jit unchanged (the
+no-retrace requirement of the serving engine).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import pager
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property sweep falls back to seeded cases
+    HAVE_HYPOTHESIS = False
+
+
+def _check_partition(ps: pager.PagerState, bt) -> None:
+    free, top = np.asarray(ps.free), int(ps.top)
+    table = np.asarray(bt)
+    n_pages = free.shape[0]
+    assert 0 <= top <= n_pages
+    free_ids = free[:top].tolist()
+    mapped = table[table >= 0].tolist()
+    assert len(set(free_ids)) == len(free_ids), "free list holds a dup"
+    assert len(set(mapped)) == len(mapped), "page mapped twice"
+    assert sorted(free_ids + mapped) == list(range(n_pages)), (
+        "free + mapped must partition the page set"
+    )
+
+
+def _run_sequence(n_pages, batch, max_blocks, page_size, ops):
+    """ops: [(is_release, row_bits)]: release returns the masked rows'
+    pages; otherwise the masked rows advance one position (alloc)."""
+    ps = pager.init_pager(n_pages)
+    bt = pager.init_block_table(batch, max_blocks)
+    pos = np.zeros((batch,), np.int32)
+    for is_release, bits in ops:
+        mask = np.array([(bits >> b) & 1 == 1 for b in range(batch)])
+        if is_release:
+            ps, bt = pager.release_rows(ps, bt, jnp.asarray(mask))
+            pos[mask] = 0
+        else:
+            ps, bt = pager.alloc_on_write(
+                ps, bt, jnp.asarray(pos), jnp.asarray(mask),
+                page_size=page_size,
+            )
+            pos[mask] += 1
+        _check_partition(ps, bt)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_alloc_release_conserves_pages_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(1, 11))
+    batch = int(rng.integers(1, 5))
+    max_blocks = int(rng.integers(1, 4))
+    page_size = int(rng.integers(1, 5))
+    ops = [
+        (bool(rng.random() < 0.3), int(rng.integers(0, 2 ** batch)))
+        for _ in range(int(rng.integers(4, 25)))
+    ]
+    _run_sequence(n_pages, batch, max_blocks, page_size, ops)
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.tuples(st.booleans(), st.integers(min_value=0, max_value=15)),
+        min_size=1, max_size=24,
+    )
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n_pages=st.integers(min_value=1, max_value=10),
+        batch=st.integers(min_value=1, max_value=4),
+        max_blocks=st.integers(min_value=1, max_value=3),
+        page_size=st.integers(min_value=1, max_value=4),
+        ops=_ops,
+    )
+    def test_alloc_release_conserves_pages_hypothesis(
+        n_pages, batch, max_blocks, page_size, ops
+    ):
+        _run_sequence(n_pages, batch, max_blocks, page_size, ops)
+
+
+def test_alloc_denial_when_pool_dry():
+    """More simultaneous writers than pages: the overflow rows stay
+    unmapped (their writes drop) and the invariant still holds."""
+    ps = pager.init_pager(2)
+    bt = pager.init_block_table(4, 1)
+    ps, bt = pager.alloc_on_write(
+        ps, bt, jnp.zeros((4,), jnp.int32), page_size=4
+    )
+    _check_partition(ps, bt)
+    assert int(ps.top) == 0
+    assert int((np.asarray(bt) >= 0).sum()) == 2
+
+
+def test_out_of_range_block_never_allocates():
+    """Positions beyond the block table's coverage must not consume pages
+    (a zombie row advancing past max_len would otherwise drain the pool)."""
+    ps = pager.init_pager(4)
+    bt = pager.init_block_table(2, 2)
+    idx = jnp.asarray([0, 2 * 3], jnp.int32)          # row 1 out of range
+    ps, bt = pager.alloc_on_write(ps, bt, idx, page_size=3)
+    _check_partition(ps, bt)
+    assert int(ps.top) == 3
+    assert np.asarray(bt)[1].tolist() == [-1, -1]
+
+
+def test_state_round_trips_through_jit():
+    """The jitted allocator must be bit-identical to the eager one (the
+    engine runs it inside `_step_n`; divergence would desync the host
+    reservation ledger from device state)."""
+    jalloc = jax.jit(pager.alloc_on_write, static_argnames=("page_size",))
+    jfree = jax.jit(pager.release_rows)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        ps_e = ps_j = pager.init_pager(6)
+        bt_e = bt_j = pager.init_block_table(3, 2)
+        pos = np.zeros((3,), np.int32)
+        for _ in range(10):
+            if rng.random() < 0.3:
+                mask = jnp.asarray(rng.random(3) < 0.5)
+                ps_e, bt_e = pager.release_rows(ps_e, bt_e, mask)
+                ps_j, bt_j = jfree(ps_j, bt_j, mask)
+                pos[np.asarray(mask)] = 0
+            else:
+                act = jnp.asarray(rng.random(3) < 0.8)
+                ps_e, bt_e = pager.alloc_on_write(
+                    ps_e, bt_e, jnp.asarray(pos), act, page_size=2
+                )
+                ps_j, bt_j = jalloc(ps_j, bt_j, jnp.asarray(pos), act,
+                                    page_size=2)
+                pos[np.asarray(act)] += 1
+            np.testing.assert_array_equal(np.asarray(bt_e), np.asarray(bt_j))
+            np.testing.assert_array_equal(
+                np.asarray(ps_e.free)[: int(ps_e.top)],
+                np.asarray(ps_j.free)[: int(ps_j.top)],
+            )
+            assert int(ps_e.top) == int(ps_j.top)
+            _check_partition(ps_j, bt_j)
+    assert jalloc._cache_size() == 1
+    assert jfree._cache_size() == 1
+
+
+def test_pages_needed_matches_write_pattern():
+    """Admission reserves exactly the blocks the decode loop touches: a
+    request of total_len T writes positions 0..T-2."""
+    for page_size in (1, 2, 8):
+        for total in (1, 2, 7, 8, 9, 17):
+            touched = {p // page_size for p in range(max(total - 1, 1))}
+            assert pager.pages_needed(total, page_size) == len(touched), (
+                total, page_size
+            )

@@ -93,6 +93,162 @@ def test_decode_matches_teacher_forced(arch, backend):
         assert_decode_matches_teacher_forced(model, params, prompt, 16)
 
 
+PAGED_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_decode_matches_contiguous(arch, backend):
+    """The KVCacheLayout contract: swapping the cache representation may
+    not change a single token — same prompts, same seeds, dense/moe/hybrid,
+    including rows admitted mid-stream at different depths (4 requests
+    through 2 slots with heterogeneous prompt lengths)."""
+    cfg, model, params = _model_params(arch)
+    rng = np.random.default_rng(11)
+    reqs = [
+        (rng.integers(0, cfg.vocab_size, size=int(rng.integers(2, 9))).tolist(),
+         3)
+        for _ in range(4)
+    ]
+    outs = {}
+    with use_backend(backend):
+        for layout in ("contiguous", "paged"):
+            kw = {"page_size": 4} if layout == "paged" else {}
+            eng = ServingEngine(model, params, batch=2, max_len=16,
+                                steps_per_sync=3, layout=layout, **kw)
+            rids = [eng.submit(t, g) for t, g in reqs]
+            got = eng.run()
+            outs[layout] = [got[r].tolist() for r in rids]
+            assert eng._step_n._cache_size() == 1
+            assert eng._admit._cache_size() == 1
+    assert outs["paged"] == outs["contiguous"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_windowed_arch_through_engine_both_layouts(backend):
+    """Sliding-window attention through the engine: the contiguous layout
+    ring-indexes a window-sized cache, the paged layout keeps absolute
+    positions and masks in attention — both must equal each other *and*
+    the isolated single-request decode once the window binds (prompts
+    longer than window=5).  capacity_factor is lifted to n_experts so the
+    MoE rows are batch-composition-independent (see engine docstring)."""
+    cfg = _cfg("mixtral-8x7b")
+    cfg = dataclasses.replace(cfg, window=5,
+                              capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    reqs = [
+        (rng.integers(0, cfg.vocab_size, size=int(rng.integers(6, 11))).tolist(),
+         4)
+        for _ in range(4)
+    ]
+    max_len = 16
+    outs = {}
+    with use_backend(backend):
+        for layout in ("contiguous", "paged"):
+            kw = {"page_size": 4} if layout == "paged" else {}
+            eng = ServingEngine(model, params, batch=2, max_len=max_len,
+                                steps_per_sync=3, layout=layout, **kw)
+            rids = [eng.submit(t, g) for t, g in reqs]
+            got = eng.run()
+            outs[layout] = [got[r].tolist() for r in rids]
+        assert outs["paged"] == outs["contiguous"]
+        for (toks, g), got in zip(reqs, outs["contiguous"]):
+            want = _isolated_decode(model, params, toks, g, max_len)
+            np.testing.assert_array_equal(np.asarray(got, np.int32), want)
+
+
+def test_paged_pool_overflows_dense_budget():
+    """Serve a mix whose prompt lengths vary 8x through a page pool *half*
+    the ``B x max_len`` slab: reservation admission + free-on-completion
+    must recycle pages (total demand 16 pages > pool 12), outputs must
+    stay token-identical, and every page must be back on the free list at
+    drain (conservation across the whole serve)."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    batch, max_len, page = 4, 48, 8
+    n_pages = 12                                    # 96 token-slots
+    assert n_pages * page < batch * max_len         # would overflow the slab
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i in range(8):
+        plen = 2 if i % 2 == 0 else 16              # 8x spread
+        gen = 6 if i % 2 == 0 else 8
+        reqs.append(
+            (rng.integers(0, cfg.vocab_size, size=plen).tolist(), gen)
+        )
+    from repro.serving.pager import pages_needed
+    total_demand = sum(pages_needed(len(t) + g, page) for t, g in reqs)
+    assert total_demand > n_pages                   # reuse is mandatory
+    outs = {}
+    for layout, kw in (
+        ("contiguous", {}),
+        ("paged", {"page_size": page, "n_pages": n_pages}),
+    ):
+        eng = ServingEngine(model, params, batch=batch, max_len=max_len,
+                            steps_per_sync=4, layout=layout, **kw)
+        rids = [eng.submit(t, g) for t, g in reqs]
+        got = eng.run()
+        outs[layout] = [got[r].tolist() for r in rids]
+    assert outs["paged"] == outs["contiguous"]
+    assert 0 < eng.peak_pages_in_use <= n_pages
+    # free-on-completion: after drain the pool is whole again
+    assert int(eng._mstate["page_top"]) == n_pages
+    assert (np.asarray(eng._mstate["block_table"]) == -1).all()
+    # a request larger than the whole pool is rejected up front (it could
+    # never reserve; admitting it would starve the FIFO forever) — even
+    # when it fits max_len
+    tiny = ServingEngine(model, params, batch=2, max_len=16,
+                         layout="paged", page_size=4, n_pages=2)
+    with pytest.raises(ValueError):
+        tiny.submit([1, 2, 3, 4], 8)        # 3 pages > pool of 2
+
+
+def test_sampling_reproducible_per_seed():
+    """temperature/top-k sampling: per-request keys split on admission
+    make outputs a function of the engine seed alone; greedy stays the
+    default (parity tests above run the argmax path untouched)."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    reqs = [([3, 5, 7], 5), ([11, 2], 5), ([4, 4, 4, 4], 5)]
+
+    def run(**kw):
+        eng = ServingEngine(model, params, batch=2, max_len=12,
+                            steps_per_sync=2, **kw)
+        rids = [eng.submit(t, g) for t, g in reqs]
+        got = eng.run()
+        return eng, [got[r].tolist() for r in rids]
+
+    _, greedy = run()
+    eng, a = run(temperature=1.0, top_k=8, seed=42)
+    _, b = run(temperature=1.0, top_k=8, seed=42)
+    _, c = run(temperature=1.0, top_k=8, seed=7)
+    assert a == b                       # same seed -> same tokens
+    assert a != greedy or c != greedy   # sampling actually samples
+    assert eng._step_n._cache_size() == 1
+    assert eng._admit._cache_size() == 1
+
+
+def test_encdec_per_row_pos_state():
+    """`encdec.init_decode_state` accepts per_row_pos like the LM family:
+    (B,) positions decode to the same logits as the scalar-pos path when
+    rows are in lockstep (the slot-refill contract's precondition)."""
+    cfg = _cfg("seamless-m4t-medium")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0,
+                              cfg.vocab_size)
+    s_sc = model.init_decode_state(2, 8)
+    s_pr = model.init_decode_state(2, 8, per_row_pos=True)
+    assert s_pr["pos"].shape == (2,)
+    for j in range(toks.shape[1]):
+        l_sc, s_sc = model.decode_step(params, s_sc, toks[:, j])
+        l_pr, s_pr = model.decode_step(params, s_pr, toks[:, j])
+    np.testing.assert_allclose(
+        np.asarray(l_pr, np.float32), np.asarray(l_sc, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
 def test_request_queue_validation():
     q = RequestQueue(max_len=8)
     with pytest.raises(ValueError):
@@ -104,7 +260,10 @@ def test_request_queue_validation():
     a = q.submit([1, 2, 3], 4)
     b = q.submit([4], 2)
     assert (a, b) == (0, 1) and len(q) == 2
+    assert q.peek().req_id == 0 and len(q) == 2   # peek must not consume
     assert q.pop().req_id == 0
+    q.pop()
+    assert q.peek() is None
 
 
 def test_engine_rejects_unsupported_family():
