@@ -17,6 +17,11 @@ A second ablation compares the two KV-cache layouts on an attention arch
 at mixed prompt lengths (paged pool capped at half the contiguous slab):
 gen tok/s and peak resident KV bytes, outputs token-identical.
 
+A third ablation measures *prompt ingestion*: chunked prefill
+(``--prefill-chunk`` tokens per step) vs token-by-token, long prompts
+under both layouts — prefill tok/s and mean TTFT, outputs token-identical
+across all four engines.
+
     PYTHONPATH=src python -m benchmarks.serve_engine [--quick]
 """
 from __future__ import annotations
@@ -109,19 +114,21 @@ def run_engine(model, params, reqs, batch, max_len, steps_per_sync,
     eng = ServingEngine(model, params, batch=batch, max_len=max_len,
                         steps_per_sync=steps_per_sync, **engine_kwargs)
     # compile outside the timed region (a server compiles once at startup):
-    # a throwaway workload drives admit + fused-step traces once
+    # a throwaway workload drives admit + fused-step (+ prefill) traces once
     for _ in range(batch):
         eng.submit([1, 2, 3], 2)
     eng.run()
-    eng.outputs.clear()
-    eng.steps = eng.generated = 0
-    eng.peak_pages_in_use = 0
+    eng.reset_stats()
 
     rids = [eng.submit(t, g) for t, g in reqs]
     t0 = time.perf_counter()
     outs = eng.run()
     dt = time.perf_counter() - t0
+    ttft = [eng.ttft[r] for r in rids if r in eng.ttft]
     return {"tok_s": eng.generated / dt, "steps": eng.steps, "seconds": dt,
+            "prefill_steps": eng.prefill_steps,
+            "prefill_tok_s": eng.prompt_tokens / dt,
+            "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else float("nan"),
             "kv_bytes": eng.kv_resident_bytes(peak=True),
             "outputs": {i: outs[r].tolist() for i, r in enumerate(rids)}}
 
@@ -171,6 +178,67 @@ def compare_layouts(args):
     return rows
 
 
+def compare_prefill(args):
+    """Chunked vs token-by-token prompt ingestion (the TTFT ablation).
+
+    Long prompts, short generations: the workload the chunked-prefill path
+    exists for.  Four engines — chunk 1 and chunk C under each KV layout —
+    serve the same requests; outputs must be token-identical everywhere,
+    and the table reports prompt-ingestion tok/s plus mean TTFT so the
+    ``ceil(P/C)``-steps win is visible as wall-clock, not step counts.
+
+    The smoke archs carry a toy 128-entry vocab, which erases the LM-head
+    GEMM a real server pays on *every* token-by-token prompt step (the
+    chunked path computes logits once per chunk).  ``--prefill-vocab``
+    restores a serving-scale vocabulary for this ablation so the baseline
+    is the workload the optimization targets."""
+    import dataclasses
+
+    cfg = get_arch(args.kv_arch)
+    if args.prefill_vocab:
+        cfg = dataclasses.replace(cfg, vocab_size=args.prefill_vocab)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    plen = args.prompt_len
+    max_len = plen + args.prefill_gen + 1
+    rng = np.random.default_rng(3)
+    reqs = [
+        (rng.integers(0, cfg.vocab_size, size=plen).tolist(),
+         args.prefill_gen)
+        for _ in range(args.prefill_requests)
+    ]
+    chunks = sorted({1, args.prefill_chunk})    # chunk 1 = the baseline
+    rows = {}
+    for layout in ("contiguous", "paged"):
+        kw = {"layout": layout}
+        if layout == "paged":
+            kw.update(page_size=args.page_size)
+        for pc in chunks:
+            rows[(layout, pc)] = run_engine(
+                model, params, reqs, args.batch, max_len,
+                args.steps_per_sync, prefill_chunk=pc, **kw,
+            )
+    base = rows[("contiguous", 1)]["outputs"]
+    for key, r in rows.items():
+        assert r["outputs"] == base, f"{key}: outputs diverge from baseline"
+    print(f"arch={args.kv_arch} requests={args.prefill_requests} "
+          f"batch={args.batch} prompt_len={plen} gen={args.prefill_gen} "
+          f"chunk={args.prefill_chunk}")
+    print(f"  {'layout':<12} {'chunk':>5} {'prefill tok/s':>13} "
+          f"{'mean TTFT ms':>12} {'gen tok/s':>10} {'steps':>6} {'pf':>4}")
+    for (layout, pc), r in rows.items():
+        print(f"  {layout:<12} {pc:>5d} {r['prefill_tok_s']:>13.1f} "
+              f"{r['ttft_ms']:>12.1f} {r['tok_s']:>10.1f} "
+              f"{r['steps']:>6d} {r['prefill_steps']:>4d}")
+    if args.prefill_chunk > 1:
+        for layout in ("contiguous", "paged"):
+            speedup = (rows[(layout, args.prefill_chunk)]["prefill_tok_s"]
+                       / rows[(layout, 1)]["prefill_tok_s"])
+            print(f"  {layout}: prompt-ingestion speedup "
+                  f"{speedup:.2f}x (outputs token-identical)")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b-smoke")
@@ -181,14 +249,32 @@ def main(argv=None):
     ap.add_argument("--kv-arch", default="qwen2.5-3b-smoke",
                     help="attention arch for the paged-vs-contiguous ablation")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt tokens per chunked-prefill step in the "
+                         "prefill ablation (1 disables chunking)")
+    ap.add_argument("--prompt-len", type=int, default=256,
+                    help="prompt length for the prefill ablation")
+    ap.add_argument("--prefill-gen", type=int, default=8)
+    ap.add_argument("--prefill-requests", type=int, default=6)
+    ap.add_argument("--prefill-vocab", type=int, default=8192,
+                    help="vocab size for the prefill ablation (0 keeps the "
+                         "arch's own; smoke archs' 128 hides the per-step "
+                         "LM-head cost chunking amortizes)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal sizes: CI driver-rot check, not a benchmark")
     args = ap.parse_args(argv)
     if args.quick:
         args.requests, args.gen = 8, 16
+        args.prompt_len, args.prefill_chunk = 64, 16
+        args.prefill_requests = 4
     if args.smoke:
         args.requests, args.gen, args.batch = 3, 6, 2
+        args.prompt_len = 20
+        # keep the chunked path live (>1) at a smoke-sized width
+        args.prefill_chunk = max(2, min(args.prefill_chunk, 8))
+        args.prefill_requests, args.prefill_gen = 3, 4
+        args.prefill_vocab = min(args.prefill_vocab, 512)
 
     cfg = get_arch(args.arch)
     model = build_model(cfg)
@@ -217,7 +303,11 @@ def main(argv=None):
     print()
     print("-- KV layout: paged vs contiguous (mixed prompt lengths) --")
     layouts = compare_layouts(args)
-    return {"host": host, "engine": eng, "layouts": layouts}
+    print()
+    print("-- Chunked prefill: prompt ingestion + TTFT (both layouts) --")
+    prefill = compare_prefill(args)
+    return {"host": host, "engine": eng, "layouts": layouts,
+            "prefill": prefill}
 
 
 if __name__ == "__main__":

@@ -46,6 +46,9 @@ def main():
                          "tokens, not batch*max_len)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens ingested per engine step (chunked "
+                         "prefill; 1 = token-by-token)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -58,14 +61,19 @@ def main():
     eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
                         steps_per_sync=args.steps_per_sync,
                         layout=args.layout, page_size=args.page_size,
-                        n_pages=args.n_pages)
+                        n_pages=args.n_pages,
+                        prefill_chunk=args.prefill_chunk)
     rids = [eng.submit(toks, gen) for toks, gen in reqs]
 
     t0 = time.time()
     outs = eng.run()
     dt = time.time() - t0
     print(f"served {args.requests} requests in {dt:.2f}s "
-          f"({eng.steps} decode steps, {eng.generated/dt:.1f} gen tok/s)")
+          f"({eng.steps} decode + {eng.prefill_steps} prefill steps, "
+          f"{eng.generated/dt:.1f} gen tok/s)")
+    if eng.ttft:
+        print(f"mean TTFT {1e3 * sum(eng.ttft.values()) / len(eng.ttft):.1f} "
+              f"ms (prefill chunk {args.prefill_chunk})")
     s = eng.stats()
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "

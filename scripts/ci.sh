@@ -4,8 +4,10 @@
 #
 #   ./scripts/ci.sh            tier-1 test suite
 #   ./scripts/ci.sh --smoke    benchmark-driver smoke: a few serving-engine
-#                              steps under PALLAS (interpret off-TPU), so
-#                              the benchmark entry points can't silently rot
+#                              steps under PALLAS (interpret off-TPU) —
+#                              including the chunked-prefill ablation under
+#                              both KV layouts — so the benchmark entry
+#                              points can't silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,8 +15,10 @@ python -m pip install -q -r requirements-dev.txt ||
     echo "warning: dev-dep install failed (offline?); property tests will skip"
 
 if [[ "${1:-}" == "--smoke" ]]; then
+    # --smoke shrinks every section but keeps prefill chunking > 1, so the
+    # chunked path (kernel + pager alloc_range + scheduler) really runs
     REPRO_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m benchmarks.serve_engine --smoke
+        python -m benchmarks.serve_engine --smoke --prefill-chunk 8
     exit 0
 fi
 

@@ -20,6 +20,11 @@ Kernels:
                  BlockSpec index map (the paper's "keep layout conversion
                  out of the compute loop" lesson: the gather costs an index
                  lookup, never a materialized copy of the cache).
+  _flash_prefill_chunk[_paged]: chunked prompt ingestion — a (C, hd)
+                 query block per row attends causally to the cache plus the
+                 in-chunk tokens (written before the call), with per-row
+                 ``start``/``width`` scalars; the paged variant reuses the
+                 decode block-table indirection.
 
 Causal/window block skipping uses pl.when so fully-masked tiles do no MXU
 work (they still schedule — negligible next to the saved matmuls).
@@ -369,6 +374,19 @@ def _decode_init(acc_ref, m_ref, l_ref):
     l_ref[...] = jnp.zeros_like(l_ref)
 
 
+def _online_update(s, v, acc_ref, m_ref, l_ref):
+    """One online-softmax accumulation of a masked score tile ``s``."""
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
 def _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
                   kpos_base, cache_len, window, scale):
     q = q_ref[0, 0].astype(jnp.float32)           # (g, d) rows = heads grp
@@ -380,15 +398,7 @@ def _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
     if window is not None:
         valid &= kpos >= cache_len - window
     s = jnp.where(valid, s, NEG_INF)
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-        p, v, preferred_element_type=jnp.float32
-    )
-    m_ref[...] = m_new
+    _online_update(s, v, acc_ref, m_ref, l_ref)
 
 
 def _decode_finalize(o_ref, acc_ref, l_ref):
@@ -580,3 +590,245 @@ def flash_decode_paged_pallas(
         name="repro_flash_decode_paged",
     )(lens, block_table, qg, kt, vt)
     return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: a (C, hd) query block per row vs the already-written cache
+# ---------------------------------------------------------------------------
+
+# Multi-token prompt ingestion.  The chunk's K/V are written into the cache
+# *before* attention runs (same order as decode, which writes the current
+# token first), so a grid step only needs the causal mask to separate
+# in-chunk from already-cached keys.  The query block folds the GQA group
+# and the chunk into one matmul: row r = gq * C + i is (head-in-group gq,
+# chunk offset i) at absolute position start + i.  Padding rows (i >=
+# width) alias the last real position so every softmax row keeps at least
+# one finite score — their outputs are garbage-but-finite and the caller
+# discards them (NaNs here would leak into real tokens through MoE
+# dispatch buffers).
+
+def _prefill_chunk_mask(s, *, kpos_base, start, width, c, window):
+    i = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % c
+    qpos = start + jnp.minimum(i, width - 1)
+    kpos = kpos_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = kpos <= qpos
+    if window is not None:
+        valid &= kpos > qpos - window
+    return jnp.where(valid, s, NEG_INF)
+
+
+def _prefill_chunk_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                         kpos_base, start, width, c, window, scale):
+    q = q_ref[0, 0].astype(jnp.float32)           # (g*c, d)
+    k = k_ref[0, 0].astype(jnp.float32)           # (tile, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = _prefill_chunk_mask(s, kpos_base=kpos_base, start=start,
+                            width=width, c=c, window=window)
+    _online_update(s, v, acc_ref, m_ref, l_ref)
+
+
+def _flash_prefill_chunk_kernel(
+    start_ref, w_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, n_k, bk, c, window,
+):
+    ib, ik = pl.program_id(0), pl.program_id(2)
+    start = start_ref[ib]
+    width = w_ref[ib]
+
+    @pl.when(ik == 0)
+    def _init():
+        _decode_init(acc_ref, m_ref, l_ref)
+
+    # the last key any chunk query may see is start + width - 1; the first
+    # query sits at start, so a window cuts tiles before start - window
+    run = ik * bk <= start + width - 1
+    if window is not None:
+        run &= (ik + 1) * bk - 1 > start - window
+
+    @pl.when(run)
+    def _body():
+        _prefill_chunk_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                             kpos_base=ik * bk, start=start, width=width,
+                             c=c, window=window, scale=scale)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        _decode_finalize(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_prefill_chunk_pallas(
+    q: jax.Array,        # (B, C, Hq, D)  C prompt tokens per sequence
+    k_cache: jax.Array,  # (B, Smax, Hkv, D) — chunk K/V already written
+    v_cache: jax.Array,
+    start: jax.Array,    # int32 () or (B,): absolute position of chunk tok 0
+    width: jax.Array,    # int32 () or (B,): real tokens in the chunk (1..C)
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Chunked-prefill attention over the contiguous cache layout.
+
+    Query i of row b attends causally to absolute positions
+    ``<= start[b] + i`` (window-limited when set); rows ``i >= width[b]``
+    are padding and return finite garbage.  Kept in lock-step with the
+    jnp oracle in ``repro.kernels.ops``.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, c, hq, d = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_prefill", bk=512)
+    bk = min(t["bk"], smax)
+    kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), bk, 2)   # (B,Hkv,S',D)
+    vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), bk, 2)
+    n_k = kt.shape[2] // bk
+    # fold (group head, chunk offset) into the matmul's row axis
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hkv, g * c, d)
+    grid = (b, hkv, n_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_prefill_chunk_kernel,
+            scale=scale, n_k=n_k, bk=bk, c=c, window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=plc.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=plc.MemorySpace.SMEM),
+            pl.BlockSpec((1, 1, g * c, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * c, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * c, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * c, d), jnp.float32),
+            pltpu.VMEM((g * c, 1), jnp.float32),
+            pltpu.VMEM((g * c, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_prefill_chunk",
+    )(
+        jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,)),
+        jnp.broadcast_to(jnp.asarray(width, jnp.int32).reshape(-1), (b,)),
+        qg, kt, vt,
+    )
+    out = out.reshape(b, hkv, g, c, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, c, hq, d)
+
+
+def _flash_prefill_chunk_paged_kernel(
+    start_ref, w_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale, n_b, page, c, window,
+):
+    ib, j = pl.program_id(0), pl.program_id(2)
+    start = start_ref[ib]
+    width = w_ref[ib]
+
+    @pl.when(j == 0)
+    def _init():
+        _decode_init(acc_ref, m_ref, l_ref)
+
+    # skip unmapped pages and pages entirely beyond the chunk's last key
+    run = (bt_ref[ib, j] >= 0) & (j * page <= start + width - 1)
+    if window is not None:
+        run &= (j + 1) * page - 1 > start - window
+
+    @pl.when(run)
+    def _body():
+        _prefill_chunk_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                             kpos_base=j * page, start=start, width=width,
+                             c=c, window=window, scale=scale)
+
+    @pl.when(j == n_b - 1)
+    def _done():
+        _decode_finalize(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_prefill_chunk_paged_pallas(
+    q: jax.Array,            # (B, C, Hq, D)  C prompt tokens per sequence
+    k_pages: jax.Array,      # (n_pages, page_size, Hkv, D) shared page pool
+    v_pages: jax.Array,
+    start: jax.Array,        # int32 () or (B,): absolute pos of chunk tok 0
+    width: jax.Array,        # int32 () or (B,): real tokens in the chunk
+    block_table: jax.Array,  # (B, max_blocks) int32; -1 = unmapped
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Chunked-prefill attention over the paged layout (contract: pager.py).
+
+    Same scalar-prefetch indirection as ``flash_decode_paged_pallas`` — the
+    block table picks the physical page in the BlockSpec index map — with
+    the multi-row causal chunk mask of ``flash_prefill_chunk_pallas``.
+    Every block covering ``start .. start+width-1`` must be mapped before
+    the call (``pager.alloc_range``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, c, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    n_b = block_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    kt = k_pages.transpose(0, 2, 1, 3)            # (n_pages, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hkv, g * c, d)
+    starts = jnp.broadcast_to(
+        jnp.asarray(start, jnp.int32).reshape(-1), (b,)
+    )
+    widths = jnp.broadcast_to(
+        jnp.asarray(width, jnp.int32).reshape(-1), (b,)
+    )
+
+    def kv_ix(b_, h, j, starts_ref, w_ref, bt_ref):
+        return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                    # starts, widths, table
+        grid=(b, hkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * c, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g * c, d), lambda b_, h, j, *_: (b_, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g * c, d), jnp.float32),
+            pltpu.VMEM((g * c, 1), jnp.float32),
+            pltpu.VMEM((g * c, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_prefill_chunk_paged_kernel,
+            scale=scale, n_b=n_b, page=page, c=c, window=window,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * c, d), q.dtype),
+        interpret=interpret,
+        compiler_params=plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_prefill_chunk_paged",
+    )(starts, widths, block_table, qg, kt, vt)
+    out = out.reshape(b, hkv, g, c, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, c, hq, d)

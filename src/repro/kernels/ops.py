@@ -33,6 +33,8 @@ from repro.kernels.flash_attention import (
     flash_attention_pallas,
     flash_decode_paged_pallas,
     flash_decode_pallas,
+    flash_prefill_chunk_paged_pallas,
+    flash_prefill_chunk_pallas,
 )
 from repro.kernels.gemm import gemm_pallas
 from repro.kernels.im2col import col2im_pallas, im2col_pallas
@@ -507,6 +509,95 @@ def attention_decode(
                                  window=window, scale=scale)
 
 
+def _attention_prefill_chunk_ref(q, k_cache, v_cache, start, width, *,
+                                 window=None, scale=None):
+    """jnp oracle: C query rows per sequence vs a (B,Smax,Hkv,D) cache.
+
+    Query i of row b sits at absolute position ``start[b] + i`` and sees
+    keys at ``kpos <= start[b] + i`` (window-limited when set).  Padding
+    rows (``i >= width[b]``) alias the last real position so every softmax
+    row keeps at least one finite score — garbage-but-finite outputs the
+    caller discards (a NaN would leak into real tokens via MoE dispatch).
+    """
+    b, c, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    starts = jnp.broadcast_to(
+        jnp.asarray(start, jnp.int32).reshape(-1), (b,)
+    )
+    widths = jnp.broadcast_to(
+        jnp.asarray(width, jnp.int32).reshape(-1), (b,)
+    )
+    i = jnp.arange(c, dtype=jnp.int32)[None, :]
+    qpos = starts[:, None] + jnp.minimum(i, widths[:, None] - 1)  # (B, C)
+    kpos = jnp.arange(smax)
+    mask = kpos[None, None, :] <= qpos[:, :, None]                # (B, C, S)
+    if window is not None:
+        mask &= kpos[None, None, :] > qpos[:, :, None] - window
+    qg = q.reshape(b, c, hkv, g, d)
+    s = jnp.einsum(
+        "bchgd,bshd->bchgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32))
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bchgs,bshd->bchgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, c, hq, d)
+
+
+def _attention_prefill_chunk_paged_ref(q, k_pages, v_pages, start, width,
+                                       block_table, *, window=None,
+                                       scale=None):
+    """Paged oracle: gather each row's pages into a logical cache, then run
+    the dense chunk math.  Unmapped blocks (-1) gather page 0; their
+    garbage keys sit past ``start + width - 1`` and are masked."""
+    b = q.shape[0]
+    n_pages, page, hkv, d = k_pages.shape
+    bt = jnp.clip(block_table, 0, n_pages - 1)
+    k = k_pages[bt].reshape(b, -1, hkv, d)
+    v = v_pages[bt].reshape(b, -1, hkv, d)
+    return _attention_prefill_chunk_ref(q, k, v, start, width,
+                                        window=window, scale=scale)
+
+
+def attention_prefill_chunk(
+    q: jax.Array,          # (B, C, Hq, D): C prompt tokens per sequence
+    k_cache: jax.Array,    # contiguous: (B, Smax, Hkv, D);
+                           # paged: (n_pages, page_size, Hkv, D) page pool
+    v_cache: jax.Array,
+    start: jax.Array,      # int32 () or (B,): absolute pos of chunk token 0
+    width: jax.Array,      # int32 () or (B,): real tokens in the chunk
+    *,
+    block_table: Optional[jax.Array] = None,   # (B, max_blocks) int32, paged
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill attention over a KV cache.
+
+    The multi-token sibling of ``attention_decode`` and the same
+    ``KVCacheLayout`` switch point: ``block_table=None`` selects the
+    contiguous per-row slab, a block table selects the shared page pool
+    (contract in ``repro.serving.pager``).  The chunk's own K/V must be in
+    the cache already; causality inside the chunk is pure masking.  Both
+    layouts have a reference and a Pallas lowering kept in lock-step.
+    """
+    if block_table is not None:
+        if _pallas():
+            return flash_prefill_chunk_paged_pallas(
+                q, k_cache, v_cache, start, width, block_table,
+                window=window, scale=scale,
+            )
+        return _attention_prefill_chunk_paged_ref(
+            q, k_cache, v_cache, start, width, block_table,
+            window=window, scale=scale,
+        )
+    if _pallas():
+        return flash_prefill_chunk_pallas(
+            q, k_cache, v_cache, start, width, window=window, scale=scale
+        )
+    return _attention_prefill_chunk_ref(q, k_cache, v_cache, start, width,
+                                        window=window, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD scan — pallas fwd; bwd falls back to oracle vjp (recorded)
 # ---------------------------------------------------------------------------
@@ -597,5 +688,12 @@ register_op("attention_decode", reference=ref.mha_attention,
 register_op("attention_decode_paged", reference=_attention_decode_paged_ref,
             pallas=flash_decode_paged_pallas,
             doc="block-table paged decode attention")
+register_op("attention_prefill_chunk", reference=_attention_prefill_chunk_ref,
+            pallas=flash_prefill_chunk_pallas,
+            doc="chunked-prefill attention (C-token query block vs cache)")
+register_op("attention_prefill_chunk_paged",
+            reference=_attention_prefill_chunk_paged_ref,
+            pallas=flash_prefill_chunk_paged_pallas,
+            doc="block-table paged chunked-prefill attention")
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
             doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)")

@@ -33,6 +33,7 @@ def _serve_engine(model, params, prompt, args) -> int:
         steps_per_sync=args.steps_per_sync,
         layout=args.layout, page_size=args.page_size, n_pages=args.n_pages,
         temperature=args.temperature, top_k=args.top_k,
+        prefill_chunk=args.prefill_chunk,
     )
     rids = [
         eng.submit(prompt[b].tolist(), args.gen) for b in range(args.batch)
@@ -43,7 +44,11 @@ def _serve_engine(model, params, prompt, args) -> int:
     total_tokens = args.batch * (args.prompt_len + args.gen)
     print(f"decoded {args.gen} tokens x batch {args.batch} "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. prefill, "
-          f"{eng.steps} engine steps)")
+          f"{eng.steps} decode + {eng.prefill_steps} prefill steps)")
+    if eng.ttft:
+        ttft = sum(eng.ttft.values()) / len(eng.ttft)
+        print(f"mean TTFT {1e3 * ttft:.1f} ms "
+              f"(prefill chunk {args.prefill_chunk})")
     s = eng.stats()
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
@@ -98,6 +103,9 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request keys")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens ingested per engine step (chunked "
+                         "prefill; 1 = token-by-token)")
     ap.add_argument("--check", action="store_true",
                     help="verify decode path against teacher-forced forward")
     args = ap.parse_args(argv)

@@ -16,7 +16,7 @@ from repro.configs.base import ArchConfig
 from repro.distributed.sharding import shard
 from repro.kernels import ops
 from repro.models import components as C
-from repro.models.lm import _cache_update, _stacked, _xent
+from repro.models.lm import _cache_update, _cache_update_chunk, _stacked, _xent
 
 
 def init_params(cfg: ArchConfig, rng) -> Dict[str, Any]:
@@ -121,6 +121,77 @@ def prefill_cross_cache(cfg: ArchConfig, params, memory, state):
 
     xk, xv = jax.vmap(per_layer)(params["dec_layers"])
     return {**state, "xk": xk, "xv": xv}
+
+
+def prefill_chunk(cfg: ArchConfig, params, state, toks: jax.Array,  # (B, C)
+                  width: jax.Array,                    # () or (B,) int32
+                  *, active: Optional[jax.Array] = None):
+    """Multi-token prompt ingestion — signature parity with
+    ``lm.prefill_chunk`` so chunked prefill is not attention-LM-only by
+    accident.  Self-attention runs the chunked kernel against the causal
+    cache; cross-attention anchors every chunk query at the last encoder
+    position, which makes the causal mask vacuous (full non-causal
+    attention over the precomputed memory K/V).  Requires ``per_row_pos``
+    decode state."""
+    pos = state["pos"]
+    if pos.ndim != 1:
+        raise ValueError("prefill_chunk needs per_row_pos=True decode state")
+    b, c = toks.shape
+    if active is None:
+        active = jnp.ones((b,), bool)
+    width = jnp.clip(
+        jnp.broadcast_to(jnp.asarray(width, jnp.int32).reshape(-1), (b,)),
+        1, c,
+    )
+    x = params["embed"][toks].astype(cfg.dtype_())
+    offs = jnp.arange(c, dtype=jnp.int32)[None, :]
+    posmat = pos[:, None] + offs                       # (B, C)
+    valid = active[:, None] & (offs < width[:, None])
+    enc_len = state["xk"].shape[2]
+    enc_start = jnp.full((b,), enc_len - 1, jnp.int32)
+    enc_one = jnp.ones((b,), jnp.int32)
+    hd = cfg.head_dim_
+
+    def body(x, inp):
+        p, ck, cv, xk, xv = inp
+        hkv = cfg.n_kv_heads
+        # causal self-attention with chunked cache writes
+        pa = p["attn"]
+        xn = C.norm(cfg, pa["ln"], x)
+        q = C.dense(xn, pa["wq"]).reshape(b, c, cfg.n_heads, hd)
+        kn = C.dense(xn, pa["wk"]).reshape(b, c, hkv, hd)
+        vn = C.dense(xn, pa["wv"]).reshape(b, c, hkv, hd)
+        cos, sin = C.rope_freqs(cfg, posmat)
+        q = C.apply_rope(q, cos, sin)
+        kn = C.apply_rope(kn, cos, sin)
+        ck = _cache_update_chunk(ck, kn, posmat, valid)
+        cv = _cache_update_chunk(cv, vn, posmat, valid)
+        o = ops.attention_prefill_chunk(q, ck, cv, pos, width)
+        x = x + C.dense(o.reshape(b, c, -1), pa["wo"])
+        # cross-attention to encoder memory: width 1 pins every chunk
+        # query at qpos = enc_len - 1, i.e. full non-causal attention —
+        # and keeps padded cache tails (kpos >= enc_len) masked
+        pc = p["cross"]
+        xn = C.norm(cfg, pc["ln"], x)
+        q = C.dense(xn, pc["wq"]).reshape(b, c, cfg.n_heads, hd)
+        o = ops.attention_prefill_chunk(q, xk, xv, enc_start, enc_one)
+        x = x + C.dense(o.reshape(b, c, -1), pc["wo"])
+        # mlp
+        pm = p["mlp"]
+        xn = C.norm(cfg, pm["ln"], x)
+        h = jax.nn.silu(C.dense(xn, pm["wg"])) * C.dense(xn, pm["wi"])
+        x = x + C.dense(h, pm["wo"])
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], state["k"], state["v"], state["xk"], state["xv"]),
+    )
+    last = jnp.take_along_axis(x, (width - 1)[:, None, None], axis=1)[:, 0]
+    h = C.norm(cfg, params["ln_f"], last)
+    logits = C.dense(h, params["lm_head"])
+    return logits, {**state, "k": ks, "v": vs,
+                    "pos": pos + jnp.where(active, width, 0)}
 
 
 def decode_step(cfg: ArchConfig, params, state, token: jax.Array,

@@ -8,7 +8,7 @@ Vision's cross-attention every N layers) scan over *groups*.
 
 Public API (all pure functions of (cfg, params, ...)):
     init_params, train_loss, forward, lm_logits,
-    init_decode_state, decode_step, prefill
+    init_decode_state, decode_step, prefill, prefill_chunk
 """
 from __future__ import annotations
 
@@ -327,6 +327,23 @@ def _cache_update(cfg: ArchConfig, cache: jax.Array, new: jax.Array,
     )
 
 
+def _cache_update_chunk(cache: jax.Array, new: jax.Array,
+                        posmat: jax.Array, valid: jax.Array) -> jax.Array:
+    """Write a chunk of C tokens' K/V into a (B, S, Hkv, hd) cache.
+
+    ``new`` is (B, C, Hkv, hd); token i of row b lands at absolute position
+    ``posmat[b, i]``; invalid positions (chunk padding, inactive rows) are
+    routed past the sequence axis and dropped.  Positions are distinct per
+    row, so the scatter never writes one slot twice.  Absolute positions
+    only — ring-indexed sliding-window caches can't host multi-token chunks
+    (the chunk's own writes would recycle slots its queries still read).
+    """
+    smax = cache.shape[1]
+    tgt = jnp.where(valid, posmat, smax)
+    rows = jnp.arange(cache.shape[0])[:, None]
+    return cache.at[rows, tgt].set(new.astype(cache.dtype), mode="drop")
+
+
 def decode_step(
     cfg: ArchConfig, params, state, token: jax.Array,  # (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
@@ -496,6 +513,179 @@ def decode_step(
         state = {**state, "pos": pos + active.astype(jnp.int32)}
     else:
         state = {**state, "pos": pos + 1}
+    return logits, state
+
+
+def prefill_chunk(
+    cfg: ArchConfig, params, state, toks: jax.Array,   # (B, C) int32
+    width: jax.Array,                                  # () or (B,) int32
+    *, active: Optional[jax.Array] = None,             # (B,) bool
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Ingest up to C prompt tokens per row in one step.
+
+    Row b's real tokens are ``toks[b, :width[b]]`` at absolute positions
+    ``pos[b] .. pos[b]+width[b]-1``; the rest of the chunk is padding and
+    never touches caches (masked multi-position K/V writes, masked SSM
+    state carries, dropped page writes).  Returns logits at each row's
+    *last real* position — exactly what a ``decode_step`` fed that position
+    would return — and the state with per-row ``pos`` advanced by
+    ``width`` for active rows.  ``width == 1`` rows degenerate to a decode
+    step, so decode-phase rows can ride along in a mixed batch.
+
+    Attention is chunked (one (C, hd) query block per row via
+    ``ops.attention_prefill_chunk``); Mamba blocks stay token-sequential
+    *inside* the fused step (a ``lax.scan`` over the chunk) so their
+    recurrence is bit-identical to single-token decode — the step still
+    amortizes per-step dispatch and turns B-row projections into B*C-row
+    GEMMs, which is where the prompt-ingestion win lives.
+
+    Requires ``per_row_pos`` decode state.  Sliding-window archs need the
+    paged layout: the contiguous ring cache recycles slots the in-chunk
+    queries still read.
+    """
+    pos = state["pos"]
+    if pos.ndim != 1:
+        raise ValueError("prefill_chunk needs per_row_pos=True decode state")
+    paged = "block_table" in state
+    b, c = toks.shape
+    uses_attn = cfg.family in ("dense", "moe", "hybrid", "vlm")
+    if cfg.window and not paged and uses_attn:
+        raise NotImplementedError(
+            "chunked prefill with a sliding window needs layout='paged': "
+            "the contiguous ring cache overwrites slots the in-chunk "
+            "queries still read"
+        )
+    if active is None:
+        active = jnp.ones((b,), bool)
+    width = jnp.clip(
+        jnp.broadcast_to(jnp.asarray(width, jnp.int32).reshape(-1), (b,)),
+        1, c,
+    )
+    x = params["embed"][toks].astype(cfg.dtype_())     # (B, C, d)
+    offs = jnp.arange(c, dtype=jnp.int32)[None, :]
+    posmat = pos[:, None] + offs                       # (B, C) absolute pos
+    valid = active[:, None] & (offs < width[:, None])  # (B, C) real tokens
+
+    if paged:
+        from repro.serving import pager as PG
+
+        # map every block the chunk touches up front (multi-page-per-step;
+        # admission-time reservation guarantees the pops succeed)
+        pstate, bt = PG.alloc_range(
+            PG.PagerState(state["page_free"], state["page_top"]),
+            state["block_table"], pos, pos + width - 1, active,
+            page_size=state["kp"].shape[2], max_chunk=c,
+        )
+        state = {**state, "page_free": pstate.free, "page_top": pstate.top,
+                 "block_table": bt}
+
+    def attn_chunk(p, x, ck, cv):
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        xn = C.norm(cfg, p["ln"], x)
+        q = C.dense(xn, p["wq"], p.get("bq")).reshape(b, c, cfg.n_heads, hd)
+        k_new = C.dense(xn, p["wk"], p.get("bk")).reshape(b, c, hkv, hd)
+        v_new = C.dense(xn, p["wv"], p.get("bv")).reshape(b, c, hkv, hd)
+        cos, sin = C.rope_freqs(cfg, posmat)           # (B, C, hd/2)
+        q = C.apply_rope(q, cos, sin)
+        k_new = C.apply_rope(k_new, cos, sin)
+        if paged:
+            from repro.serving import pager as PG
+
+            bt = state["block_table"]
+            ck = PG.write_page_chunk(ck, k_new, bt, pos, width, active)
+            cv = PG.write_page_chunk(cv, v_new, bt, pos, width, active)
+            o = ops.attention_prefill_chunk(
+                q, ck, cv, pos, width, block_table=bt, window=cfg.window
+            )
+        else:
+            ck = _cache_update_chunk(ck, k_new, posmat, valid)
+            cv = _cache_update_chunk(cv, v_new, posmat, valid)
+            o = ops.attention_prefill_chunk(q, ck, cv, pos, width)
+        return x + C.dense(o.reshape(b, c, -1), p["wo"]), ck, cv
+
+    def mlp_chunk(p, x):
+        xn = C.norm(cfg, p["ln"], x)
+        h = jax.nn.silu(C.dense(xn, p["wg"])) * C.dense(xn, p["wi"])
+        return x + C.dense(h, p["wo"])
+
+    def mamba_chunk(p, x, s_ssm, s_conv):
+        # token-sequential inside the chunk: the recurrence stays
+        # bit-identical to single-token decode; padding positions keep the
+        # carried state (masked), so per-row widths can't corrupt it
+        def step(carry, inp):
+            s1, s2 = carry
+            xi, vi = inp                               # (B, d), (B,)
+            yi, n1, n2 = C.mamba_decode_block(cfg, p, xi, s1, s2)
+            s1 = jnp.where(vi[:, None, None, None], n1, s1)
+            s2 = jnp.where(vi[:, None, None], n2, s2)
+            return (s1, s2), yi
+        (s_ssm, s_conv), ys = jax.lax.scan(
+            step, (s_ssm, s_conv), (x.transpose(1, 0, 2), valid.T)
+        )
+        return ys.transpose(1, 0, 2), s_ssm, s_conv
+
+    kk, vk = ("kp", "vp") if paged else ("k", "v")
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        def body(x, inp):
+            p, ck, cv = inp
+            x, ck, cv = attn_chunk(p["attn"], x, ck, cv)
+            x = (C.moe_block(cfg, p["moe"], x) if "moe" in p
+                 else mlp_chunk(p["mlp"], x))
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], state[kk], state[vk])
+        )
+        state = {**state, kk: ks, vk: vs}
+    elif fam == "ssm":
+        def body(x, inp):
+            p, s_ssm, s_conv = inp
+            x, s_ssm, s_conv = mamba_chunk(p["mamba"], x, s_ssm, s_conv)
+            return x, (s_ssm, s_conv)
+        x, (ssm, conv) = jax.lax.scan(
+            body, x, (params["layers"], state["ssm"], state["conv"])
+        )
+        state = {**state, "ssm": ssm, "conv": conv}
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        a = cfg.attn_every
+        ssm_g = state["ssm"].reshape(g, a, *state["ssm"].shape[1:])
+        conv_g = state["conv"].reshape(g, a, *state["conv"].shape[1:])
+
+        def group(x, inp):
+            gp, s_ssm, s_conv, ck, cv = inp
+
+            def inner(x, i2):
+                p, s1, s2 = i2
+                x, s1, s2 = mamba_chunk(p["mamba"], x, s1, s2)
+                return x, (s1, s2)
+            x, (s_ssm, s_conv) = jax.lax.scan(inner, x, (gp, s_ssm, s_conv))
+            x, ck, cv = attn_chunk(params["shared_attn"], x, ck, cv)
+            x = mlp_chunk(params["shared_mlp"], x)
+            return x, (s_ssm, s_conv, ck, cv)
+
+        x, (ssm, conv, ks, vs) = jax.lax.scan(
+            group, x, (params["groups"], ssm_g, conv_g, state[kk], state[vk])
+        )
+        state = {
+            **state,
+            "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
+            "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
+            kk: ks, vk: vs,
+        }
+    else:
+        raise NotImplementedError(
+            f"prefill_chunk: unsupported family {fam!r}"
+        )
+
+    # logits at each row's last real position (gather-then-norm: the final
+    # norm and head are position-wise, so this equals the decode_step there)
+    last = jnp.take_along_axis(x, (width - 1)[:, None, None], axis=1)[:, 0]
+    h = C.norm(cfg, params["ln_f"], last)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = C.dense(h, w)
+    state = {**state, "pos": pos + jnp.where(active, width, 0)}
     return logits, state
 
 

@@ -26,6 +26,9 @@ class Model:
     # zero selected batch rows' decode caches (serving slot refill); raises
     # for families without per-row decode state support
     reset_decode_rows: Callable[..., Dict[str, jax.Array]] = None
+    # multi-token prompt ingestion (chunked prefill): (params, state,
+    # toks (B,C), width (B,), active=...) -> (last-position logits, state)
+    prefill_chunk: Callable[..., Any] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -58,6 +61,8 @@ def build_model(cfg: ArchConfig) -> Model:
                 cfg, params, state, token, **kw
             ),
             reset_decode_rows=no_reset,
+            prefill_chunk=lambda params, state, toks, width, **kw:
+                encdec.prefill_chunk(cfg, params, state, toks, width, **kw),
         )
 
     def prefill_fn(params, batch):
@@ -79,4 +84,6 @@ def build_model(cfg: ArchConfig) -> Model:
         reset_decode_rows=lambda state, mask: lm.reset_decode_rows(
             cfg, state, mask
         ),
+        prefill_chunk=lambda params, state, toks, width, **kw:
+            lm.prefill_chunk(cfg, params, state, toks, width, **kw),
     )

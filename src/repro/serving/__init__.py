@@ -9,11 +9,13 @@ from repro.serving.engine import (
 from repro.serving.pager import (
     PagerState,
     alloc_on_write,
+    alloc_range,
     init_block_table,
     init_pager,
     pages_needed,
     release_rows,
     write_page,
+    write_page_chunk,
 )
 from repro.serving.queue import Request, RequestQueue
 
@@ -24,6 +26,7 @@ __all__ = [
     "ServingEngine",
     "SlotState",
     "alloc_on_write",
+    "alloc_range",
     "engine_step",
     "init_block_table",
     "init_pager",
@@ -32,4 +35,5 @@ __all__ = [
     "release_rows",
     "serve_all",
     "write_page",
+    "write_page_chunk",
 ]

@@ -23,6 +23,14 @@ row per decode step.  Here the whole control state lives on-device:
     releases them — so resident KV tracks live tokens, and the pool may be
     much smaller than ``batch x max_len``.  All of it is the same
     masked-write, fixed-shape discipline: nothing retraces.
+  * chunked prefill — ``prefill_chunk=C`` ingests up to C prompt tokens
+    per step (``model.prefill_chunk`` + ``ops.attention_prefill_chunk``),
+    so TTFT stops scaling linearly in prompt length.  The scheduler is a
+    *host mirror*: per-row progress is a deterministic function of
+    (prompt_len, total_len, steps run), so choosing prefill-vs-decode
+    steps, chunk widths, TTFT stamps and ingestion counts never needs a
+    device sync.  Decode-phase rows ride along in prefill steps with
+    width 1; both jitted entry points stay at cache size 1.
 
 Supported families: dense / moe / ssm / hybrid (everything whose decode
 state supports per-row positions; VLM cross-caches would additionally need
@@ -68,57 +76,87 @@ def init_slots(batch: int, max_len: int) -> SlotState:
     )
 
 
-def _sample(logits, slots: SlotState, *, temperature: float, top_k: int):
-    """Next-token choice + advanced per-row keys.
+def _sample(logits, slots: SlotState, wpos, *, temperature: float,
+            top_k: int):
+    """Next-token choice.
 
     ``temperature``/``top_k`` are trace-time constants (engine config), so
     the greedy path compiles to exactly the pre-sampling graph.  Each
-    sampling row consumes a subkey and carries the successor, so the token
-    stream of a row depends only on its admission-time key — refills and
-    batch composition cannot perturb it.
+    sampled token's subkey is ``fold_in(admission key, position)`` —
+    ``wpos`` is where the token lands — so a row's token stream depends
+    only on its admission-time key and the positions themselves: refills,
+    batch composition, ``steps_per_sync`` and the prefill chunk schedule
+    (which changes how many *steps* reach a given position) cannot
+    perturb it.  The key is never consumed, so ``slots.rng`` is carried
+    unchanged.
     """
     if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), slots.rng
-    keys = jax.vmap(jax.random.split)(slots.rng)      # (B, 2, 2)
-    carry, sub = keys[:, 0], keys[:, 1]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    sub = jax.vmap(jax.random.fold_in)(slots.rng, wpos)
     lg = logits.astype(jnp.float32) / temperature
     if top_k > 0:
         kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
         lg = jnp.where(lg < kth, -jnp.inf, lg)
-    nxt = jax.vmap(jax.random.categorical)(sub, lg).astype(jnp.int32)
-    return nxt, carry
+    return jax.vmap(jax.random.categorical)(sub, lg).astype(jnp.int32)
 
 
 def engine_step(model: Model, params, mstate, slots: SlotState,
-                *, temperature: float = 0.0, top_k: int = 0):
-    """One decode step for every row — no host interaction.
+                *, temperature: float = 0.0, top_k: int = 0,
+                chunk: int = 1):
+    """One decode (or chunked-prefill) step for every row — no host
+    interaction.
 
-    Feeding: row b feeds ``tokens[b, progress[b]]``; because generated
-    tokens are scattered into the buffer as they are produced, this single
-    gather covers both the prompt phase and the generate phase.
-    A row is done after the step that produces its last generated token
-    (``progress`` reaches ``total_len - 1``: position t's feed predicts
-    position t+1, and positions ``prompt_len .. total_len-1`` are
-    generated).  Inactive rows still occupy their lane (fixed shapes) but
-    never advance, never write their caches, and — under the paged KV
-    layout — never allocate pages (the ``active`` mask flows down through
-    ``decode_step``).
+    ``chunk == 1`` (the decode step): row b feeds ``tokens[b,
+    progress[b]]``; because generated tokens are scattered into the buffer
+    as they are produced, this single gather covers both the prompt phase
+    and the generate phase.  A row is done after the step that produces
+    its last generated token (``progress`` reaches ``total_len - 1``:
+    position t's feed predicts position t+1, and positions ``prompt_len ..
+    total_len-1`` are generated).  Inactive rows still occupy their lane
+    (fixed shapes) but never advance, never write their caches, and —
+    under the paged KV layout — never allocate pages (the ``active`` mask
+    flows down through ``decode_step``).
+
+    ``chunk > 1`` (the prefill step): prompt-phase rows feed up to
+    ``chunk`` prompt tokens at once through ``model.prefill_chunk`` —
+    per-row width ``clip(prompt_len - progress, 1, chunk)``, so the chunk
+    never crosses into generated positions and the *last* prefill chunk
+    ends exactly at ``prompt_len - 1``, whose logits produce the first
+    generated token.  Decode-phase rows ride along with width 1 (their
+    gather covers the generated buffer), so a mixed batch needs no second
+    dispatch point.  Everything else — sampling, token scatter,
+    done-detection — is the same arithmetic with a per-row stride.
     """
     b, max_len = slots.tokens.shape
-    feed_idx = jnp.clip(slots.progress, 0, max_len - 1)
-    tok = jnp.take_along_axis(slots.tokens, feed_idx[:, None], axis=1)[:, 0]
-    logits, mstate = model.decode_step(params, mstate, tok,
-                                       active=slots.active)
-    nxt, rng = _sample(logits, slots, temperature=temperature, top_k=top_k)
+    if chunk > 1:
+        width = jnp.clip(slots.prompt_len - slots.progress, 1, chunk)
+        gidx = jnp.clip(
+            slots.progress[:, None]
+            + jnp.arange(chunk, dtype=jnp.int32)[None, :],
+            0, max_len - 1,
+        )
+        toks = jnp.take_along_axis(slots.tokens, gidx, axis=1)
+        logits, mstate = model.prefill_chunk(params, mstate, toks, width,
+                                             active=slots.active)
+        stride = width
+    else:
+        feed_idx = jnp.clip(slots.progress, 0, max_len - 1)
+        tok = jnp.take_along_axis(
+            slots.tokens, feed_idx[:, None], axis=1
+        )[:, 0]
+        logits, mstate = model.decode_step(params, mstate, tok,
+                                           active=slots.active)
+        stride = jnp.ones((b,), jnp.int32)
 
-    wpos = slots.progress + 1
+    wpos = slots.progress + stride
+    nxt = _sample(logits, slots, wpos, temperature=temperature, top_k=top_k)
     # scatter the sampled token where the next feed position is generated
     writes = slots.active & (wpos >= slots.prompt_len) & (wpos < max_len)
     col = jax.lax.broadcasted_iota(jnp.int32, (b, max_len), 1)
     tokens = jnp.where(
         writes[:, None] & (col == wpos[:, None]), nxt[:, None], slots.tokens
     )
-    progress = slots.progress + slots.active.astype(jnp.int32)
+    progress = slots.progress + stride * slots.active.astype(jnp.int32)
     active = slots.active & (progress < slots.total_len - 1)
     return mstate, SlotState(
         tokens=tokens,
@@ -126,7 +164,7 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
         total_len=slots.total_len,
         progress=progress,
         active=active,
-        rng=rng,
+        rng=slots.rng,
     )
 
 
@@ -151,6 +189,20 @@ class ServingEngine:
     so outputs are reproducible per request regardless of batch
     composition.  The default (0) is greedy argmax, byte-identical to the
     pre-sampling engine.
+
+    ``prefill_chunk=C`` (default 1 = token-by-token) turns prompt
+    ingestion into chunked multi-token steps: a row with R prompt tokens
+    left feeds ``min(C, R)`` of them in one fused step, so a P-token
+    prompt costs ``ceil(P/C)`` steps instead of P.  Outputs are
+    token-identical to the unchunked path; per-request ``ttft`` (seconds
+    to first generated token, stamped at the harvest sync) and
+    ``prompt_tokens`` are tracked either way.  MoE caveat: with capacity
+    dropping, chunked steps route B*C tokens where decode routes B, so
+    drops — and therefore tokens — can differ from the unchunked path;
+    parity holds at ``capacity_factor >= n_experts`` (see module
+    docstring).  Sliding-window archs need ``layout="paged"`` for
+    chunking (absolute positions; the contiguous ring recycles slots the
+    chunk still reads).
     """
 
     def __init__(
@@ -167,6 +219,7 @@ class ServingEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         seed: int = 0,
+        prefill_chunk: int = 1,
     ) -> None:
         if model.cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise NotImplementedError(
@@ -174,12 +227,24 @@ class ServingEngine:
             )
         if steps_per_sync < 1:
             raise ValueError("steps_per_sync must be >= 1")
+        prefill_chunk = int(prefill_chunk)
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if (prefill_chunk > 1 and model.cfg.window
+                and layout != "paged"
+                and model.cfg.family in ("dense", "moe", "hybrid")):
+            raise ValueError(
+                "chunked prefill on a sliding-window arch needs "
+                "layout='paged' (the contiguous ring cache recycles slots "
+                "the in-chunk queries still read)"
+            )
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
         self.steps_per_sync = steps_per_sync
         self.layout = layout
+        self.prefill_chunk = prefill_chunk
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.queue = RequestQueue(max_len=max_len)
@@ -201,6 +266,23 @@ class ServingEngine:
         self._pages_reserved = 0
         self.peak_pages_in_use = 0
 
+        # KV byte arithmetic is shape-only — freeze it here instead of
+        # re-walking the state pytree on every stats()/resident-bytes call
+        if self._paged:
+            kp = self._mstate["kp"]
+            stacks, _, page, hkv, hd = kp.shape
+            self._kv_bytes_per_page = (
+                2 * kp.dtype.itemsize * stacks * page * hkv * hd
+            )
+            self._contig_kv_bytes = 0
+        else:
+            self._kv_bytes_per_page = 0
+            self._contig_kv_bytes = sum(
+                self._mstate[key].dtype.itemsize
+                * int(np.prod(self._mstate[key].shape))
+                for key in ("k", "v", "xk", "xv") if key in self._mstate
+            )
+
         self._slots = init_slots(batch, max_len)
         # per-request key *data* is drawn host-side (no device round-trip
         # on the admission path); rows feed it to jax.random as a raw
@@ -208,9 +290,18 @@ class ServingEngine:
         self._host_rng = np.random.Generator(np.random.Philox(seed))
         # host mirror: which request occupies each row (None = free)
         self._slot_req: List[Optional[Request]] = [None] * batch
+        # host mirror of per-row progress: the step schedule (chunk widths,
+        # prompt-vs-decode phase) is a deterministic function of
+        # (prompt_len, total_len, steps run), so the prefill scheduler and
+        # the TTFT/ingestion accounting never need a device sync
+        self._row_progress: List[int] = [0] * batch
         self.outputs: Dict[int, np.ndarray] = {}
         self.steps = 0          # decode steps executed (all rows per step)
+        self.prefill_steps = 0  # chunked-prefill steps executed
         self.generated = 0      # tokens returned to callers
+        self.prompt_tokens = 0  # prompt tokens ingested (host arithmetic)
+        self.ttft: Dict[int, float] = {}        # req_id -> seconds
+        self._t_submit: Dict[int, float] = {}
 
         def _step_n(params, mstate, slots):
             def body(_, carry):
@@ -239,6 +330,15 @@ class ServingEngine:
         # harvest-time page release (and cache scrub) for finished rows
         self._release = jax.jit(model.reset_decode_rows, donate_argnums=(0,))
 
+        if prefill_chunk > 1:
+            def _prefill_step(params, mstate, slots):
+                return engine_step(model, params, mstate, slots,
+                                   temperature=self.temperature,
+                                   top_k=self.top_k, chunk=prefill_chunk)
+            self._prefill = jax.jit(_prefill_step, donate_argnums=(1, 2))
+        else:
+            self._prefill = None
+
     # -- request intake ------------------------------------------------------
 
     def submit(self, tokens, max_new_tokens: int) -> int:
@@ -250,7 +350,9 @@ class ServingEngine:
                 raise ValueError(
                     f"request needs {need} pages > pool size {self.n_pages}"
                 )
-        return self.queue.submit(tokens, max_new_tokens)
+        rid = self.queue.submit(tokens, max_new_tokens)
+        self._t_submit[rid] = time.perf_counter()
+        return rid
 
     def _pages_needed(self, total_len: int) -> int:
         from repro.serving.pager import pages_needed
@@ -282,6 +384,7 @@ class ServingEngine:
                 break
             self.queue.pop()
             self._slot_req[b] = req
+            self._row_progress[b] = 0
             self._row_pages[b] = need
             self._pages_reserved += need
             new_tokens[b, : req.prompt_len] = req.tokens
@@ -304,17 +407,75 @@ class ServingEngine:
 
     # -- serving loop --------------------------------------------------------
 
+    def _advance_mirror(self, widths: List[int]) -> List[int]:
+        """Replay one device step's progress update on the host mirror.
+
+        ``widths[b]`` is the stride row b advanced (a chunk width for a
+        prefill step, ``steps_per_sync`` for a fused decode call — the
+        decode case over-counts past done-detection, which the
+        ``total_len - 1`` clamp absorbs exactly like the device's
+        ``active`` mask).  Accumulates prompt-ingestion counts and returns
+        the req_ids whose first generated token was produced by this step
+        (TTFT is stamped by the caller at the next device sync, when that
+        token actually exists).
+        """
+        crossed: List[int] = []
+        for b, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            p = self._row_progress[b]
+            if p >= req.total_len - 1:
+                continue
+            np_ = min(p + widths[b], req.total_len - 1)
+            self.prompt_tokens += (
+                min(np_, req.prompt_len) - min(p, req.prompt_len)
+            )
+            if p < req.prompt_len <= np_:
+                crossed.append(req.req_id)
+            self._row_progress[b] = np_
+        return crossed
+
+    def _prompt_phase_rows(self) -> bool:
+        """True while some occupied, unfinished row still has >= 2 prompt
+        tokens to feed — the regime where a chunked step beats a decode
+        step (a single remaining prompt token is just a decode feed)."""
+        return any(
+            req is not None
+            and self._row_progress[b] < req.total_len - 1
+            and req.prompt_len - self._row_progress[b] >= 2
+            for b, req in enumerate(self._slot_req)
+        )
+
     def step(self) -> int:
-        """One sync cycle: refill, ``steps_per_sync`` fused decode steps,
-        then a single host readback to harvest finished rows.  Returns the
+        """One sync cycle: refill, chunked prefill until no row is mid-
+        prompt (when enabled), ``steps_per_sync`` fused decode steps, then
+        a single host readback to harvest finished rows.  Returns the
         number of requests completed this cycle."""
         self._refill()
         if not any(r is not None for r in self._slot_req):
             return 0
+        crossed: List[int] = []
+        if self._prefill is not None:
+            # prompt ingestion: chunked steps, back-to-back dispatches, no
+            # host sync — the mirror knows each row's width without one.
+            # Decode-phase rows ride along one token per chunk step.
+            while self._prompt_phase_rows():
+                widths = [
+                    max(1, min(self.prefill_chunk,
+                               req.prompt_len - self._row_progress[b]))
+                    if req is not None else 1
+                    for b, req in enumerate(self._slot_req)
+                ]
+                self._mstate, self._slots = self._prefill(
+                    self.params, self._mstate, self._slots
+                )
+                self.prefill_steps += 1
+                crossed += self._advance_mirror(widths)
         self._mstate, self._slots = self._step_n(
             self.params, self._mstate, self._slots
         )
         self.steps += self.steps_per_sync
+        crossed += self._advance_mirror([self.steps_per_sync] * self.batch)
         # the one host sync of the cycle (page_top rides along — no extra)
         if self._paged:
             active, tokens, page_top = jax.device_get(
@@ -328,6 +489,14 @@ class ServingEngine:
             active, tokens = jax.device_get(
                 (self._slots.active, self._slots.tokens)
             )
+        # the readback above materialized every token this cycle produced,
+        # so first-token latencies are stamped here, not at dispatch (the
+        # pop keeps the submit-time ledger bounded by pending requests)
+        now = time.perf_counter()
+        for rid in crossed:
+            t0 = self._t_submit.pop(rid, None)
+            if t0 is not None:
+                self.ttft.setdefault(rid, now - t0)
         finished = 0
         release = np.zeros((self.batch,), bool)
         for b, req in enumerate(self._slot_req):
@@ -353,34 +522,42 @@ class ServingEngine:
             self.step()
         return self.outputs
 
+    def reset_stats(self) -> None:
+        """Zero every accumulated statistic (post-warm-up, pre-measurement).
+
+        Lives next to the counters it owns so benchmark drivers don't
+        hand-mirror the list; serving state (slots, caches, queue) is
+        untouched."""
+        self.outputs.clear()
+        self.ttft.clear()
+        self.steps = self.prefill_steps = 0
+        self.generated = self.prompt_tokens = 0
+        self.peak_pages_in_use = 0
+
     def kv_bytes_per_page(self) -> int:
-        """Bytes one page occupies across all layer slabs (K and V)."""
-        if not self._paged:
-            return 0
-        kp = self._mstate["kp"]
-        stacks, _, page, hkv, hd = kp.shape
-        return 2 * kp.dtype.itemsize * stacks * page * hkv * hd
+        """Bytes one page occupies across all layer slabs (K and V) —
+        shape arithmetic frozen at construction, no pytree walk."""
+        return self._kv_bytes_per_page
 
     def kv_resident_bytes(self, *, peak: bool = False) -> int:
         """Resident KV-cache footprint: allocated bytes under the paged
-        layout (current or peak), the full slab under contiguous."""
+        layout (current or peak), the full slab under contiguous.  Byte
+        factors are cached at construction; only the *current* paged
+        residency reads a device scalar (``page_top``)."""
         if self._paged:
             pages = (
                 self.peak_pages_in_use if peak
                 else self.n_pages - int(self._mstate["page_top"])
             )
-            return pages * self.kv_bytes_per_page()
-        total = 0
-        for key in ("k", "v", "xk", "xv"):
-            if key in self._mstate:
-                arr = self._mstate[key]
-                total += arr.dtype.itemsize * int(np.prod(arr.shape))
-        return total
+            return pages * self._kv_bytes_per_page
+        return self._contig_kv_bytes
 
     def stats(self) -> Dict[str, float]:
         out = {
             "decode_steps": float(self.steps),
+            "prefill_steps": float(self.prefill_steps),
             "generated_tokens": float(self.generated),
+            "prompt_tokens": float(self.prompt_tokens),
             "batch": float(self.batch),
         }
         if self._paged:

@@ -45,6 +45,20 @@ pushes a completed row's pages back.  Conservation invariant (the
 hypothesis property in ``tests/test_pager.py``): the free-list prefix and
 the mapped block-table entries always partition ``0..n_pages-1`` with no
 page owned twice.
+
+Multi-page-per-step allocation (chunked prefill): a step that writes a
+*range* of positions ``start..end`` may straddle several blocks, so
+``alloc_range`` maps every block covering the range in one jitted call —
+a statically unrolled ladder of single-block ``alloc_on_write`` passes
+(``(max_chunk-1)//page_size + 2`` of them), each with the same
+rank-by-batch-index pop order, so the conservation invariant and the
+fixed-shape/no-retrace discipline are unchanged.  ``write_page_chunk`` is
+the matching multi-token scatter: token ``i`` of row ``b`` lands at
+``(block_table[b, (start+i)//page_size], (start+i) % page_size)``; chunk
+padding (``i >= width``) and inactive rows route to the out-of-bounds
+sentinel page and drop.  Admission-time reservation already covers the
+worst case (``pages_needed`` counts positions ``0..total_len-2``), so a
+chunked step can never find the free list empty for a live request.
 """
 from __future__ import annotations
 
@@ -122,6 +136,39 @@ def alloc_on_write(
     return PagerState(pager.free, top), block_table
 
 
+def alloc_range(
+    pager: PagerState,
+    block_table: jax.Array,          # (B, max_blocks) int32
+    start: jax.Array,                # () or (B,) int32: first position written
+    end: jax.Array,                  # () or (B,) int32: last position written
+    active: Optional[jax.Array] = None,   # (B,) bool; None = all rows
+    *,
+    page_size: int,
+    max_chunk: int,
+) -> Tuple[PagerState, jax.Array]:
+    """Map every block covering positions ``start..end`` (inclusive).
+
+    The multi-page-per-step generalization of ``alloc_on_write`` for
+    chunked prefill: ``max_chunk`` statically bounds ``end - start + 1``,
+    so the loop unrolls to a fixed ladder of single-block allocations
+    (fixed shapes, nothing retraces).  Each rung targets block
+    ``start//page_size + k`` and is masked out for rows whose range ends
+    earlier, so rows needing fewer blocks allocate fewer pages.
+    """
+    b = block_table.shape[0]
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    end_b = jnp.broadcast_to(jnp.asarray(end, jnp.int32).reshape(-1), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    for k in range((max_chunk - 1) // page_size + 2):
+        idx = start_b + k * page_size        # one position inside block k
+        pager, block_table = alloc_on_write(
+            pager, block_table, jnp.minimum(idx, end_b),
+            active & (idx <= end_b), page_size=page_size,
+        )
+    return pager, block_table
+
+
 def release_rows(
     pager: PagerState,
     block_table: jax.Array,   # (B, max_blocks) int32
@@ -166,5 +213,41 @@ def write_page(
         ok &= active
     page = jnp.where(ok, page, n_pages)
     return pool.at[page, idx_b % page_size].set(
+        new.astype(pool.dtype), mode="drop"
+    )
+
+
+def write_page_chunk(
+    pool: jax.Array,                 # (n_pages, page_size, Hkv, hd)
+    new: jax.Array,                  # (B, C, Hkv, hd): C tokens per row
+    block_table: jax.Array,          # (B, max_blocks) int32
+    start: jax.Array,                # () or (B,) int32: pos of chunk token 0
+    width: jax.Array,                # () or (B,) int32: real tokens (1..C)
+    active: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Write a chunk of C tokens' K or V through the block table.
+
+    One fused scatter: token ``i`` of row ``b`` lands at (page, slot) =
+    (``bt[b, (start+i)//P]``, ``(start+i) % P``); chunk padding
+    (``i >= width``), inactive rows, out-of-range and unmapped blocks are
+    routed to the out-of-bounds sentinel page and dropped.  Positions are
+    distinct within a row and pages are owned by a single row, so the
+    scatter never writes one slot twice.
+    """
+    n_pages, page_size = pool.shape[0], pool.shape[1]
+    b, max_blocks = block_table.shape
+    c = new.shape[1]
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    w_b = jnp.broadcast_to(jnp.asarray(width, jnp.int32).reshape(-1), (b,))
+    i = jnp.arange(c, dtype=jnp.int32)[None, :]
+    posmat = start_b[:, None] + i                          # (B, C)
+    blk = posmat // page_size
+    blk_c = jnp.clip(blk, 0, max_blocks - 1)
+    page = jnp.take_along_axis(block_table, blk_c, axis=1)  # (B, C)
+    ok = (i < w_b[:, None]) & (blk < max_blocks) & (page >= 0)
+    if active is not None:
+        ok &= active[:, None]
+    page = jnp.where(ok, page, n_pages)
+    return pool.at[page, posmat % page_size].set(
         new.astype(pool.dtype), mode="drop"
     )
