@@ -22,6 +22,14 @@ A third ablation measures *prompt ingestion*: chunked prefill
 under both layouts — prefill tok/s and mean TTFT, outputs token-identical
 across all four engines.
 
+A fourth ablation measures *prefix sharing*: N requests carrying the same
+long system prompt, with and without page-level prefix sharing/CoW —
+sharer TTFT and peak resident KV bytes, outputs token-identical.
+
+``--layout`` scopes the single-layout sections to one KV layout so a CI
+matrix cell (backend x layout) exercises exactly its own path; the
+inherently cross-layout ablation only runs under the default ``both``.
+
     PYTHONPATH=src python -m benchmarks.serve_engine [--quick]
 """
 from __future__ import annotations
@@ -178,6 +186,100 @@ def compare_layouts(args):
     return rows
 
 
+def compare_prefix_sharing(args):
+    """Prefix sharing on/off under the shared-system-prompt workload (the
+    resident-memory + TTFT ablation).
+
+    N requests share a long page-aligned prompt prefix (a system prompt)
+    plus a short unique tail.  The donor is admitted alone and ingests the
+    full prefix; the other N-1 arrive while it is still decoding — the
+    exact schedule vLLM-style prefix caching exists for.  Sharing must
+    leave every token identical while the sharers' TTFT and the peak
+    resident KV bytes collapse (each shared page is resident once, not
+    once per row)."""
+    import dataclasses
+
+    cfg = get_arch(args.kv_arch)
+    if cfg.family not in ("dense", "moe"):
+        # recurrent decode state cannot skip positions: the engine accepts
+        # the flag but sharing is inert, so there is nothing to ablate
+        print(f"  (skipped: {cfg.family} carries recurrent decode state — "
+              f"prefix sharing is inert; see the engine docstring)")
+        return {}
+    if args.share_requests < 2:
+        print("  (skipped: --share-requests < 2 — sharing needs a donor "
+              "and at least one sharer)")
+        return {}
+    if args.prefill_vocab:
+        cfg = dataclasses.replace(cfg, vocab_size=args.prefill_vocab)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n = args.share_requests
+    plen = args.share_prefix_len
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=4).tolist()
+             for _ in range(n)]
+    if plen % args.page_size == 0 and n > 1:
+        # one fully shared prompt: its re-fed last token exercises CoW
+        tails[-1] = []
+    gen = args.prefill_gen
+    # the donor must outlive the sharers' admission (one sync cycle later)
+    donor_gen = gen + args.steps_per_sync + 1
+    max_len = plen + 4 + donor_gen + 1
+
+    def run(sharing):
+        eng = ServingEngine(
+            model, params, batch=n, max_len=max_len,
+            steps_per_sync=args.steps_per_sync, layout="paged",
+            page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            prefix_sharing=sharing,
+        )
+        for _ in range(2):                     # compile outside the clock
+            eng.submit([1, 2, 3], 2)
+        eng.run()
+        eng.reset_stats()
+        rid0 = eng.submit(prefix + tails[0], donor_gen)
+        eng.step()                             # donor ingests the prefix
+        rids = [rid0] + [
+            eng.submit(prefix + t, gen) for t in tails[1:]
+        ]
+        pt0 = eng.prompt_tokens                # donor's pre-window tokens
+        t0 = time.perf_counter()
+        outs = eng.run()
+        dt = time.perf_counter() - t0
+        ttft = [eng.ttft[r] for r in rids[1:] if r in eng.ttft]
+        return {
+            "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else float("nan"),
+            "prefill_tok_s": (eng.prompt_tokens - pt0) / dt,
+            "kv_bytes": eng.kv_resident_bytes(peak=True),
+            "shared": eng.shared_prompt_tokens,
+            "cow": eng.cow_pages,
+            "outputs": {i: outs[r].tolist() for i, r in enumerate(rids)},
+        }
+
+    rows = {name: run(s) for name, s in (("unshared", False),
+                                         ("shared", True))}
+    assert rows["shared"]["outputs"] == rows["unshared"]["outputs"], (
+        "prefix sharing changed tokens"
+    )
+    assert rows["shared"]["shared"] > 0, "sharing never engaged"
+    print(f"arch={args.kv_arch} requests={n} prefix_len={plen} "
+          f"tail=4 gen={gen} page_size={args.page_size} "
+          f"chunk={args.prefill_chunk}")
+    print(f"  {'sharing':<10} {'sharer TTFT ms':>14} {'peak KV bytes':>14} "
+          f"{'shared toks':>11} {'CoW':>4}")
+    for name in ("unshared", "shared"):
+        r = rows[name]
+        print(f"  {name:<10} {r['ttft_ms']:>14.1f} {r['kv_bytes']:>14d} "
+              f"{r['shared']:>11d} {r['cow']:>4d}")
+    drop = rows["unshared"]["kv_bytes"] / max(rows["shared"]["kv_bytes"], 1)
+    print(f"  resident-KV drop {drop:.1f}x, TTFT "
+          f"{rows['unshared']['ttft_ms'] / rows['shared']['ttft_ms']:.1f}x "
+          f"(outputs token-identical)")
+    return rows
+
+
 def compare_prefill(args):
     """Chunked vs token-by-token prompt ingestion (the TTFT ablation).
 
@@ -208,8 +310,10 @@ def compare_prefill(args):
         for _ in range(args.prefill_requests)
     ]
     chunks = sorted({1, args.prefill_chunk})    # chunk 1 = the baseline
+    layouts = (("contiguous", "paged") if args.layout == "both"
+               else (args.layout,))
     rows = {}
-    for layout in ("contiguous", "paged"):
+    for layout in layouts:
         kw = {"layout": layout}
         if layout == "paged":
             kw.update(page_size=args.page_size)
@@ -218,7 +322,7 @@ def compare_prefill(args):
                 model, params, reqs, args.batch, max_len,
                 args.steps_per_sync, prefill_chunk=pc, **kw,
             )
-    base = rows[("contiguous", 1)]["outputs"]
+    base = rows[(layouts[0], 1)]["outputs"]
     for key, r in rows.items():
         assert r["outputs"] == base, f"{key}: outputs diverge from baseline"
     print(f"arch={args.kv_arch} requests={args.prefill_requests} "
@@ -231,7 +335,7 @@ def compare_prefill(args):
               f"{r['ttft_ms']:>12.1f} {r['tok_s']:>10.1f} "
               f"{r['steps']:>6d} {r['prefill_steps']:>4d}")
     if args.prefill_chunk > 1:
-        for layout in ("contiguous", "paged"):
+        for layout in layouts:
             speedup = (rows[(layout, args.prefill_chunk)]["prefill_tok_s"]
                        / rows[(layout, 1)]["prefill_tok_s"])
             print(f"  {layout}: prompt-ingestion speedup "
@@ -260,6 +364,16 @@ def main(argv=None):
                     help="vocab size for the prefill ablation (0 keeps the "
                          "arch's own; smoke archs' 128 hides the per-step "
                          "LM-head cost chunking amortizes)")
+    ap.add_argument("--layout", choices=["both", "contiguous", "paged"],
+                    default="both",
+                    help="scope the single-layout sections to one KV "
+                         "layout (a CI matrix cell); 'both' also runs the "
+                         "cross-layout ablation")
+    ap.add_argument("--share-requests", type=int, default=8,
+                    help="rows in the prefix-sharing ablation")
+    ap.add_argument("--share-prefix-len", type=int, default=256,
+                    help="shared system-prompt length for the "
+                         "prefix-sharing ablation")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal sizes: CI driver-rot check, not a benchmark")
@@ -268,6 +382,7 @@ def main(argv=None):
         args.requests, args.gen = 8, 16
         args.prompt_len, args.prefill_chunk = 64, 16
         args.prefill_requests = 4
+        args.share_requests, args.share_prefix_len = 4, 64
     if args.smoke:
         args.requests, args.gen, args.batch = 3, 6, 2
         args.prompt_len = 20
@@ -275,6 +390,10 @@ def main(argv=None):
         args.prefill_chunk = max(2, min(args.prefill_chunk, 8))
         args.prefill_requests, args.prefill_gen = 3, 4
         args.prefill_vocab = min(args.prefill_vocab, 512)
+        # prefix sharing stays live too: 3 full pages shared across 4 rows
+        # (page-aligned so the fully-shared request exercises CoW)
+        args.share_requests = 4
+        args.share_prefix_len = 3 * args.page_size
 
     cfg = get_arch(args.arch)
     model = build_model(cfg)
@@ -282,9 +401,12 @@ def main(argv=None):
     reqs = make_requests(0, args.requests, cfg.vocab_size, args.gen)
     max_len = 12 + args.gen + 1
 
+    main_kw = {}
+    if args.layout == "paged":
+        main_kw.update(layout="paged", page_size=args.page_size)
     host = run_host_loop(model, params, reqs, args.batch, max_len)
     eng = run_engine(model, params, reqs, args.batch, max_len,
-                     args.steps_per_sync)
+                     args.steps_per_sync, **main_kw)
 
     # both schedulers must produce identical tokens before we compare speed
     for i in range(len(reqs)):
@@ -300,14 +422,20 @@ def main(argv=None):
               f"{r['seconds']:>8.2f}")
     print(f"  speedup: {eng['tok_s'] / host['tok_s']:.2f}x "
           f"(outputs token-identical)")
+    out = {"host": host, "engine": eng}
+    if args.layout == "both":
+        print()
+        print("-- KV layout: paged vs contiguous (mixed prompt lengths) --")
+        out["layouts"] = compare_layouts(args)
     print()
-    print("-- KV layout: paged vs contiguous (mixed prompt lengths) --")
-    layouts = compare_layouts(args)
-    print()
-    print("-- Chunked prefill: prompt ingestion + TTFT (both layouts) --")
-    prefill = compare_prefill(args)
-    return {"host": host, "engine": eng, "layouts": layouts,
-            "prefill": prefill}
+    print(f"-- Chunked prefill: prompt ingestion + TTFT "
+          f"(layout={args.layout}) --")
+    out["prefill"] = compare_prefill(args)
+    if args.layout in ("both", "paged"):
+        print()
+        print("-- Prefix sharing: shared system prompt, CoW (paged) --")
+        out["sharing"] = compare_prefix_sharing(args)
+    return out
 
 
 if __name__ == "__main__":

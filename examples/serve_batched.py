@@ -49,6 +49,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens ingested per engine step (chunked "
                          "prefill; 1 = token-by-token)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="page-level prompt prefix sharing with "
+                         "copy-on-write (needs --layout paged)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -62,7 +65,8 @@ def main():
                         steps_per_sync=args.steps_per_sync,
                         layout=args.layout, page_size=args.page_size,
                         n_pages=args.n_pages,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        prefix_sharing=args.prefix_sharing)
     rids = [eng.submit(toks, gen) for toks, gen in reqs]
 
     t0 = time.time()
@@ -78,6 +82,10 @@ def main():
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
               f"pages resident")
+    if "shared_prompt_tokens" in s:
+        print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
+              f"tokens served from shared pages "
+              f"({int(s['cow_pages'])} CoW copies)")
     for i, rid in enumerate(rids[:3]):
         prompt = reqs[i][0]
         print(f"req {rid}: prompt[:4]={prompt[:4]} "

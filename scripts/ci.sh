@@ -1,25 +1,53 @@
 #!/usr/bin/env bash
-# Tier-1 CI entry point: install dev deps, then run the tier-1 verify
-# command from ROADMAP.md verbatim.
+# CI entry points — the same commands the GitHub workflow runs, callable
+# locally so a green laptop means a green matrix.
 #
-#   ./scripts/ci.sh            tier-1 test suite
-#   ./scripts/ci.sh --smoke    benchmark-driver smoke: a few serving-engine
-#                              steps under PALLAS (interpret off-TPU) —
-#                              including the chunked-prefill ablation under
-#                              both KV layouts — so the benchmark entry
-#                              points can't silently rot
+#   ./scripts/ci.sh                   tier-1 test suite (ROADMAP.md verbatim)
+#   ./scripts/ci.sh --smoke [layout]  benchmark-driver smoke: a few
+#                                     serving-engine steps under
+#                                     $REPRO_BACKEND (default pallas,
+#                                     interpret off-TPU) — chunked prefill
+#                                     and, under the paged layout, the
+#                                     prefix-sharing/CoW path — so the
+#                                     benchmark entry points can't silently
+#                                     rot.  layout: contiguous | paged |
+#                                     both (default)
+#   ./scripts/ci.sh --matrix          the full smoke matrix locally:
+#                                     {reference,pallas} x {contiguous,paged}
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt ||
     echo "warning: dev-dep install failed (offline?); property tests will skip"
 
-if [[ "${1:-}" == "--smoke" ]]; then
-    # --smoke shrinks every section but keeps prefill chunking > 1, so the
-    # chunked path (kernel + pager alloc_range + scheduler) really runs
-    REPRO_BACKEND=pallas PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m benchmarks.serve_engine --smoke --prefill-chunk 8
-    exit 0
-fi
+# --smoke shrinks every section but keeps prefill chunking > 1 and a
+# page-aligned shared prefix, so the chunked path (kernel + pager
+# alloc_range + scheduler) and the sharing path (prefix index +
+# share_prefix + CoW) really run
+smoke() {
+    REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
+            --layout "$1"
+}
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+case "${1:-}" in
+--smoke)
+    smoke "${2:-both}"
+    ;;
+--matrix)
+    for backend in reference pallas; do
+        for layout in contiguous paged; do
+            echo "== smoke: backend=$backend layout=$layout =="
+            REPRO_BACKEND=$backend smoke "$layout"
+        done
+    done
+    ;;
+"")
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+    ;;
+*)
+    echo "usage: $0 [--smoke [contiguous|paged|both] | --matrix]" >&2
+    exit 2
+    ;;
+esac

@@ -34,6 +34,7 @@ def _serve_engine(model, params, prompt, args) -> int:
         layout=args.layout, page_size=args.page_size, n_pages=args.n_pages,
         temperature=args.temperature, top_k=args.top_k,
         prefill_chunk=args.prefill_chunk,
+        prefix_sharing=args.prefix_sharing,
     )
     rids = [
         eng.submit(prompt[b].tolist(), args.gen) for b in range(args.batch)
@@ -53,6 +54,10 @@ def _serve_engine(model, params, prompt, args) -> int:
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
               f"pages ({int(s['kv_resident_bytes_peak'])} resident bytes)")
+    if "shared_prompt_tokens" in s:
+        print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
+              f"tokens served from shared pages "
+              f"({int(s['cow_pages'])} CoW copies)")
     print("sample:", outs[rids[0]][:16].tolist())
     return 0
 
@@ -106,6 +111,9 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens ingested per engine step (chunked "
                          "prefill; 1 = token-by-token)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="page-level prompt prefix sharing with "
+                         "copy-on-write (needs --layout paged)")
     ap.add_argument("--check", action="store_true",
                     help="verify decode path against teacher-forced forward")
     args = ap.parse_args(argv)
@@ -120,10 +128,12 @@ def main(argv=None) -> int:
     if cfg.family in ("dense", "moe", "ssm", "hybrid"):
         rc = _serve_engine(model, params, prompt, args)
     else:
-        if args.layout != "contiguous" or args.temperature > 0 or args.top_k:
-            print(f"warning: --layout/--temperature/--top-k are engine "
-                  f"features; the {cfg.family} fallback loop is lockstep "
-                  f"greedy over the contiguous cache and ignores them")
+        if (args.layout != "contiguous" or args.temperature > 0 or args.top_k
+                or args.prefix_sharing):
+            print(f"warning: --layout/--temperature/--top-k/--prefix-sharing "
+                  f"are engine features; the {cfg.family} fallback loop is "
+                  f"lockstep greedy over the contiguous cache and ignores "
+                  f"them")
         rc = _serve_lockstep(model, params, prompt, args, cfg)
 
     if args.check and cfg.family in ("dense", "moe", "ssm", "hybrid"):

@@ -109,6 +109,42 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
     }
 
 
+def reset_decode_rows(
+    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array,  # (B,) bool
+    start: jax.Array = 0,                                  # () or (B,) int32
+) -> Dict[str, jax.Array]:
+    """Zero the selected rows' decode caches in place — signature parity
+    with ``lm.reset_decode_rows`` (including the prefix-sharing ``start``
+    offset that places the reset rows' decode clock) so slot refill is not
+    attention-LM-only by accident.  The cross K/V rows are zeroed too: a
+    refilled slot serves a new utterance, whose encoder memory is written
+    by ``prefill_cross_cache`` at admission.  Requires ``per_row_pos``
+    state."""
+    if state["pos"].ndim != 1:
+        raise ValueError(
+            "reset_decode_rows needs per_row_pos=True decode state"
+        )
+    unknown = set(state) - {"pos", "k", "v", "xk", "xv"}
+    if unknown:
+        # fail loudly: a silently-skipped cache key would leak the previous
+        # request's state into the slot's next occupant (same contract as
+        # lm.reset_decode_rows)
+        raise ValueError(
+            f"reset_decode_rows: unhandled decode-state keys {sorted(unknown)}"
+            " — declare their batch axis here before serving with them"
+        )
+    out = dict(state)
+    out["pos"] = jnp.where(mask, jnp.asarray(start, jnp.int32), state["pos"])
+    for key in ("k", "v", "xk", "xv"):
+        v = state[key]
+        shape = [1] * v.ndim
+        shape[1] = mask.shape[0]               # (L, B, S, Hkv, hd) caches
+        out[key] = jnp.where(
+            mask.reshape(shape), jnp.zeros((), v.dtype), v
+        )
+    return out
+
+
 def prefill_cross_cache(cfg: ArchConfig, params, memory, state):
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
 

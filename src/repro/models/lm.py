@@ -244,6 +244,7 @@ def init_decode_state(
             "block_table": P.init_block_table(batch, max_blocks),
             "page_free": ps.free,
             "page_top": ps.top,
+            "page_rc": ps.rc,
         }
 
     if cfg.family in ("dense", "moe"):
@@ -344,9 +345,38 @@ def _cache_update_chunk(cache: jax.Array, new: jax.Array,
     return cache.at[rows, tgt].set(new.astype(cache.dtype), mode="drop")
 
 
+def _paged_cow(state, wpos, active, *, cow: bool):
+    """Shared head of every paged write path: unpack the allocator, and —
+    when the engine can share pages (``cow``, a trace-time constant) — run
+    copy-on-write for the page each row writes at ``wpos``, moving the
+    already-written slot prefix into the private copy in both pools.
+    Returns ``(state, PagerState, block_table)``; the caller allocs into
+    ``bt`` and commits with ``_paged_commit``."""
+    from repro.serving import pager as PG
+
+    pstate = PG.PagerState(
+        state["page_free"], state["page_top"], state["page_rc"]
+    )
+    bt = state["block_table"]
+    if cow:
+        pstate, bt, src, dst, lim, _ = PG.cow_on_write(
+            pstate, bt, wpos, active, page_size=state["kp"].shape[2]
+        )
+        state = {**state,
+                 "kp": PG.copy_page_prefix(state["kp"], src, dst, lim),
+                 "vp": PG.copy_page_prefix(state["vp"], src, dst, lim)}
+    return state, pstate, bt
+
+
+def _paged_commit(state, pstate, bt):
+    return {**state, "page_free": pstate.free, "page_top": pstate.top,
+            "page_rc": pstate.rc, "block_table": bt}
+
+
 def decode_step(
     cfg: ArchConfig, params, state, token: jax.Array,  # (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
+    cow: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One token for every sequence in the batch; returns (logits, state).
 
@@ -358,6 +388,11 @@ def decode_step(
     their ``pos`` does not advance.  The layout is picked by the state dict
     itself: a ``block_table`` key means paged (see ``repro.serving.pager``
     for the contract), otherwise the contiguous slab path runs unchanged.
+
+    ``cow`` (trace-time constant) enables the copy-on-write pass before
+    paged writes — required exactly when pages can be prefix-shared
+    (``pager.share_prefix`` ran on this state); engines that never share
+    skip the per-step page gather/scatter entirely.
     """
     pos = state["pos"]
     paged = "block_table" in state
@@ -374,13 +409,14 @@ def decode_step(
     if paged:
         from repro.serving import pager as PG
 
+        # copy-on-write before the write: a row whose target page is
+        # prefix-shared (rc > 1) moves to a private copy first, so the
+        # write can never corrupt a peer's cache
+        state, pstate, bt = _paged_cow(state, idx, active, cow=cow)
         pstate, bt = PG.alloc_on_write(
-            PG.PagerState(state["page_free"], state["page_top"]),
-            state["block_table"], idx, active,
-            page_size=state["kp"].shape[2],
+            pstate, bt, idx, active, page_size=state["kp"].shape[2]
         )
-        state = {**state, "page_free": pstate.free, "page_top": pstate.top,
-                 "block_table": bt}
+        state = _paged_commit(state, pstate, bt)
     # contiguous masked-write: routing inactive rows to slot -1 drops them
     if active is not None and not paged and idx.ndim == 1:
         w_idx = jnp.where(active, idx, -1)
@@ -520,6 +556,7 @@ def prefill_chunk(
     cfg: ArchConfig, params, state, toks: jax.Array,   # (B, C) int32
     width: jax.Array,                                  # () or (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
+    cow: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Ingest up to C prompt tokens per row in one step.
 
@@ -569,15 +606,18 @@ def prefill_chunk(
     if paged:
         from repro.serving import pager as PG
 
+        # copy-on-write at the chunk's first position: shared blocks are
+        # a page-aligned prefix of the row, so only position ``pos`` can
+        # land in one (later in-chunk positions fall in the same — now
+        # private — page or in fresh blocks mapped below)
+        state, pstate, bt = _paged_cow(state, pos, active, cow=cow)
         # map every block the chunk touches up front (multi-page-per-step;
         # admission-time reservation guarantees the pops succeed)
         pstate, bt = PG.alloc_range(
-            PG.PagerState(state["page_free"], state["page_top"]),
-            state["block_table"], pos, pos + width - 1, active,
+            pstate, bt, pos, pos + width - 1, active,
             page_size=state["kp"].shape[2], max_chunk=c,
         )
-        state = {**state, "page_free": pstate.free, "page_top": pstate.top,
-                 "block_table": bt}
+        state = _paged_commit(state, pstate, bt)
 
     def attn_chunk(p, x, ck, cv):
         hkv, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -700,7 +740,8 @@ def prefill(
 
 
 def reset_decode_rows(
-    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array  # (B,) bool
+    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array,  # (B,) bool
+    start: jax.Array = 0,                                  # () or (B,) int32
 ) -> Dict[str, jax.Array]:
     """Zero the decode caches of the rows selected by ``mask``.
 
@@ -708,13 +749,19 @@ def reset_decode_rows(
     reset in place (no retracing, no reallocation) before a queued request
     is admitted into it.  Requires ``per_row_pos`` state — with a scalar
     ``pos`` the rows share a clock and cannot be reset independently.
+
+    ``start`` places the reset rows' decode clock (prefix-sharing
+    admission: positions below ``start`` are already cached in pages the
+    engine maps via ``pager.share_prefix`` right after this reset, so
+    prefill resumes at the first unshared token instead of position 0).
     """
     if state["pos"].ndim != 1:
         raise ValueError(
             "reset_decode_rows needs per_row_pos=True decode state"
         )
     known = {"k", "v", "ssm", "conv", "xk", "xv"}
-    paged_keys = {"kp", "vp", "block_table", "page_free", "page_top"}
+    paged_keys = {"kp", "vp", "block_table", "page_free", "page_top",
+                  "page_rc"}
     unknown = set(state) - known - paged_keys - {"pos"}
     if unknown:
         # fail loudly: a silently-skipped cache key would leak the previous
@@ -724,19 +771,22 @@ def reset_decode_rows(
             " — declare their batch axis here before serving with them"
         )
     out = dict(state)
-    out["pos"] = jnp.where(mask, 0, state["pos"])
+    out["pos"] = jnp.where(mask, jnp.asarray(start, jnp.int32), state["pos"])
     if "block_table" in state:
         # paged layout: a reset row *releases* its pages (the pool is global
         # and is never zeroed — a recycled page is fully overwritten by its
-        # next owner before any masked-in read can see it)
+        # next owner before any masked-in read can see it); pages still
+        # referenced by a prefix-sharing peer stay resident (refcounts)
         from repro.serving import pager as PG
 
         pstate, bt = PG.release_rows(
-            PG.PagerState(state["page_free"], state["page_top"]),
+            PG.PagerState(state["page_free"], state["page_top"],
+                          state["page_rc"]),
             state["block_table"], mask,
         )
         out["block_table"] = bt
         out["page_free"], out["page_top"] = pstate.free, pstate.top
+        out["page_rc"] = pstate.rc
     for key in known & set(state):
         v = state[key]
         # batch axis: (layers/groups, B, ...) except the VLM self-attn cache,

@@ -23,8 +23,9 @@ class Model:
     prefill: Callable[..., jax.Array]
     init_decode_state: Callable[..., Dict[str, jax.Array]]
     decode_step: Callable[..., Any]
-    # zero selected batch rows' decode caches (serving slot refill); raises
-    # for families without per-row decode state support
+    # zero selected batch rows' decode caches (serving slot refill);
+    # ``start=`` places the reset rows' decode clock (prefix-sharing
+    # admission resumes prefill at the first unshared token)
     reset_decode_rows: Callable[..., Dict[str, jax.Array]] = None
     # multi-token prompt ingestion (chunked prefill): (params, state,
     # toks (B,C), width (B,), active=...) -> (last-position logits, state)
@@ -45,12 +46,6 @@ def build_model(cfg: ArchConfig) -> Model:
             from repro.models import components as C
             return C.dense(h[:, -1:, :], params["lm_head"])[:, 0]
 
-        def no_reset(state, mask):
-            raise NotImplementedError(
-                "encdec decode state has no per-row reset (serving engine "
-                "supports the LM families)"
-            )
-
         return Model(
             cfg=cfg,
             init_params=lambda rng: encdec.init_params(cfg, rng),
@@ -60,7 +55,9 @@ def build_model(cfg: ArchConfig) -> Model:
             decode_step=lambda params, state, token, **kw: encdec.decode_step(
                 cfg, params, state, token, **kw
             ),
-            reset_decode_rows=no_reset,
+            reset_decode_rows=lambda state, mask, **kw: encdec.reset_decode_rows(
+                cfg, state, mask, **kw
+            ),
             prefill_chunk=lambda params, state, toks, width, **kw:
                 encdec.prefill_chunk(cfg, params, state, toks, width, **kw),
         )
@@ -81,8 +78,8 @@ def build_model(cfg: ArchConfig) -> Model:
         decode_step=lambda params, state, token, **kw: lm.decode_step(
             cfg, params, state, token, **kw
         ),
-        reset_decode_rows=lambda state, mask: lm.reset_decode_rows(
-            cfg, state, mask
+        reset_decode_rows=lambda state, mask, **kw: lm.reset_decode_rows(
+            cfg, state, mask, **kw
         ),
         prefill_chunk=lambda params, state, toks, width, **kw:
             lm.prefill_chunk(cfg, params, state, toks, width, **kw),

@@ -10,10 +10,13 @@ from repro.serving.pager import (
     PagerState,
     alloc_on_write,
     alloc_range,
+    copy_page_prefix,
+    cow_on_write,
     init_block_table,
     init_pager,
     pages_needed,
     release_rows,
+    share_prefix,
     write_page,
     write_page_chunk,
 )
@@ -27,6 +30,8 @@ __all__ = [
     "SlotState",
     "alloc_on_write",
     "alloc_range",
+    "copy_page_prefix",
+    "cow_on_write",
     "engine_step",
     "init_block_table",
     "init_pager",
@@ -34,6 +39,7 @@ __all__ = [
     "pages_needed",
     "release_rows",
     "serve_all",
+    "share_prefix",
     "write_page",
     "write_page_chunk",
 ]

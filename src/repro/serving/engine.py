@@ -31,6 +31,17 @@ row per decode step.  Here the whole control state lives on-device:
     steps, chunk widths, TTFT stamps and ingestion counts never needs a
     device sync.  Decode-phase rows ride along in prefill steps with
     width 1; both jitted entry points stay at cache size 1.
+  * prefix sharing — ``prefix_sharing=True`` (paged layout only) keeps a
+    host-side index of page-aligned prompt chunks (chained hashes, exact
+    token verification — deterministic, no device sync).  Admission maps
+    a matching resident row's prompt pages into the new row's block
+    table by *donor slot id* (``pager.share_prefix`` bumps refcounts on
+    device; the host never needs physical page ids) and starts chunked
+    prefill at the first unshared token.  Writes into a still-shared
+    page copy-on-write to a private page inside the jitted step
+    (``pager.cow_on_write``), so ``_admit``/``_prefill``/``_step_n`` all
+    stay at jit cache size 1 and outputs are token-identical to the
+    no-sharing engine.
 
 Supported families: dense / moe / ssm / hybrid (everything whose decode
 state supports per-row positions; VLM cross-caches would additionally need
@@ -102,7 +113,7 @@ def _sample(logits, slots: SlotState, wpos, *, temperature: float,
 
 def engine_step(model: Model, params, mstate, slots: SlotState,
                 *, temperature: float = 0.0, top_k: int = 0,
-                chunk: int = 1):
+                chunk: int = 1, cow: bool = False):
     """One decode (or chunked-prefill) step for every row — no host
     interaction.
 
@@ -137,7 +148,7 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
         )
         toks = jnp.take_along_axis(slots.tokens, gidx, axis=1)
         logits, mstate = model.prefill_chunk(params, mstate, toks, width,
-                                             active=slots.active)
+                                             active=slots.active, cow=cow)
         stride = width
     else:
         feed_idx = jnp.clip(slots.progress, 0, max_len - 1)
@@ -145,7 +156,7 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
             slots.tokens, feed_idx[:, None], axis=1
         )[:, 0]
         logits, mstate = model.decode_step(params, mstate, tok,
-                                           active=slots.active)
+                                           active=slots.active, cow=cow)
         stride = jnp.ones((b,), jnp.int32)
 
     wpos = slots.progress + stride
@@ -203,6 +214,26 @@ class ServingEngine:
     docstring).  Sliding-window archs need ``layout="paged"`` for
     chunking (absolute positions; the contiguous ring recycles slots the
     chunk still reads).
+
+    ``prefix_sharing=True`` (paged layout only): a new request whose
+    prompt starts with page-aligned chunks already written by a resident
+    row maps that row's pages instead of recomputing them — prefill
+    starts at the first unshared token, the shared pages' refcounts keep
+    them alive past the donor's completion, and the one write that can
+    land in a shared page (the re-fed last prompt token of a fully
+    shared prompt) copies-on-write to a private page.  Outputs are
+    token-identical to the no-sharing engine; what changes is TTFT and
+    resident KV bytes (shared pages are resident once, not per row).
+    Families with recurrent decode state (ssm, and the hybrid family's
+    Mamba blocks) never match: skipping prefill would also skip the
+    recurrence, so only pure-attention families (dense/moe) share —
+    others accept the flag and serve identically to no-sharing.  MoE
+    caveat as for chunked prefill: sharing changes which tokens batch
+    into a routing step, so parity needs ``capacity_factor >=
+    n_experts``.  Admission reserves the worst-case page count *without*
+    subtracting shared pages (plus the one CoW spare): a donor may
+    finish first, leaving the sharer sole holder, so the conservative
+    ledger is what keeps alloc-on-write sync-free and never dry.
     """
 
     def __init__(
@@ -220,6 +251,7 @@ class ServingEngine:
         top_k: int = 0,
         seed: int = 0,
         prefill_chunk: int = 1,
+        prefix_sharing: bool = False,
     ) -> None:
         if model.cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise NotImplementedError(
@@ -238,6 +270,11 @@ class ServingEngine:
                 "layout='paged' (the contiguous ring cache recycles slots "
                 "the in-chunk queries still read)"
             )
+        if prefix_sharing and layout != "paged":
+            raise ValueError(
+                "prefix sharing needs layout='paged' — pages are the "
+                "sharing unit (the contiguous slab has per-row storage)"
+            )
         self.model = model
         self.params = params
         self.batch = batch
@@ -245,6 +282,7 @@ class ServingEngine:
         self.steps_per_sync = steps_per_sync
         self.layout = layout
         self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = bool(prefix_sharing)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.queue = RequestQueue(max_len=max_len)
@@ -265,6 +303,22 @@ class ServingEngine:
         self._row_pages: List[int] = [0] * batch
         self._pages_reserved = 0
         self.peak_pages_in_use = 0
+        # prefix sharing is only *effective* for pure-attention families:
+        # recurrent state (ssm/hybrid) cannot skip positions, so those
+        # accept the flag but never match (identical to no-sharing)
+        self._share_eligible = (
+            self.prefix_sharing and self._paged
+            and model.cfg.family in ("dense", "moe")
+        )
+        # host-side prefix index: chained chunk hash -> (slot, epoch).
+        # Epochs invalidate entries when their slot's request is released;
+        # matches are verified token-exact against the donor's prompt, so
+        # a hash collision can never map the wrong pages.
+        self._prefix_index: Dict[int, tuple] = {}
+        self._slot_epoch: List[int] = [0] * batch
+        self._slot_hashes: List[List[int]] = [[] for _ in range(batch)]
+        self.shared_prompt_tokens = 0   # prompt tokens skipped via sharing
+        self.cow_pages = 0              # CoW copies (host-predicted)
 
         # KV byte arithmetic is shape-only — freeze it here instead of
         # re-walking the state pytree on every stats()/resident-bytes call
@@ -303,24 +357,47 @@ class ServingEngine:
         self.ttft: Dict[int, float] = {}        # req_id -> seconds
         self._t_submit: Dict[int, float] = {}
 
+        # the CoW pass only exists in traces that can ever share a page
+        # (static per engine): non-sharing paged engines keep the plain
+        # allocator's decode trace
+        cow = self._share_eligible
+
         def _step_n(params, mstate, slots):
             def body(_, carry):
                 ms, sl = carry
                 return engine_step(model, params, ms, sl,
                                    temperature=self.temperature,
-                                   top_k=self.top_k)
+                                   top_k=self.top_k, cow=cow)
             return jax.lax.fori_loop(
                 0, steps_per_sync, body, (mstate, slots)
             )
 
+        paged = self._paged
+
         def _admit(mstate, slots, new_tokens, new_plen, new_total, new_rng,
-                   mask):
-            mstate = model.reset_decode_rows(mstate, mask)
+                   mask, new_start, share_src, share_nblk):
+            # release the rows' old pages, zero their recurrent state, and
+            # place their decode clock at the first unshared token
+            mstate = model.reset_decode_rows(mstate, mask, start=new_start)
+            if paged:
+                # map the donor rows' shared prompt pages (refcount bump);
+                # share_nblk == 0 everywhere makes this the plain
+                # admission trace — same jit cache entry either way
+                from repro.serving import pager as PG
+
+                pstate, bt = PG.share_prefix(
+                    PG.PagerState(mstate["page_free"], mstate["page_top"],
+                                  mstate["page_rc"]),
+                    mstate["block_table"], share_src, share_nblk, mask,
+                )
+                mstate = {**mstate, "block_table": bt,
+                          "page_free": pstate.free, "page_top": pstate.top,
+                          "page_rc": pstate.rc}
             return mstate, SlotState(
                 tokens=jnp.where(mask[:, None], new_tokens, slots.tokens),
                 prompt_len=jnp.where(mask, new_plen, slots.prompt_len),
                 total_len=jnp.where(mask, new_total, slots.total_len),
-                progress=jnp.where(mask, 0, slots.progress),
+                progress=jnp.where(mask, new_start, slots.progress),
                 active=slots.active | mask,
                 rng=jnp.where(mask[:, None], new_rng, slots.rng),
             )
@@ -334,7 +411,8 @@ class ServingEngine:
             def _prefill_step(params, mstate, slots):
                 return engine_step(model, params, mstate, slots,
                                    temperature=self.temperature,
-                                   top_k=self.top_k, chunk=prefill_chunk)
+                                   top_k=self.top_k, chunk=prefill_chunk,
+                                   cow=cow)
             self._prefill = jax.jit(_prefill_step, donate_argnums=(1, 2))
         else:
             self._prefill = None
@@ -358,6 +436,86 @@ class ServingEngine:
         from repro.serving.pager import pages_needed
         return pages_needed(total_len, self.page_size)
 
+    # -- host-side prefix index (no device sync anywhere) --------------------
+
+    def _prefix_chain(self, tokens: np.ndarray):
+        """Chained hashes of the page-aligned full prompt chunks: chunk i's
+        hash folds in chunk i-1's, so a hit at depth i certifies the whole
+        prefix — the page's K/V depends on everything before it, not just
+        its own tokens."""
+        s = self.page_size
+        h = 0x51ED2701
+        for i in range(len(tokens) // s):
+            h = hash((h, tokens[i * s:(i + 1) * s].tobytes()))
+            yield i, h
+
+    def _register_prefix(self, b: int, tokens: np.ndarray) -> None:
+        ep = self._slot_epoch[b]
+        for _, h in self._prefix_chain(tokens):
+            ent = self._prefix_index.get(h)
+            if ent is not None:
+                src, src_ep = ent
+                if (src_ep == self._slot_epoch[src]
+                        and self._slot_req[src] is not None):
+                    # a live row already serves this chunk: keep it (a
+                    # sharer overwriting its donor would take the entry
+                    # to its own — likely earlier — grave, leaving the
+                    # still-resident donor unmatchable)
+                    continue
+            self._prefix_index[h] = (b, ep)
+            self._slot_hashes[b].append(h)
+
+    def _evict_prefix(self, b: int) -> None:
+        """Invalidate slot b's index entries (request released).  The epoch
+        bump is what guarantees staleness; the deletes just keep the index
+        bounded by resident prompts."""
+        old = (b, self._slot_epoch[b])
+        self._slot_epoch[b] += 1
+        dropped = False
+        for h in self._slot_hashes[b]:
+            if self._prefix_index.get(h) == old:
+                del self._prefix_index[h]
+                dropped = True
+        self._slot_hashes[b] = []
+        if dropped:
+            # hand the dropped chunks to surviving holders: a sharer keeps
+            # the donor's pages resident (refcounts), so it can donate them
+            # onward — without this, a shared prefix would go unmatchable
+            # the moment its original donor finishes, even though the
+            # pages live on (re-registration only fills gaps; entries that
+            # still point at live rows are kept)
+            for s, req in enumerate(self._slot_req):
+                if req is not None:
+                    self._register_prefix(s, req.tokens)
+
+    def _match_prefix(self, tokens: np.ndarray):
+        """Longest page-aligned shared prefix among resident rows: returns
+        (donor slot, shared block count), (0, 0) when nothing matches.
+
+        A hit is honored only if the donor still holds its request (epoch
+        check), its host-mirror progress shows the chunk fully *written*
+        (mapped pages alone could still be mid-prefill), the chunk is all
+        prompt (never a donor's generated tokens), and the tokens compare
+        equal — the hash only routes, equality decides."""
+        if not self._share_eligible:
+            return 0, 0
+        best = (0, 0)
+        s = self.page_size
+        for i, h in self._prefix_chain(tokens):
+            ent = self._prefix_index.get(h)
+            if ent is None:
+                continue
+            src, ep = ent
+            end = (i + 1) * s
+            req = self._slot_req[src]
+            if (ep != self._slot_epoch[src] or req is None
+                    or req.prompt_len < end
+                    or self._row_progress[src] < end
+                    or not np.array_equal(tokens[:end], req.tokens[:end])):
+                continue
+            best = (src, i + 1)
+        return best
+
     def _refill(self) -> int:
         """Admit queued requests into free rows (one jitted masked write).
 
@@ -365,6 +523,16 @@ class ServingEngine:
         count fits under the pool reservation; otherwise admission stops
         (FIFO — no reordering past a starving request).  Contiguous
         layout: slot availability alone gates admission, as before.
+
+        Prefix sharing: each admitted prompt is matched against the
+        host-side index; on a hit the donor's leading blocks are mapped
+        (``share_prefix`` inside ``_admit``) and the row starts at the
+        first unshared token.  Reservation stays the *full* worst case
+        plus one CoW spare for a fully shared prompt — a donor may finish
+        first and leave the sharer sole holder of the shared pages, so
+        subtracting them would let the pool over-commit (see class
+        docstring); the sharing win is resident bytes and TTFT, not
+        admission capacity.
         """
         free = [b for b, r in enumerate(self._slot_req) if r is None]
         if not free or not self.queue:
@@ -374,17 +542,35 @@ class ServingEngine:
         new_total = np.ones((self.batch,), np.int32)
         new_rng = np.zeros((self.batch, 2), np.uint32)
         mask = np.zeros((self.batch,), bool)
+        new_start = np.zeros((self.batch,), np.int32)
+        share_src = np.zeros((self.batch,), np.int32)
+        share_nblk = np.zeros((self.batch,), np.int32)
+        registrations = []
         n = 0
         for b in free:
             req = self.queue.peek()
             if req is None:
                 break
-            need = self._pages_needed(req.total_len) if self._paged else 0
-            if self._paged and self._pages_reserved + need > self.n_pages:
-                break
+            src, nblk = self._match_prefix(req.tokens)
+            shared = nblk * self.page_size
+            # always re-feed at least the last prompt token: its logits
+            # seed generation (a fully shared prompt re-feeds exactly one
+            # token, whose write CoWs the final shared page)
+            start = min(shared, req.prompt_len - 1)
+            cow = 1 if shared > start else 0
+            if self._paged:
+                need = self._pages_needed(req.total_len) + cow
+                if need > self.n_pages:
+                    # the CoW spare would overflow the pool: serve unshared
+                    src = nblk = shared = start = cow = 0
+                    need = self._pages_needed(req.total_len)
+                if self._pages_reserved + need > self.n_pages:
+                    break
+            else:
+                need = 0
             self.queue.pop()
             self._slot_req[b] = req
-            self._row_progress[b] = 0
+            self._row_progress[b] = start
             self._row_pages[b] = need
             self._pages_reserved += need
             new_tokens[b, : req.prompt_len] = req.tokens
@@ -394,6 +580,13 @@ class ServingEngine:
                 0, 2 ** 32, size=2, dtype=np.uint32
             )
             mask[b] = True
+            new_start[b] = start
+            share_src[b] = src
+            share_nblk[b] = nblk
+            self.shared_prompt_tokens += start
+            self.cow_pages += cow
+            if self._share_eligible:
+                registrations.append((b, req.tokens))
             n += 1
         if n == 0:
             return 0
@@ -401,8 +594,14 @@ class ServingEngine:
             self._mstate, self._slots,
             jnp.asarray(new_tokens), jnp.asarray(new_plen),
             jnp.asarray(new_total), jnp.asarray(new_rng),
-            jnp.asarray(mask),
+            jnp.asarray(mask), jnp.asarray(new_start),
+            jnp.asarray(share_src), jnp.asarray(share_nblk),
         )
+        # register *after* the device mapping exists: rows admitted in this
+        # same batch must not pick each other as donors (their shared
+        # blocks only materialize in the _admit call above)
+        for b, toks in registrations:
+            self._register_prefix(b, toks)
         return n
 
     # -- serving loop --------------------------------------------------------
@@ -508,6 +707,9 @@ class ServingEngine:
             self._slot_req[b] = None
             self._pages_reserved -= self._row_pages[b]
             self._row_pages[b] = 0
+            # the slot's prompt leaves the prefix index; its *pages* live
+            # on while any sharer still references them (device refcounts)
+            self._evict_prefix(b)
             release[b] = True
             finished += 1
         if finished and self._paged:
@@ -533,6 +735,7 @@ class ServingEngine:
         self.steps = self.prefill_steps = 0
         self.generated = self.prompt_tokens = 0
         self.peak_pages_in_use = 0
+        self.shared_prompt_tokens = self.cow_pages = 0
 
     def kv_bytes_per_page(self) -> int:
         """Bytes one page occupies across all layer slabs (K and V) —
@@ -566,6 +769,9 @@ class ServingEngine:
             out["kv_resident_bytes_peak"] = float(
                 self.kv_resident_bytes(peak=True)
             )
+        if self.prefix_sharing:
+            out["shared_prompt_tokens"] = float(self.shared_prompt_tokens)
+            out["cow_pages"] = float(self.cow_pages)
         return out
 
 

@@ -30,21 +30,51 @@ Block-table layout contract (shared by the jnp reference path and
     positions ``0..pos`` sequentially before any read at ``kpos < pos+1``
     can see them, so stale data is never observable.
 
-Allocator state is two device arrays (the free list as a stack), so
-allocation and release are pure ``jnp`` and run *inside* jitted steps with
-fixed shapes — the same masked-write idiom as the serving engine's slot
-refill; nothing retraces:
+Allocator state is three device arrays (the free list as a stack plus a
+per-page refcount), so allocation, sharing and release are pure ``jnp``
+and run *inside* jitted steps with fixed shapes — the same masked-write
+idiom as the serving engine's slot refill; nothing retraces:
 
   * ``free``  ``(n_pages,)`` int32 — entries ``[0, top)`` are free page
     ids; entries above ``top`` are stale (owned by block tables).
   * ``top``   ``()`` int32 — number of free pages.
+  * ``rc``    ``(n_pages,)`` int32 — per-page refcount: how many
+    block-table entries reference the page.  0 for free pages.
 
 ``alloc_on_write`` maps the block a row is about to write (pop from the
-stack top; rows ranked by batch index within one step), ``release_rows``
-pushes a completed row's pages back.  Conservation invariant (the
-hypothesis property in ``tests/test_pager.py``): the free-list prefix and
-the mapped block-table entries always partition ``0..n_pages-1`` with no
-page owned twice.
+stack top; rows ranked by batch index within one step) and sets its
+refcount to 1; ``release_rows`` decrements every mapped page of the
+released rows and pushes only the pages whose refcount reaches 0 back
+onto the stack.  Conservation invariant (the hypothesis property in
+``tests/test_pager.py``): the free-list prefix and the pages referenced
+by block tables always partition ``0..n_pages-1``, and each referenced
+page's refcount equals the number of block-table entries pointing at it
+— no page is simultaneously free and mapped, or lost.
+
+Prefix sharing and copy-on-write (the refcount's reason to exist):
+
+  * ``share_prefix`` maps the leading blocks of a *donor* row into a
+    newly admitted row's block table and bumps each shared page's
+    refcount — the sharer reads the donor's already-written prompt K/V
+    without re-running prefill for it.  Shared pages are always *full*
+    prompt pages (page-aligned sharing), so the donor never writes them
+    again (its write positions only grow).
+  * a page with ``rc > 1`` is read-only to everyone.  ``cow_on_write``
+    runs before any paged write: a row about to write a page it does not
+    exclusively own pops a fresh page, swaps its block-table entry, and
+    drops its ref on the shared page (a ref dropped to 0 — every other
+    holder CoW'd or released first — sends the page straight back to the
+    free list, so simultaneous CoWs cannot leak it).  The caller copies
+    the already-written slot prefix with ``copy_page_prefix`` (a jitted
+    masked copy — slots at and above the write position are garbage by
+    construction and are zeroed, never read).  Because sharing is
+    page-aligned, a row can hit CoW at most once: only when its whole
+    prompt is shared (the re-fed last prompt token lands in the final
+    shared page); engine admission reserves one extra page for it.
+  * pop order within one jitted step is deterministic: CoW pops rank
+    before the step's ``alloc_on_write``/``alloc_range`` pops, rows
+    ranked by batch index inside each — the engine's host mirror relies
+    on nothing finer than the reservation totals, but tests do.
 
 Multi-page-per-step allocation (chunked prefill): a step that writes a
 *range* of positions ``start..end`` may straddle several blocks, so
@@ -69,17 +99,33 @@ import jax.numpy as jnp
 
 
 class PagerState(NamedTuple):
-    """Free-list stack as device arrays (a pytree; jit/donation friendly)."""
+    """Free-list stack + per-page refcounts as device arrays (a pytree;
+    jit/donation friendly)."""
 
     free: jax.Array  # (n_pages,) int32: free[:top] are free page ids
     top: jax.Array   # ()        int32: number of free pages
+    rc: jax.Array    # (n_pages,) int32: block-table refs per page (0 = free)
 
 
 def init_pager(n_pages: int) -> PagerState:
     return PagerState(
         free=jnp.arange(n_pages, dtype=jnp.int32),
         top=jnp.asarray(n_pages, jnp.int32),
+        rc=jnp.zeros((n_pages,), jnp.int32),
     )
+
+
+def _push_freed(free: jax.Array, top: jax.Array,
+                freed: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Push the pages selected by the (n_pages,) bool mask onto the stack
+    (ascending page id — any deterministic order works; readers only ever
+    pop from the top)."""
+    n_pages = free.shape[0]
+    page_ids = jnp.arange(n_pages, dtype=jnp.int32)
+    rank = jnp.cumsum(freed) - 1
+    dst = jnp.where(freed, top + rank, n_pages)       # sentinel: dropped
+    free = free.at[dst].set(page_ids, mode="drop")
+    return free, top + jnp.sum(freed, dtype=jnp.int32)
 
 
 def init_block_table(batch: int, max_blocks: int) -> jax.Array:
@@ -133,7 +179,8 @@ def alloc_on_write(
         grant[:, None] & (col == blk_c[:, None]), page[:, None], block_table
     )
     top = pager.top - jnp.sum(grant, dtype=jnp.int32)
-    return PagerState(pager.free, top), block_table
+    rc = pager.rc.at[jnp.where(grant, page, n_pages)].set(1, mode="drop")
+    return PagerState(pager.free, top, rc), block_table
 
 
 def alloc_range(
@@ -174,19 +221,133 @@ def release_rows(
     block_table: jax.Array,   # (B, max_blocks) int32
     mask: jax.Array,          # (B,) bool: rows whose pages return to the pool
 ) -> Tuple[PagerState, jax.Array]:
-    """Push every mapped page of the masked rows back onto the free stack
-    and unmap their block-table rows.  Releasing an already-empty row is a
-    no-op, so release-on-completion and release-at-admission compose."""
+    """Drop the masked rows' refs on every page they map, push the pages
+    whose refcount reaches 0 back onto the free stack, and unmap the rows.
+    A page still referenced by a prefix-sharing peer stays resident (its
+    content outlives the row that first wrote it).  Releasing an
+    already-empty row is a no-op, so release-on-completion and
+    release-at-admission compose."""
     n_pages = pager.free.shape[0]
     give = mask[:, None] & (block_table >= 0)
-    pages = jnp.where(give, block_table, -1).reshape(-1)
-    is_page = pages >= 0
-    rank = jnp.cumsum(is_page) - 1
-    dst = jnp.where(is_page, pager.top + rank, n_pages)   # sentinel: dropped
-    free = pager.free.at[dst].set(pages, mode="drop")
-    top = pager.top + jnp.sum(is_page, dtype=jnp.int32)
+    pages = jnp.where(give, block_table, n_pages).reshape(-1)
+    # per-page ref drops (duplicates accumulate: two released sharers of
+    # one page decrement it twice in this single call)
+    dec = jnp.zeros((n_pages,), jnp.int32).at[pages].add(1, mode="drop")
+    rc = pager.rc - dec
+    freed = (pager.rc > 0) & (rc <= 0) & (dec > 0)
+    rc = jnp.maximum(rc, 0)
+    free, top = _push_freed(pager.free, pager.top, freed)
     block_table = jnp.where(mask[:, None], -1, block_table)
-    return PagerState(free, top), block_table
+    return PagerState(free, top, rc), block_table
+
+
+def share_prefix(
+    pager: PagerState,
+    block_table: jax.Array,   # (B, max_blocks) int32
+    src: jax.Array,           # (B,) int32: donor row per admitted row
+    nblk: jax.Array,          # (B,) int32: leading blocks to share (0 = none)
+    mask: jax.Array,          # (B,) bool: rows being admitted
+) -> Tuple[PagerState, jax.Array]:
+    """Map the donor rows' leading blocks into the masked rows and bump the
+    shared pages' refcounts.
+
+    Pure ``jnp``, fixed shapes — runs inside the engine's jitted ``_admit``
+    (``nblk == 0`` rows are untouched, so the non-sharing admission path is
+    the same trace).  The caller (the engine's host-side prefix index)
+    guarantees the donor is a live row outside ``mask`` whose first
+    ``nblk`` blocks are mapped and fully written; unmapped donor entries
+    are skipped defensively.  Duplicate bumps accumulate: two rows
+    admitted in one call sharing the same donor page raise its refcount
+    by two."""
+    b = block_table.shape[0]
+    n_pages = pager.free.shape[0]
+    src_c = jnp.clip(jnp.asarray(src, jnp.int32).reshape(-1), 0, b - 1)
+    donor = block_table[src_c]                          # (B, max_blocks)
+    col = jax.lax.broadcasted_iota(jnp.int32, block_table.shape, 1)
+    nblk_b = jnp.broadcast_to(jnp.asarray(nblk, jnp.int32).reshape(-1), (b,))
+    take = mask[:, None] & (col < nblk_b[:, None]) & (donor >= 0)
+    block_table = jnp.where(take, donor, block_table)
+    pages = jnp.where(take, donor, n_pages).reshape(-1)
+    inc = jnp.zeros((n_pages,), jnp.int32).at[pages].add(1, mode="drop")
+    return PagerState(pager.free, pager.top, pager.rc + inc), block_table
+
+
+def cow_on_write(
+    pager: PagerState,
+    block_table: jax.Array,          # (B, max_blocks) int32
+    idx: jax.Array,                  # () or (B,) int32: position being written
+    active: Optional[jax.Array] = None,   # (B,) bool; None = all rows
+    *,
+    page_size: int,
+) -> Tuple[PagerState, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Copy-on-write step: un-share the page each row is about to write.
+
+    For every active row whose target block maps a page with ``rc > 1``
+    (readable by someone else), pop a fresh page, swap the block-table
+    entry, set the fresh page's refcount to 1 and drop the row's ref on
+    the shared page — pages whose refcount reaches 0 (simultaneous CoWs
+    by every remaining holder) go straight back to the free list, so
+    nothing leaks.  Returns ``(pager, block_table, src, dst, limit,
+    moved)``: the caller must copy slots ``[0, limit)`` of each moved
+    row's old page into the new one in every pool slab
+    (``copy_page_prefix``) *before* writing position ``idx``.  ``src`` /
+    ``dst`` are ``n_pages`` sentinels for rows that did not move.
+
+    Rows needing a fresh page rank by batch index, same pop discipline as
+    ``alloc_on_write``; admission-time reservation (one spare page per
+    fully-shared prompt) keeps the free list from running dry here, and a
+    dry pop leaves the row on the shared page (same "reservation prevents
+    this" convention as a denied alloc)."""
+    b, max_blocks = block_table.shape
+    n_pages = pager.free.shape[0]
+    idx_b = jnp.broadcast_to(jnp.asarray(idx, jnp.int32).reshape(-1), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    blk = idx_b // page_size
+    blk_c = jnp.clip(blk, 0, max_blocks - 1)
+    cur = jnp.take_along_axis(block_table, blk_c[:, None], axis=1)[:, 0]
+    shared = (
+        active & (blk < max_blocks) & (cur >= 0)
+        & (pager.rc[jnp.clip(cur, 0, n_pages - 1)] > 1)
+    )
+    rank = jnp.cumsum(shared) - 1
+    grant = shared & (rank < pager.top)
+    slot = jnp.clip(pager.top - 1 - rank, 0, n_pages - 1)
+    fresh = jnp.where(grant, pager.free[slot], cur)
+    col = jax.lax.broadcasted_iota(jnp.int32, block_table.shape, 1)
+    block_table = jnp.where(
+        grant[:, None] & (col == blk_c[:, None]), fresh[:, None], block_table
+    )
+    top = pager.top - jnp.sum(grant, dtype=jnp.int32)
+    old = jnp.where(grant, cur, n_pages)
+    dec = jnp.zeros((n_pages,), jnp.int32).at[old].add(1, mode="drop")
+    rc = pager.rc - dec
+    orphaned = (pager.rc > 0) & (rc <= 0) & (dec > 0)
+    rc = jnp.maximum(rc, 0)
+    rc = rc.at[jnp.where(grant, fresh, n_pages)].set(1, mode="drop")
+    free, top = _push_freed(pager.free, top, orphaned)
+    limit = idx_b % page_size
+    dst = jnp.where(grant, fresh, n_pages)
+    return PagerState(free, top, rc), block_table, old, dst, limit, grant
+
+
+def copy_page_prefix(
+    pool: jax.Array,    # (stacks, n_pages, page_size, Hkv, hd)
+    src: jax.Array,     # (B,) int32 page ids (n_pages sentinel = skip row)
+    dst: jax.Array,     # (B,) int32 page ids (n_pages sentinel = skip row)
+    limit: jax.Array,   # (B,) int32: copy slots [0, limit)
+) -> jax.Array:
+    """The CoW data move: copy each moved row's already-written slot
+    prefix from its old page to its fresh page across every layer slab in
+    one masked gather/scatter.  Slots at and above ``limit`` hold garbage
+    by the sequential-write contract and are zeroed, never read."""
+    n_pages, page_size = pool.shape[1], pool.shape[2]
+    content = pool[:, jnp.clip(src, 0, n_pages - 1)]   # (stacks, B, S, ...)
+    keep = jnp.arange(page_size, dtype=jnp.int32)[None, :] < limit[:, None]
+    content = jnp.where(
+        keep[None, :, :, None, None], content, jnp.zeros((), pool.dtype)
+    )
+    return pool.at[:, dst].set(content, mode="drop")
 
 
 def write_page(

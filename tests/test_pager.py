@@ -1,14 +1,21 @@
 """Property tests for the device-side page allocator (`repro.serving.pager`).
 
-The layout contract's conservation law: at every moment the free-list
-prefix and the mapped block-table entries *partition* the page set — no
-page is simultaneously free and mapped, mapped by two rows, or lost.
-Interleaved alloc-on-write / release sequences exercise it: hypothesis
-generates them when installed; a seeded fallback sweep always runs, so
-the invariant is covered even where dev deps are absent.  A separate
-case checks the allocator state round-trips through jit unchanged (the
+The layout contract's conservation law, refcount form: at every moment
+the free-list prefix and the pages referenced by block tables *partition*
+the page set, and each referenced page's refcount equals the number of
+block-table entries pointing at it — no page is simultaneously free and
+mapped, lost, or miscounted.  Interleaved alloc-on-write / release /
+share-prefix / copy-on-write sequences exercise it (the share step
+replays the engine's admission order: release the admitted rows, map the
+donor's leading blocks, resume one position before the shared frontier so
+the next write lands in a shared page and CoWs): hypothesis generates
+them when installed; a seeded fallback sweep always runs, so the
+invariant is covered even where dev deps are absent.  A separate case
+checks the allocator state round-trips through jit unchanged (the
 no-retrace requirement of the serving engine).
 """
+from collections import Counter
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,30 +33,61 @@ except ImportError:          # property sweep falls back to seeded cases
 
 def _check_partition(ps: pager.PagerState, bt) -> None:
     free, top = np.asarray(ps.free), int(ps.top)
+    rc = np.asarray(ps.rc)
     table = np.asarray(bt)
     n_pages = free.shape[0]
     assert 0 <= top <= n_pages
     free_ids = free[:top].tolist()
-    mapped = table[table >= 0].tolist()
     assert len(set(free_ids)) == len(free_ids), "free list holds a dup"
-    assert len(set(mapped)) == len(mapped), "page mapped twice"
-    assert sorted(free_ids + mapped) == list(range(n_pages)), (
-        "free + mapped must partition the page set"
-    )
+    counts = Counter(table[table >= 0].tolist())
+    free_set = set(free_ids)
+    for p in range(n_pages):
+        if p in free_set:
+            assert counts[p] == 0, f"page {p} free and mapped"
+            assert rc[p] == 0, f"free page {p} has rc {rc[p]}"
+        else:
+            assert rc[p] == counts[p] >= 1, (
+                f"resident page {p}: rc {rc[p]} != {counts[p]} refs"
+            )
 
 
 def _run_sequence(n_pages, batch, max_blocks, page_size, ops):
-    """ops: [(is_release, row_bits)]: release returns the masked rows'
-    pages; otherwise the masked rows advance one position (alloc)."""
+    """ops: [(kind, row_bits, src)] — kind 0: the masked rows CoW-then-
+    alloc at their position and advance (the decode-step write path);
+    kind 1: release the masked rows; kind 2: admit the masked rows as
+    sharers of row ``src % batch``'s leading blocks (release first, the
+    engine's reset-then-share admission), resuming one position short of
+    the shared frontier so the next write exercises CoW."""
     ps = pager.init_pager(n_pages)
     bt = pager.init_block_table(batch, max_blocks)
     pos = np.zeros((batch,), np.int32)
-    for is_release, bits in ops:
+    for kind, bits, src in ops:
         mask = np.array([(bits >> b) & 1 == 1 for b in range(batch)])
-        if is_release:
+        if kind == 1:
             ps, bt = pager.release_rows(ps, bt, jnp.asarray(mask))
             pos[mask] = 0
+        elif kind == 2:
+            src = src % batch
+            mask[src] = False            # the engine never self-donates
+            if mask.any():
+                ps, bt = pager.release_rows(ps, bt, jnp.asarray(mask))
+                row = np.asarray(bt)[src]
+                nblk = 0
+                while nblk < max_blocks and row[nblk] >= 0:
+                    nblk += 1
+                ps, bt = pager.share_prefix(
+                    ps, bt, jnp.full((batch,), src, jnp.int32),
+                    jnp.full((batch,), nblk, jnp.int32), jnp.asarray(mask),
+                )
+                pos[mask] = max(nblk * page_size - 1, 0)
         else:
+            ps, bt, cow_src, cow_dst, _, moved = pager.cow_on_write(
+                ps, bt, jnp.asarray(pos), jnp.asarray(mask),
+                page_size=page_size,
+            )
+            # a moved row's fresh page must be exclusively owned
+            assert (np.asarray(ps.rc)[np.asarray(cow_dst)[np.asarray(moved)]]
+                    == 1).all()
             ps, bt = pager.alloc_on_write(
                 ps, bt, jnp.asarray(pos), jnp.asarray(mask),
                 page_size=page_size,
@@ -66,7 +104,8 @@ def test_alloc_release_conserves_pages_seeded(seed):
     max_blocks = int(rng.integers(1, 4))
     page_size = int(rng.integers(1, 5))
     ops = [
-        (bool(rng.random() < 0.3), int(rng.integers(0, 2 ** batch)))
+        (int(rng.choice([0, 0, 1, 2])), int(rng.integers(0, 2 ** batch)),
+         int(rng.integers(0, batch)))
         for _ in range(int(rng.integers(4, 25)))
     ]
     _run_sequence(n_pages, batch, max_blocks, page_size, ops)
@@ -74,7 +113,9 @@ def test_alloc_release_conserves_pages_seeded(seed):
 
 if HAVE_HYPOTHESIS:
     _ops = st.lists(
-        st.tuples(st.booleans(), st.integers(min_value=0, max_value=15)),
+        st.tuples(st.integers(min_value=0, max_value=2),
+                  st.integers(min_value=0, max_value=15),
+                  st.integers(min_value=0, max_value=3)),
         min_size=1, max_size=24,
     )
 
@@ -147,10 +188,134 @@ def test_state_round_trips_through_jit():
                 np.asarray(ps_e.free)[: int(ps_e.top)],
                 np.asarray(ps_j.free)[: int(ps_j.top)],
             )
+            np.testing.assert_array_equal(
+                np.asarray(ps_e.rc), np.asarray(ps_j.rc)
+            )
             assert int(ps_e.top) == int(ps_j.top)
             _check_partition(ps_j, bt_j)
     assert jalloc._cache_size() == 1
     assert jfree._cache_size() == 1
+
+
+def test_share_bumps_refcounts_and_release_keeps_shared_pages():
+    """The prefix-sharing lifecycle: sharing bumps refcounts, a donor's
+    release keeps shared pages resident (they outlive the row that wrote
+    them), and the final holder's release returns every page."""
+    ps = pager.init_pager(6)
+    bt = pager.init_block_table(3, 4)
+    donor_only = jnp.asarray([True, False, False])
+    for p in range(8):          # donor writes blocks 0, 1 (page_size 4)
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray([p, 0, 0], jnp.int32), donor_only,
+            page_size=4,
+        )
+    ps, bt = pager.share_prefix(
+        ps, bt, jnp.zeros((3,), jnp.int32), jnp.full((3,), 2, jnp.int32),
+        jnp.asarray([False, True, True]),
+    )
+    _check_partition(ps, bt)
+    pages = np.asarray(bt)[0, :2]
+    assert (np.asarray(ps.rc)[pages] == 3).all()
+    assert int(ps.top) == 4                 # sharing allocates nothing
+    ps, bt = pager.release_rows(ps, bt, donor_only)
+    _check_partition(ps, bt)
+    assert int(ps.top) == 4                 # shared pages stay resident
+    assert (np.asarray(ps.rc)[pages] == 2).all()
+    ps, bt = pager.release_rows(ps, bt, jnp.asarray([False, True, True]))
+    _check_partition(ps, bt)
+    assert int(ps.top) == 6                 # last refs gone -> pool whole
+    assert (np.asarray(ps.rc) == 0).all()
+
+
+def test_cow_moves_writer_and_preserves_partition():
+    """A write into a shared page must move the writer to a private copy:
+    fresh page popped, block-table entry swapped, refcounts transferred —
+    and the masked copy must carry exactly the slots below the write."""
+    ps = pager.init_pager(6)
+    bt = pager.init_block_table(2, 2)
+    donor_only = jnp.asarray([True, False])
+    for p in range(4):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray([p, 0], jnp.int32), donor_only, page_size=4,
+        )
+    ps, bt = pager.share_prefix(
+        ps, bt, jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32),
+        jnp.asarray([False, True]),
+    )
+    shared_page = int(np.asarray(bt)[0, 0])
+    ps, bt, src, dst, lim, moved = pager.cow_on_write(
+        ps, bt, jnp.asarray([0, 3], jnp.int32), jnp.asarray([False, True]),
+        page_size=4,
+    )
+    _check_partition(ps, bt)
+    assert bool(np.asarray(moved)[1]) and not bool(np.asarray(moved)[0])
+    new_page = int(np.asarray(bt)[1, 0])
+    assert new_page != shared_page
+    assert int(np.asarray(ps.rc)[shared_page]) == 1   # donor's ref remains
+    assert int(np.asarray(ps.rc)[new_page]) == 1
+    assert np.asarray(lim)[1] == 3                    # copy slots 0..2
+    # the masked copy: slots below the write come over, the rest zero
+    pool = jnp.arange(6 * 4 * 1 * 2, dtype=jnp.float32).reshape(1, 6, 4, 1, 2)
+    out = np.asarray(pager.copy_page_prefix(pool, src, dst, lim))
+    np.testing.assert_array_equal(
+        out[0, new_page, :3], np.asarray(pool)[0, shared_page, :3]
+    )
+    assert (out[0, new_page, 3:] == 0).all()
+    # donor's page content untouched
+    np.testing.assert_array_equal(
+        out[0, shared_page], np.asarray(pool)[0, shared_page]
+    )
+
+
+def test_simultaneous_cow_frees_orphaned_page():
+    """Two sharers CoW-ing the same page in one step after the donor is
+    gone: both drop their refs, the page hits rc 0 mid-step and must land
+    back on the free list — not leak."""
+    ps = pager.init_pager(5)
+    bt = pager.init_block_table(3, 1)
+    donor_only = jnp.asarray([True, False, False])
+    for p in range(2):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray([p, 0, 0], jnp.int32), donor_only,
+            page_size=2,
+        )
+    ps, bt = pager.share_prefix(
+        ps, bt, jnp.zeros((3,), jnp.int32), jnp.ones((3,), jnp.int32),
+        jnp.asarray([False, True, True]),
+    )
+    ps, bt = pager.release_rows(ps, bt, donor_only)
+    shared_page = int(np.asarray(bt)[1, 0])
+    assert int(np.asarray(ps.rc)[shared_page]) == 2
+    ps, bt, _, _, _, moved = pager.cow_on_write(
+        ps, bt, jnp.asarray([0, 1, 1], jnp.int32),
+        jnp.asarray([False, True, True]), page_size=2,
+    )
+    _check_partition(ps, bt)
+    assert np.asarray(moved)[1:].all()
+    assert int(np.asarray(ps.rc)[shared_page]) == 0
+    assert shared_page in np.asarray(ps.free)[: int(ps.top)].tolist()
+
+
+def test_cow_noop_without_sharing():
+    """With every refcount <= 1 (no sharing anywhere) the CoW pass must
+    not move anything — the no-sharing engine runs the same trace as a
+    plain allocator."""
+    ps = pager.init_pager(4)
+    bt = pager.init_block_table(2, 2)
+    for p in range(3):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray(p, jnp.int32), page_size=2
+        )
+    before = (np.asarray(ps.free).copy(), int(ps.top),
+              np.asarray(ps.rc).copy(), np.asarray(bt).copy())
+    ps, bt, _, _, _, moved = pager.cow_on_write(
+        ps, bt, jnp.asarray([2, 2], jnp.int32), page_size=2
+    )
+    assert not np.asarray(moved).any()
+    np.testing.assert_array_equal(np.asarray(ps.free), before[0])
+    assert int(ps.top) == before[1]
+    np.testing.assert_array_equal(np.asarray(ps.rc), before[2])
+    np.testing.assert_array_equal(np.asarray(bt), before[3])
 
 
 def test_pages_needed_matches_write_pattern():

@@ -1,0 +1,277 @@
+"""Prefix-sharing tests — page-level prompt sharing with copy-on-write
+must leave every generated token identical to the no-sharing engine
+across KV layouts and backends (the KVCacheLayout contract extended to
+*aliased* pages), while actually engaging: shared pages mapped at
+admission, prefill resumed at the first unshared token, CoW on the one
+write that can land in a shared page, refcounted release through
+donor-death and slot-readmission cycles, and a real resident-memory win
+on the shared-system-prompt workload."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import use_backend
+from repro.configs.registry import get_arch
+from repro.models.model import build_model
+from repro.serving import ServingEngine
+
+BACKENDS = ["reference", "pallas"]
+# dense and moe share for real; hybrid carries recurrent state that
+# cannot skip positions, so it must accept the flag and serve unchanged
+SHARE_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b"]
+
+
+def _cfg(arch):
+    cfg = dataclasses.replace(get_arch(arch).reduced(), dtype="float32")
+    if cfg.n_experts:
+        # sharing changes which tokens batch into a routing step; only the
+        # no-drop regime is batch-composition-independent (engine docstring)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    return cfg
+
+
+def _model_params(arch):
+    cfg = _cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _serve_staged(model, params, donor, rest, *, warm_steps=5, **kw):
+    """Admit the donor alone, run a few cycles so its prompt pages are
+    written, then submit the rest — the schedule under which sharing can
+    actually engage (a prompt only matches *resident, already-written*
+    pages)."""
+    eng = ServingEngine(model, params, batch=4, max_len=26,
+                        steps_per_sync=2, **kw)
+    rid0 = eng.submit(*donor)
+    for _ in range(warm_steps):
+        eng.step()
+    rids = [rid0] + [eng.submit(t, g) for t, g in rest]
+    outs = eng.run()
+    return eng, [outs[r].tolist() for r in rids]
+
+
+def _shared_requests(cfg, seed=5):
+    """A long-lived donor plus sharers: divergent tail, fully shared
+    prompt (the CoW case), and a longer divergent tail."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    donor = (prefix + [7, 9], 14)
+    rest = [(prefix + [3], 3), (list(prefix), 3), (prefix + [5, 1, 2], 4)]
+    return donor, rest
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("arch", SHARE_ARCHS)
+def test_sharing_is_token_identical(arch, backend):
+    """Sharing on vs off vs the contiguous layout: same tokens everywhere,
+    with sharing demonstrably engaged (skipped prompt tokens, a CoW copy
+    for the fully shared prompt) and no page leaked at drain."""
+    cfg, model, params = _model_params(arch)
+    donor, rest = _shared_requests(cfg)
+    kw = dict(layout="paged", page_size=4, prefill_chunk=4)
+    with use_backend(backend):
+        _, contig = _serve_staged(model, params, donor, rest)
+        _, base = _serve_staged(model, params, donor, rest, **kw)
+        eng, got = _serve_staged(model, params, donor, rest,
+                                 prefix_sharing=True, **kw)
+    assert got == base == contig
+    assert eng.shared_prompt_tokens > 0, "sharing never engaged"
+    assert eng.cow_pages >= 1, "the fully shared prompt must CoW"
+    assert eng._step_n._cache_size() == 1
+    assert eng._admit._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+    # drain returns every page: refcounted release leaked nothing
+    assert int(eng._mstate["page_top"]) == eng.n_pages
+    assert (np.asarray(eng._mstate["page_rc"]) == 0).all()
+    assert (np.asarray(eng._mstate["block_table"]) == -1).all()
+
+
+def test_sharing_token_identical_without_chunked_prefill():
+    """prefill_chunk=1: the re-fed tokens go through the fused *decode*
+    path, whose write must CoW exactly like the chunked one."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    donor, rest = _shared_requests(cfg)
+    kw = dict(layout="paged", page_size=4)
+    _, base = _serve_staged(model, params, donor, rest, **kw)
+    eng, got = _serve_staged(model, params, donor, rest,
+                             prefix_sharing=True, **kw)
+    assert got == base
+    assert eng.shared_prompt_tokens > 0 and eng.cow_pages >= 1
+    assert int(eng._mstate["page_top"]) == eng.n_pages
+
+
+def test_cow_divergence_after_shared_pages():
+    """Two requests share full pages then diverge mid-page: the sharer's
+    divergent tokens must never bleed into the donor's stream (the donor
+    keeps decoding from its own pages after the sharer's CoW)."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    donor = (list(prefix), 14)                 # page-aligned, long-lived
+    # every sharer forces CoW of the donor's final page: fully shared
+    # prompt, or a divergent token at the first position past the pages
+    rest = [(list(prefix), 4), (prefix + [1], 4), (prefix + [2, 3], 4)]
+    kw = dict(layout="paged", page_size=4, prefill_chunk=4)
+    _, base = _serve_staged(model, params, donor, rest, **kw)
+    eng, got = _serve_staged(model, params, donor, rest,
+                             prefix_sharing=True, **kw)
+    assert got == base
+    assert eng.cow_pages >= 1
+    # donor (greedy, same prompt) and its fully-shared twin must agree
+    assert got[0][:4] == got[1]
+
+
+def test_release_readmit_cycles_conserve_and_match():
+    """More requests than slots with a mix of sharable and unrelated
+    prompts: donors die, slots readmit, later prompts match later donors
+    (epoch-invalidated index) — tokens identical, pool whole at drain."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    donor = (prefix + [6], 14)
+    rest = []
+    for i in range(7):
+        if i % 3 == 2:       # unrelated prompt: must never match
+            rest.append((rng.integers(0, cfg.vocab_size, size=6).tolist(), 3))
+        else:
+            tail = rng.integers(0, cfg.vocab_size, size=i % 3).tolist()
+            rest.append((prefix + tail, 3))
+    kw = dict(layout="paged", page_size=4, prefill_chunk=4)
+    _, base = _serve_staged(model, params, donor, rest, **kw)
+    eng, got = _serve_staged(model, params, donor, rest,
+                             prefix_sharing=True, **kw)
+    assert got == base
+    assert eng.shared_prompt_tokens > 0
+    assert int(eng._mstate["page_top"]) == eng.n_pages
+    assert (np.asarray(eng._mstate["page_rc"]) == 0).all()
+
+
+def test_serial_sharers_keep_matching_resident_donor():
+    """A sharer must not steal the donor's index entries and take them to
+    its grave: with a long-lived donor, *serial* same-prefix requests
+    (each finishing before the next arrives) must all match — the
+    shared-system-prompt workload is exactly this pattern."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    rng = np.random.default_rng(19)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    eng = ServingEngine(model, params, batch=2, max_len=50,
+                        steps_per_sync=2, layout="paged", page_size=4,
+                        prefill_chunk=4, prefix_sharing=True)
+    eng.submit(prefix + [1], 40)                 # long-lived donor
+    for _ in range(5):
+        eng.step()
+    shared = []
+    for i in range(3):
+        rid = eng.submit(prefix + [2 + i], 2)
+        for _ in range(50):
+            if rid in eng.outputs:
+                break
+            eng.step()
+        assert rid in eng.outputs
+        shared.append(eng.shared_prompt_tokens)
+    eng.run()
+    # every serial sharer matched the donor's two full prefix pages
+    assert shared == [8, 16, 24]
+
+
+def test_sharing_survives_donor_completion():
+    """When the original donor finishes, a surviving sharer inherits its
+    index entries: the prefix stays matchable as long as *any* holder of
+    the (refcount-kept-resident) pages lives."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    eng = ServingEngine(model, params, batch=2, max_len=50,
+                        steps_per_sync=2, layout="paged", page_size=4,
+                        prefill_chunk=4, prefix_sharing=True)
+    rid_a = eng.submit(prefix + [1], 4)              # short-lived donor
+    eng.step()                                       # prefix written
+    rid_b = eng.submit(prefix + [2], 40)             # long-lived sharer
+    for _ in range(50):                              # donor finishes
+        if rid_a in eng.outputs:
+            break
+        eng.step()
+    assert rid_a in eng.outputs
+    assert eng.shared_prompt_tokens == 8             # B matched A
+    rid_c = eng.submit(prefix + [3], 2)              # arrives after A died
+    for _ in range(50):
+        if rid_c in eng.outputs:
+            break
+        eng.step()
+    assert rid_c in eng.outputs
+    # C matched B's inherited pages — the prefix never went unmatchable
+    assert eng.shared_prompt_tokens == 16
+    eng.run()
+    assert int(eng._mstate["page_top"]) == eng.n_pages
+
+
+def test_sampled_streams_invariant_under_sharing():
+    """Sampling keys are fold_in(admission key, position), so skipping
+    prefill positions must not perturb sampled tokens."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    donor, rest = _shared_requests(cfg)
+    kw = dict(layout="paged", page_size=4, prefill_chunk=4,
+              temperature=1.0, top_k=8, seed=42)
+    _, a = _serve_staged(model, params, donor, rest, **kw)
+    eng, b = _serve_staged(model, params, donor, rest,
+                           prefix_sharing=True, **kw)
+    assert a == b
+    assert eng.shared_prompt_tokens > 0
+
+
+def test_hybrid_accepts_flag_but_serves_unchanged():
+    """Recurrent decode state cannot skip positions: the hybrid family
+    must accept the flag, never match, and serve token-identically."""
+    cfg, model, params = _model_params("zamba2-2.7b")
+    donor, rest = _shared_requests(cfg)
+    kw = dict(layout="paged", page_size=4)
+    _, base = _serve_staged(model, params, donor, rest, **kw)
+    eng, got = _serve_staged(model, params, donor, rest,
+                             prefix_sharing=True, **kw)
+    assert got == base
+    assert eng.shared_prompt_tokens == 0 and eng.cow_pages == 0
+
+
+def test_sharing_requires_paged_layout():
+    cfg, model, params = _model_params("qwen2.5-3b")
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, batch=2, max_len=16,
+                      prefix_sharing=True)
+
+
+def test_resident_kv_drops_with_shared_system_prompt():
+    """The acceptance workload: 8 rows sharing a 256-token prompt prefix.
+    Peak resident KV bytes must drop >= 3x vs the no-sharing engine while
+    every output token stays identical."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    n, plen, gen, page = 8, 256, 6, 8
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=3).tolist()
+             for _ in range(n)]
+    tails[-1] = []                       # one fully shared prompt (CoW)
+    donor_gen = gen + 4
+    max_len = plen + 3 + donor_gen + 1
+
+    def run(sharing):
+        eng = ServingEngine(model, params, batch=n, max_len=max_len,
+                            steps_per_sync=2, layout="paged",
+                            page_size=page, prefill_chunk=64,
+                            prefix_sharing=sharing)
+        rid0 = eng.submit(prefix + tails[0], donor_gen)
+        eng.step()                       # donor's prefix pages are written
+        rids = [rid0] + [eng.submit(prefix + t, gen) for t in tails[1:]]
+        outs = eng.run()
+        return eng, [outs[r].tolist() for r in rids]
+
+    e_off, base = run(False)
+    e_on, got = run(True)
+    assert got == base
+    assert e_on.shared_prompt_tokens >= (n - 1) * (plen - 1)
+    drop = (e_off.kv_resident_bytes(peak=True)
+            / max(e_on.kv_resident_bytes(peak=True), 1))
+    assert drop >= 3.0, f"resident-KV drop {drop:.2f}x < 3x"
