@@ -149,6 +149,10 @@ def compare_layouts(args):
     paged engine's pool is capped at half the slab; throughput must hold
     while peak resident KV drops to roughly the live-token footprint."""
     cfg = get_arch(args.kv_arch)
+    if cfg.is_attention_free:
+        print("  (skipped: attention-free arch — no KV cache to page; "
+              "recurrent state is O(1) per row under either layout)")
+        return {}
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     lo, hi = 4, 33                            # >= 8x spread
@@ -200,12 +204,6 @@ def compare_prefix_sharing(args):
     import dataclasses
 
     cfg = get_arch(args.kv_arch)
-    if cfg.family not in ("dense", "moe"):
-        # recurrent decode state cannot skip positions: the engine accepts
-        # the flag but sharing is inert, so there is nothing to ablate
-        print(f"  (skipped: {cfg.family} carries recurrent decode state — "
-              f"prefix sharing is inert; see the engine docstring)")
-        return {}
     if args.share_requests < 2:
         print("  (skipped: --share-requests < 2 — sharing needs a donor "
               "and at least one sharer)")
@@ -264,19 +262,22 @@ def compare_prefix_sharing(args):
         "prefix sharing changed tokens"
     )
     assert rows["shared"]["shared"] > 0, "sharing never engaged"
-    print(f"arch={args.kv_arch} requests={n} prefix_len={plen} "
-          f"tail=4 gen={gen} page_size={args.page_size} "
+    print(f"arch={args.kv_arch} [{cfg.family}] requests={n} "
+          f"prefix_len={plen} tail=4 gen={gen} page_size={args.page_size} "
           f"chunk={args.prefill_chunk}")
-    print(f"  {'sharing':<10} {'sharer TTFT ms':>14} {'peak KV bytes':>14} "
-          f"{'shared toks':>11} {'CoW':>4}")
+    print(f"  {'sharing':<10} {'sharer TTFT ms':>14} {'prefill tok/s':>13} "
+          f"{'peak KV bytes':>14} {'shared toks':>11} {'CoW':>4}")
     for name in ("unshared", "shared"):
         r = rows[name]
-        print(f"  {name:<10} {r['ttft_ms']:>14.1f} {r['kv_bytes']:>14d} "
+        print(f"  {name:<10} {r['ttft_ms']:>14.1f} "
+              f"{r['prefill_tok_s']:>13.1f} {r['kv_bytes']:>14d} "
               f"{r['shared']:>11d} {r['cow']:>4d}")
-    drop = rows["unshared"]["kv_bytes"] / max(rows["shared"]["kv_bytes"], 1)
-    print(f"  resident-KV drop {drop:.1f}x, TTFT "
-          f"{rows['unshared']['ttft_ms'] / rows['shared']['ttft_ms']:.1f}x "
-          f"(outputs token-identical)")
+    ttft_x = rows["unshared"]["ttft_ms"] / rows["shared"]["ttft_ms"]
+    msg = f"  TTFT {ttft_x:.1f}x"
+    if rows["shared"]["kv_bytes"]:   # attention-free archs have no KV pages
+        drop = rows["unshared"]["kv_bytes"] / rows["shared"]["kv_bytes"]
+        msg = f"  resident-KV drop {drop:.1f}x," + msg[1:]
+    print(msg + " (outputs token-identical)")
     return rows
 
 
@@ -352,6 +353,12 @@ def main(argv=None):
     ap.add_argument("--steps-per-sync", type=int, default=8)
     ap.add_argument("--kv-arch", default="qwen2.5-3b-smoke",
                     help="attention arch for the paged-vs-contiguous ablation")
+    ap.add_argument("--family", choices=["dense", "moe", "ssm", "hybrid"],
+                    default=None,
+                    help="pick the prefill/sharing-ablation arch by family "
+                         "(overrides --kv-arch with that family's smoke "
+                         "config) — the recurrent cells exercise chunked "
+                         "SSD prefill and snapshot-restore sharing")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="prompt tokens per chunked-prefill step in the "
@@ -378,6 +385,11 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="minimal sizes: CI driver-rot check, not a benchmark")
     args = ap.parse_args(argv)
+    if args.family:
+        args.kv_arch = {
+            "dense": "qwen2.5-3b", "moe": "qwen3-moe-235b-a22b",
+            "ssm": "mamba2-2.7b", "hybrid": "zamba2-2.7b",
+        }[args.family] + "-smoke"
     if args.quick:
         args.requests, args.gen = 8, 16
         args.prompt_len, args.prefill_chunk = 64, 16

@@ -50,8 +50,10 @@ def main():
                     help="prompt tokens ingested per engine step (chunked "
                          "prefill; 1 = token-by-token)")
     ap.add_argument("--prefix-sharing", action="store_true",
-                    help="page-level prompt prefix sharing with "
-                         "copy-on-write (needs --layout paged)")
+                    help="page-level prompt prefix sharing (needs --layout "
+                         "paged): attention families alias pages with "
+                         "copy-on-write; recurrent families (ssm/hybrid) "
+                         "restore page-boundary state snapshots")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -82,9 +84,12 @@ def main():
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
               f"pages resident")
+    if "snap_slots" in s:   # recurrent families under prefix sharing
+        print(f"state snapshots: peak {int(s['snap_slots_peak'])}/"
+              f"{int(s['snap_slots'])} page-boundary slots resident")
     if "shared_prompt_tokens" in s:
         print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
-              f"tokens served from shared pages "
+              f"tokens served from shared pages/snapshots "
               f"({int(s['cow_pages'])} CoW copies)")
     for i, rid in enumerate(rids[:3]):
         prompt = reqs[i][0]

@@ -17,18 +17,35 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# repo cleanliness: bytecode artifacts must never be *tracked* (the
+# .gitignore hardening of PR 4, enforced instead of hoped for — a tracked
+# .pyc shows up in source greps and churns every diff)
+tracked_pyc=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' || true)
+if [ -n "$tracked_pyc" ]; then
+    echo "error: bytecode artifacts are tracked by git:" >&2
+    echo "$tracked_pyc" >&2
+    exit 1
+fi
+
 python -m pip install -q -r requirements-dev.txt ||
     echo "warning: dev-dep install failed (offline?); property tests will skip"
 
 # --smoke shrinks every section but keeps prefill chunking > 1 and a
 # page-aligned shared prefix, so the chunked path (kernel + pager
 # alloc_range + scheduler) and the sharing path (prefix index +
-# share_prefix + CoW) really run
+# share_prefix + CoW) really run.  A second, hybrid-family pass keeps the
+# recurrent serving path (chunked SSD prefill + page-boundary snapshot
+# sharing/restore) continuously exercised alongside the attention one.
 smoke() {
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
             --layout "$1"
+    echo "== smoke (recurrent): family=hybrid layout=$1 =="
+    REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
+            --layout "$1" --family hybrid
 }
 
 case "${1:-}" in

@@ -73,7 +73,9 @@ def _ssd_kernel(
         hf_ref[0, 0] = state_ref[...].astype(hf_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret", "tuning_op")
+)
 def ssd_scan_pallas(
     x: jax.Array,    # (B, S, H, P)
     dt: jax.Array,   # (B, S, H)
@@ -84,15 +86,24 @@ def ssd_scan_pallas(
     chunk: int = 64,
     initial_state: Optional[jax.Array] = None,   # (B, H, P, N)
     interpret=None,
+    tuning_op: str = "ssd_scan",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    ``tuning_op`` names the tuning-table entry the chunk size resolves
+    from: the training path tunes as ``"ssd_scan"``, the serving path
+    (``ops.ssd_prefill_chunk``) as ``"ssd_prefill_chunk"`` — so serving's
+    knob is never overridden by a training setting."""
     if interpret is None:
         interpret = interpret_default()
     b, s, h, p = x.shape
     assert B_.shape[2] == 1, "pallas SSD kernel supports n_groups=1"
     n = B_.shape[3]
-    t = get_tuning("ssd_scan", chunk=chunk)
-    chunk = t["chunk"]
+    t = get_tuning(tuning_op, chunk=chunk)
+    # a chunk longer than the sequence is identical math on pure padding
+    # (dt pads with 0 = state no-op): clamp so short sequences — down to
+    # the S=1 decode-as-C=1 case — never pay a full chunk of dead MXU work
+    chunk = max(1, min(t["chunk"], s))
     pad = (-s) % chunk
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))

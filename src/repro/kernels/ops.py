@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import Backend, current_backend
-from repro.core.registry import register_op
+from repro.core.registry import get_tuning, register_op
 from repro.kernels import ref
 from repro.kernels.eltwise import (
     bias_add_rows_pallas,
@@ -643,8 +643,46 @@ def ssd_scan(
     return ref.ssd_scan(x, dt, A, B_, C, chunk=chunk)[0]
 
 
-def ssd_decode_step(x, dt, A, B_, C, state):
-    return ref.ssd_decode_step(x, dt, A, B_, C, state)
+def ssd_prefill_chunk(
+    x: jax.Array,      # (B, C, H, P): C tokens per sequence
+    dt: jax.Array,     # (B, C, H) f32; dt == 0 marks padding (state no-op)
+    A: jax.Array,      # (H,)
+    B_: jax.Array,     # (B, C, G, N)
+    C: jax.Array,      # (B, C, G, N)
+    state: jax.Array,  # (B, H, P, N) f32: carried recurrent state
+    *,
+    chunk: int = 64,
+) -> tuple:
+    """Chunked-SSD serving scan: C tokens against a carried recurrent state.
+
+    The recurrent sibling of ``attention_prefill_chunk`` and the single
+    dispatch point for every serving-time SSD recurrence: chunked prefill
+    ingests whole token chunks through one scan (B*C-row GEMMs instead of
+    C sequential dispatches), and single-token decode is the same call at
+    C == 1 — the degenerate case of the chunked formulation, so prefill
+    and decode share one accumulation order instead of maintaining two
+    recurrences in parity by hand.  Per-row widths are expressed by
+    zeroing ``dt`` at padding positions (exp(0) decay, zero input — an
+    algebraic state no-op; see ``ref.ssd_scan``).  Returns
+    ``(y (B,C,H,P), new_state (B,H,P,N) f32)``.
+
+    The SSD chunk size is a tuning parameter (``get_tuning(
+    "ssd_prefill_chunk")``), clamped to the token count so short chunks —
+    and the C=1 decode case — never pad to a full training-size chunk.
+    Both lowerings are registered and kept in lock-step
+    (``ssd_prefill_chunk`` in ``coverage()``).
+    """
+    t = get_tuning("ssd_prefill_chunk", chunk=chunk)
+    c = max(1, min(int(t["chunk"]), x.shape[1]))
+    if _pallas() and B_.shape[2] == 1:
+        # the kernel re-resolves its chunk from the tuning table; naming
+        # this op's entry keeps the serving knob authoritative (idempotent
+        # second lookup) instead of letting "ssd_scan" training tuning
+        # override it
+        return ssd_scan_pallas(x, dt, A, B_, C, chunk=c,
+                               initial_state=state,
+                               tuning_op="ssd_prefill_chunk")
+    return ref.ssd_scan(x, dt, A, B_, C, chunk=c, initial_state=state)
 
 
 # ---------------------------------------------------------------------------
@@ -697,3 +735,7 @@ register_op("attention_prefill_chunk_paged",
             doc="block-table paged chunked-prefill attention")
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
             doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)")
+register_op("ssd_prefill_chunk", reference=ref.ssd_scan,
+            pallas=ssd_scan_pallas,
+            doc="chunked-SSD serving scan (C-token chunk vs carried state; "
+                "decode is the C=1 case)")

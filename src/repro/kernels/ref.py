@@ -327,7 +327,15 @@ def ssd_scan(
     """Mamba-2 SSD: y_t = C_t^T h_t, h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t.
 
     Chunked formulation (arXiv:2405.21060): intra-chunk quadratic term +
-    inter-chunk recurrent state passing. Returns (y, final_state).
+    inter-chunk recurrent state passing. Returns (y, final_state); the
+    state is kept in f32 regardless of ``x.dtype`` (it is the serving-time
+    recurrent carry — downcasting it would compound across steps), matching
+    the Pallas kernel's f32 state output.
+
+    A position with ``dt == 0`` is an algebraic no-op on the state (decay
+    ``exp(0) = 1``, input term 0) — the masking contract chunked prefill
+    uses for per-row widths, and what makes the internal zero-padding to a
+    chunk multiple exact rather than approximate.
     """
     b, s, h, p = x.shape
     g, n = B_.shape[2], B_.shape[3]
@@ -392,7 +400,7 @@ def ssd_scan(
         prev_states,
     ).astype(x.dtype)
     y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
-    return y, fin.astype(x.dtype)
+    return y, fin
 
 
 def ssd_decode_step(
@@ -403,7 +411,13 @@ def ssd_decode_step(
     C: jax.Array,   # (B, G, N)
     state: jax.Array,  # (B, H, P, N)
 ) -> Tuple[jax.Array, jax.Array]:
-    """Single-token recurrent update (decode path)."""
+    """Single-token recurrent update — the closed form of the S=1 scan.
+
+    Serving no longer dispatches this directly: decode is the C=1 case of
+    the chunked SSD scan (``ops.ssd_prefill_chunk``), so prefill and
+    decode share one accumulation order.  It stays as the sequential test
+    oracle the chunked scan is checked against.
+    """
     b, h, p = x.shape
     g, n = B_.shape[1], B_.shape[2]
     rep = h // g

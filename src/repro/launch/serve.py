@@ -54,9 +54,12 @@ def _serve_engine(model, params, prompt, args) -> int:
     if "kv_pages" in s:   # attention-free archs have no pages to report
         print(f"paged KV: peak {int(s['kv_pages_peak'])}/{int(s['kv_pages'])} "
               f"pages ({int(s['kv_resident_bytes_peak'])} resident bytes)")
+    if "snap_slots" in s:   # recurrent families under prefix sharing
+        print(f"state snapshots: peak {int(s['snap_slots_peak'])}/"
+              f"{int(s['snap_slots'])} page-boundary slots resident")
     if "shared_prompt_tokens" in s:
         print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
-              f"tokens served from shared pages "
+              f"tokens served from shared pages/snapshots "
               f"({int(s['cow_pages'])} CoW copies)")
     print("sample:", outs[rids[0]][:16].tolist())
     return 0
@@ -112,8 +115,10 @@ def main(argv=None) -> int:
                     help="prompt tokens ingested per engine step (chunked "
                          "prefill; 1 = token-by-token)")
     ap.add_argument("--prefix-sharing", action="store_true",
-                    help="page-level prompt prefix sharing with "
-                         "copy-on-write (needs --layout paged)")
+                    help="page-level prompt prefix sharing (needs --layout "
+                         "paged): attention families alias pages with "
+                         "copy-on-write; recurrent families (ssm/hybrid) "
+                         "restore page-boundary state snapshots")
     ap.add_argument("--check", action="store_true",
                     help="verify decode path against teacher-forced forward")
     args = ap.parse_args(argv)

@@ -355,28 +355,75 @@ def mamba_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
     return x + dense(y, p["w_out"])
 
 
+def mamba_prefill_block(
+    cfg: ArchConfig, p: Params,
+    x: jax.Array,              # (B, C, d): C tokens per sequence
+    ssm_state: jax.Array,      # (B, H, P, N) f32: carried recurrent state
+    conv_state: jax.Array,     # (B, K-1, di): carried conv window
+    valid: jax.Array,          # (B, C) bool: prefix mask of real tokens
+):
+    """Chunked Mamba-2 block with carried recurrent state — the single
+    source of the recurrent families' serving-time math.
+
+    A chunk of C tokens runs as B*C-row projections, one chunked causal
+    conv against the carried (K-1)-deep window, and one SSD scan seeded
+    with the carried state (``ops.ssd_prefill_chunk``) — instead of C
+    sequential single-token dispatches.  ``mamba_decode_block`` is the
+    C=1 case of this function, so decode and prefill share one
+    accumulation order rather than two hand-synchronized recurrences.
+
+    Per-row widths ride on the ``valid`` prefix mask: a padding position's
+    ``dt`` is zeroed (exp(0) decay, zero input — an algebraic no-op on the
+    SSD state), and the new conv window is gathered to end at each row's
+    last *real* token, so neither carry ever sees padding.  Rows with no
+    real tokens (``valid`` all False) carry both states through untouched.
+    Outputs at padding positions are finite garbage the caller discards.
+    """
+    b, c, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    xn = norm(cfg, p["ln"], x)
+    z, xs, b_, c_, dt = _split_mamba_proj(cfg, dense(xn, p["w_in"]))
+    # chunked causal conv against the carried window: position i of the
+    # chunk reads raw inputs i-K+1..i, reaching into the carry for i < K-1
+    win = jnp.concatenate([conv_state, xs], axis=1)        # (B, K-1+C, di)
+    xs = sum(
+        win[:, i : i + c] * p["conv_w"][i][None, None, :] for i in range(k)
+    )
+    # new conv window: the last K-1 inputs up to each row's width (width 0
+    # gathers win[:, :K-1] — the old carry, verbatim)
+    width = jnp.sum(valid, axis=1, dtype=jnp.int32)        # (B,)
+    gidx = width[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    conv_state = jnp.take_along_axis(win, gidx[:, :, None], axis=1)
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.where(valid[:, :, None], dt, 0.0)             # padding: no-op
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = ops.ssd_prefill_chunk(
+        xs.reshape(b, c, h, hd), dt, a,
+        b_.reshape(b, c, 1, n), c_.reshape(b, c, 1, n),
+        ssm_state, chunk=cfg.ssm_chunk,
+    )
+    y = y + xs.reshape(b, c, h, hd) * p["d_skip"][None, None, :, None]
+    y = (y.reshape(b, c, di) * jax.nn.silu(z)).astype(x.dtype)
+    y = ops.rmsnorm(y, p["ln_inner"])
+    return x + dense(y, p["w_out"]), ssm_state, conv_state
+
+
 def mamba_decode_block(
     cfg: ArchConfig, p: Params, x: jax.Array,
     ssm_state: jax.Array,      # (B, H, P, N)
     conv_state: jax.Array,     # (B, K-1, di)
 ):
-    b, d = x.shape
-    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    xn = norm(cfg, p["ln"], x)
-    z, xs, b_, c_, dt = _split_mamba_proj(cfg, dense(xn, p["w_in"]))
-    # rolling causal conv state
-    k = cfg.ssm_conv
-    window = jnp.concatenate([conv_state, xs[:, None]], axis=1)  # (B, K, di)
-    xs = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
-    conv_state = window[:, 1:]
-    xs = jax.nn.silu(xs)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    a = -jnp.exp(p["a_log"])
-    y, ssm_state = ops.ssd_decode_step(
-        xs.reshape(b, h, hd), dt, a, b_.reshape(b, 1, n), c_.reshape(b, 1, n),
-        ssm_state,
+    """Single-token decode — the C=1 case of ``mamba_prefill_block``.
+
+    One code path serves both regimes; the sequential recurrence is the
+    chunked scan's degenerate case, not a second implementation kept in
+    parity by hand (the dispatch layer may still pick a cheaper lowering
+    for S=1 — specialization stays below this line).
+    """
+    y, ssm_state, conv_state = mamba_prefill_block(
+        cfg, p, x[:, None], ssm_state, conv_state,
+        jnp.ones((x.shape[0], 1), bool),
     )
-    y = y + xs.reshape(b, h, hd) * p["d_skip"][None, :, None]
-    y = (y.reshape(b, di) * jax.nn.silu(z)).astype(x.dtype)
-    y = ops.rmsnorm(y, p["ln_inner"])
-    return x + dense(y, p["w_out"]), ssm_state, conv_state
+    return y[:, 0], ssm_state, conv_state

@@ -91,11 +91,14 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 # -- serving ---------------------------------------------------------------
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
-                      *, per_row_pos: bool = False):
+                      *, per_row_pos: bool = False, snapshots: bool = False):
     """Decode state.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector —
     signature parity with ``lm.init_decode_state`` so the serving engine's
     slot-refill path (per-row depths, masked cache writes) is not
-    attention-LM-only by accident."""
+    attention-LM-only by accident.  ``snapshots`` is accepted for the same
+    parity and ignored: encdec carries no recurrent decode state (the lm
+    dense-family semantics)."""
+    del snapshots
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     L = cfg.n_layers
@@ -161,14 +164,19 @@ def prefill_cross_cache(cfg: ArchConfig, params, memory, state):
 
 def prefill_chunk(cfg: ArchConfig, params, state, toks: jax.Array,  # (B, C)
                   width: jax.Array,                    # () or (B,) int32
-                  *, active: Optional[jax.Array] = None):
+                  *, active: Optional[jax.Array] = None,
+                  cow: bool = False, snap_every: int = 0):
     """Multi-token prompt ingestion — signature parity with
     ``lm.prefill_chunk`` so chunked prefill is not attention-LM-only by
     accident.  Self-attention runs the chunked kernel against the causal
     cache; cross-attention anchors every chunk query at the last encoder
     position, which makes the causal mask vacuous (full non-causal
     attention over the precomputed memory K/V).  Requires ``per_row_pos``
-    decode state."""
+    decode state.  ``cow``/``snap_every`` are accepted for signature
+    parity and are no-ops: the encdec cache is contiguous per-row (no
+    shared pages to un-share) and attention-only (no recurrent state to
+    snapshot)."""
+    del cow, snap_every
     pos = state["pos"]
     if pos.ndim != 1:
         raise ValueError("prefill_chunk needs per_row_pos=True decode state")
@@ -231,7 +239,11 @@ def prefill_chunk(cfg: ArchConfig, params, state, toks: jax.Array,  # (B, C)
 
 
 def decode_step(cfg: ArchConfig, params, state, token: jax.Array,
-                *, active: Optional[jax.Array] = None):
+                *, active: Optional[jax.Array] = None,
+                cow: bool = False, snap_every: int = 0):
+    # cow/snap_every: signature parity with lm.decode_step (see
+    # prefill_chunk) — no paged or recurrent state to apply them to
+    del cow, snap_every
     pos = state["pos"]
     x = params["embed"][token].astype(cfg.dtype_())
     enc_len = state["xk"].shape[2]

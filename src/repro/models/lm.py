@@ -208,7 +208,7 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 def init_decode_state(
     cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False,
     layout: str = "contiguous", page_size: int = 16,
-    n_pages: Optional[int] = None,
+    n_pages: Optional[int] = None, snapshots: bool = False,
 ) -> Dict[str, jax.Array]:
     """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
     rows may sit at different sequence depths (continuous batching).
@@ -220,6 +220,16 @@ def init_decode_state(
     KV memory scales with live tokens instead of ``B x max_len``.  SSM and
     conv state is recurrent (O(1) per row) and stays contiguous under
     either layout; only attention K/V pages.
+
+    ``snapshots=True`` (recurrent families, paged layout only) adds the
+    page-boundary recurrent-state snapshot store: slot pools for the full
+    per-row SSM + conv state, a per-(row, boundary) slot table and a
+    refcounted free list, managed by the same allocator primitives as KV
+    pages (``repro.serving.pager`` documents the snapshot-slot contract).
+    Snapshots are what make prompt prefix sharing real for ssm/hybrid: a
+    sharer restores the donor's state at the last shared page boundary
+    instead of re-running the recurrence.  Attention-only families ignore
+    the flag (they have no recurrent carry to snapshot).
     """
     if layout not in ("contiguous", "paged"):
         raise ValueError(f"unknown KV-cache layout {layout!r}")
@@ -229,6 +239,12 @@ def init_decode_state(
     eff = min(max_len, cfg.window) if cfg.window else max_len
     pos0 = jnp.zeros((batch,) if per_row_pos else (), jnp.int32)
     state: Dict[str, jax.Array] = {"pos": pos0}
+    recurrent = cfg.family in ("ssm", "hybrid")
+    if snapshots and recurrent and layout != "paged":
+        raise ValueError(
+            "recurrent-state snapshots use page-boundary granularity — "
+            "layout='paged' required"
+        )
 
     def paged_kv(stacks: int) -> Dict[str, jax.Array]:
         # paged writes at *absolute* positions (no window ring): block ids
@@ -247,6 +263,30 @@ def init_decode_state(
             "page_rc": ps.rc,
         }
 
+    def snap_store() -> Dict[str, jax.Array]:
+        # worst-case slot pool: every row can snapshot every boundary it
+        # can ever reach, so — like the page reservation ledger — the
+        # allocator can never run dry mid-request (slots a dead donor
+        # leaves behind are mapped, hence budgeted, by their sharers)
+        from repro.serving import pager as P
+
+        n_bound = -(-max_len // page_size)
+        n_slots = batch * n_bound
+        ps = P.init_pager(n_slots)
+        return {
+            "snap_ssm": jnp.zeros(
+                (n_slots, cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32,
+            ),
+            "snap_conv": jnp.zeros(
+                (n_slots, cfg.n_layers, cfg.ssm_conv - 1, cfg.d_inner), dt
+            ),
+            "snap_table": P.init_block_table(batch, n_bound),
+            "snap_free": ps.free,
+            "snap_top": ps.top,
+            "snap_rc": ps.rc,
+        }
+
     if cfg.family in ("dense", "moe"):
         if layout == "paged":
             state.update(paged_kv(cfg.n_layers))
@@ -261,6 +301,8 @@ def init_decode_state(
         state["conv"] = jnp.zeros(
             (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
         )
+        if snapshots:
+            state.update(snap_store())
     elif cfg.family == "hybrid":
         g = cfg.n_layers // cfg.attn_every
         state["ssm"] = jnp.zeros(
@@ -270,6 +312,8 @@ def init_decode_state(
         state["conv"] = jnp.zeros(
             (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
         )
+        if snapshots:
+            state.update(snap_store())
         if layout == "paged":
             state.update(paged_kv(g))
             return state
@@ -373,10 +417,95 @@ def _paged_commit(state, pstate, bt):
             "page_rc": pstate.rc, "block_table": bt}
 
 
+def _snap_capture(state, pos_after: jax.Array, active: jax.Array,
+                  snap_every: int):
+    """Write a page-boundary recurrent-state snapshot for every row whose
+    step just ended exactly at a boundary (``pos_after`` a positive
+    multiple of ``snap_every``): allocate a slot for boundary index
+    ``pos_after/snap_every - 1`` in the row's snapshot table (boundary
+    space is block space with page_size 1 — same allocator, same
+    conservation invariant) and scatter the row's full-depth SSM + conv
+    state into the pools.  Pure ``jnp``, fixed shapes, one masked scatter
+    per pool — runs inside the jitted engine steps without retracing.
+
+    A slot still shared with a peer (rc > 1) is never overwritten: shared
+    slots sit strictly below the row's own progress (a sharer resumes past
+    its inherited boundaries), so the guard is belt-and-braces for the
+    immutability of shared snapshots — the same read-only contract as
+    shared KV pages.
+    """
+    from repro.serving import pager as PG
+
+    at = active & (pos_after > 0) & (pos_after % snap_every == 0)
+    bound = pos_after // snap_every - 1
+    sstate = PG.PagerState(
+        state["snap_free"], state["snap_top"], state["snap_rc"]
+    )
+    sstate, stbl = PG.alloc_on_write(
+        sstate, state["snap_table"], bound, at, page_size=1
+    )
+    n_slots = state["snap_ssm"].shape[0]
+    nb = stbl.shape[1]
+    slot = jnp.take_along_axis(
+        stbl, jnp.clip(bound, 0, nb - 1)[:, None], axis=1
+    )[:, 0]
+    ok = at & (bound >= 0) & (bound < nb) & (slot >= 0)
+    ok &= sstate.rc[jnp.clip(slot, 0, n_slots - 1)] <= 1
+    tgt = jnp.where(ok, slot, n_slots)                 # sentinel: dropped
+    snap_ssm = state["snap_ssm"].at[tgt].set(
+        jnp.moveaxis(state["ssm"], 1, 0), mode="drop"
+    )
+    snap_conv = state["snap_conv"].at[tgt].set(
+        jnp.moveaxis(state["conv"], 1, 0).astype(state["snap_conv"].dtype),
+        mode="drop",
+    )
+    return {**state, "snap_ssm": snap_ssm, "snap_conv": snap_conv,
+            "snap_table": stbl, "snap_free": sstate.free,
+            "snap_top": sstate.top, "snap_rc": sstate.rc}
+
+
+def restore_snapshots(state, mask: jax.Array, src: jax.Array,
+                      nblk: jax.Array):
+    """Prefix-sharing admission for recurrent state: map the donor rows'
+    leading ``nblk`` snapshot slots into the masked rows' tables
+    (``pager.share_prefix`` on boundary space — refcount bumps keep the
+    slots alive past the donor's release) and load slot ``nblk - 1`` —
+    the donor's state after its first ``nblk`` pages — into the rows'
+    live SSM/conv state, so prefill resumes at the first unshared token
+    with the recurrence already advanced.  ``nblk == 0`` rows are
+    untouched (the non-sharing admission path is the same trace).
+    """
+    from repro.serving import pager as PG
+
+    sstate, stbl = PG.share_prefix(
+        PG.PagerState(state["snap_free"], state["snap_top"],
+                      state["snap_rc"]),
+        state["snap_table"], src, nblk, mask,
+    )
+    b = stbl.shape[0]
+    nb = stbl.shape[1]
+    nblk_b = jnp.broadcast_to(jnp.asarray(nblk, jnp.int32).reshape(-1), (b,))
+    k = jnp.clip(nblk_b - 1, 0, nb - 1)
+    slot = jnp.take_along_axis(stbl, k[:, None], axis=1)[:, 0]
+    ok = mask & (nblk_b > 0) & (slot >= 0)
+    n_slots = state["snap_ssm"].shape[0]
+    sl = jnp.clip(slot, 0, n_slots - 1)
+    ssm_r = jnp.moveaxis(state["snap_ssm"][sl], 0, 1)      # (L, B, ...)
+    conv_r = jnp.moveaxis(state["snap_conv"][sl], 0, 1)
+    return {**state,
+            "ssm": jnp.where(ok[None, :, None, None, None], ssm_r,
+                             state["ssm"]),
+            "conv": jnp.where(ok[None, :, None, None],
+                              conv_r.astype(state["conv"].dtype),
+                              state["conv"]),
+            "snap_table": stbl, "snap_free": sstate.free,
+            "snap_top": sstate.top, "snap_rc": sstate.rc}
+
+
 def decode_step(
     cfg: ArchConfig, params, state, token: jax.Array,  # (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
-    cow: bool = False,
+    cow: bool = False, snap_every: int = 0,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One token for every sequence in the batch; returns (logits, state).
 
@@ -393,6 +522,11 @@ def decode_step(
     paged writes — required exactly when pages can be prefix-shared
     (``pager.share_prefix`` ran on this state); engines that never share
     skip the per-step page gather/scatter entirely.
+
+    ``snap_every`` (trace-time constant; recurrent families with a
+    snapshot store) captures the row's post-step SSM/conv state whenever
+    the step lands exactly on a page boundary — a decode step ends at
+    every successive position, so every boundary it reaches is captured.
     """
     pos = state["pos"]
     paged = "block_table" in state
@@ -549,6 +683,9 @@ def decode_step(
         state = {**state, "pos": pos + active.astype(jnp.int32)}
     else:
         state = {**state, "pos": pos + 1}
+    if snap_every and "snap_table" in state and pos.ndim == 1:
+        act = active if active is not None else jnp.ones_like(pos, bool)
+        state = _snap_capture(state, state["pos"], act, snap_every)
     return logits, state
 
 
@@ -556,25 +693,34 @@ def prefill_chunk(
     cfg: ArchConfig, params, state, toks: jax.Array,   # (B, C) int32
     width: jax.Array,                                  # () or (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
-    cow: bool = False,
+    cow: bool = False, snap_every: int = 0,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Ingest up to C prompt tokens per row in one step.
 
     Row b's real tokens are ``toks[b, :width[b]]`` at absolute positions
     ``pos[b] .. pos[b]+width[b]-1``; the rest of the chunk is padding and
-    never touches caches (masked multi-position K/V writes, masked SSM
-    state carries, dropped page writes).  Returns logits at each row's
+    never touches caches (masked multi-position K/V writes, zeroed-``dt``
+    SSD no-ops, dropped page writes).  Returns logits at each row's
     *last real* position — exactly what a ``decode_step`` fed that position
     would return — and the state with per-row ``pos`` advanced by
     ``width`` for active rows.  ``width == 1`` rows degenerate to a decode
     step, so decode-phase rows can ride along in a mixed batch.
 
-    Attention is chunked (one (C, hd) query block per row via
-    ``ops.attention_prefill_chunk``); Mamba blocks stay token-sequential
-    *inside* the fused step (a ``lax.scan`` over the chunk) so their
-    recurrence is bit-identical to single-token decode — the step still
-    amortizes per-step dispatch and turns B-row projections into B*C-row
-    GEMMs, which is where the prompt-ingestion win lives.
+    Both block families chunk for real: attention runs one (C, hd) query
+    block per row (``ops.attention_prefill_chunk``), and Mamba blocks run
+    one masked per-row-width SSD scan seeded with the carried state
+    (``C.mamba_prefill_block`` over ``ops.ssd_prefill_chunk``) — B*C-row
+    GEMMs and one scan instead of C sequential dispatches.  Single-token
+    decode is the C=1 case of the same block, so the two regimes share
+    one accumulation order instead of two recurrences kept in parity by
+    hand.
+
+    ``snap_every`` (trace-time constant; recurrent families with a
+    snapshot store) captures the post-chunk SSM/conv state of every row
+    whose chunk ends exactly at a page boundary.  A chunk that *crosses*
+    a boundary without ending there records nothing for it — callers that
+    need full boundary coverage (the prefix-sharing engine) clip chunk
+    widths to end at boundaries.
 
     Requires ``per_row_pos`` decode state.  Sliding-window archs need the
     paged layout: the contiguous ring cache recycles slots the in-chunk
@@ -649,20 +795,10 @@ def prefill_chunk(
         return x + C.dense(h, p["wo"])
 
     def mamba_chunk(p, x, s_ssm, s_conv):
-        # token-sequential inside the chunk: the recurrence stays
-        # bit-identical to single-token decode; padding positions keep the
-        # carried state (masked), so per-row widths can't corrupt it
-        def step(carry, inp):
-            s1, s2 = carry
-            xi, vi = inp                               # (B, d), (B,)
-            yi, n1, n2 = C.mamba_decode_block(cfg, p, xi, s1, s2)
-            s1 = jnp.where(vi[:, None, None, None], n1, s1)
-            s2 = jnp.where(vi[:, None, None], n2, s2)
-            return (s1, s2), yi
-        (s_ssm, s_conv), ys = jax.lax.scan(
-            step, (s_ssm, s_conv), (x.transpose(1, 0, 2), valid.T)
-        )
-        return ys.transpose(1, 0, 2), s_ssm, s_conv
+        # one chunked SSD call per block: the carried state seeds the scan
+        # and padding positions are algebraic no-ops (zeroed dt, width-
+        # bounded conv gather), so per-row widths can't corrupt the carry
+        return C.mamba_prefill_block(cfg, p, x, s_ssm, s_conv, valid)
 
     kk, vk = ("kp", "vp") if paged else ("k", "v")
 
@@ -726,6 +862,8 @@ def prefill_chunk(
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = C.dense(h, w)
     state = {**state, "pos": pos + jnp.where(active, width, 0)}
+    if snap_every and "snap_table" in state:
+        state = _snap_capture(state, state["pos"], active, snap_every)
     return logits, state
 
 
@@ -762,7 +900,9 @@ def reset_decode_rows(
     known = {"k", "v", "ssm", "conv", "xk", "xv"}
     paged_keys = {"kp", "vp", "block_table", "page_free", "page_top",
                   "page_rc"}
-    unknown = set(state) - known - paged_keys - {"pos"}
+    snap_keys = {"snap_ssm", "snap_conv", "snap_table", "snap_free",
+                 "snap_top", "snap_rc"}
+    unknown = set(state) - known - paged_keys - snap_keys - {"pos"}
     if unknown:
         # fail loudly: a silently-skipped cache key would leak the previous
         # request's state into the slot's next occupant
@@ -787,6 +927,22 @@ def reset_decode_rows(
         out["block_table"] = bt
         out["page_free"], out["page_top"] = pstate.free, pstate.top
         out["page_rc"] = pstate.rc
+    if "snap_table" in state:
+        # snapshot slots are released with their rows exactly like pages:
+        # refs drop, slots still held by a prefix-sharing peer stay
+        # resident, and the pools are never zeroed (a recycled slot is
+        # fully overwritten at its next boundary capture before any
+        # restore can read it)
+        from repro.serving import pager as PG
+
+        sstate, stbl = PG.release_rows(
+            PG.PagerState(state["snap_free"], state["snap_top"],
+                          state["snap_rc"]),
+            state["snap_table"], mask,
+        )
+        out["snap_table"] = stbl
+        out["snap_free"], out["snap_top"] = sstate.free, sstate.top
+        out["snap_rc"] = sstate.rc
     for key in known & set(state):
         v = state[key]
         # batch axis: (layers/groups, B, ...) except the VLM self-attn cache,

@@ -30,6 +30,11 @@ class Model:
     # multi-token prompt ingestion (chunked prefill): (params, state,
     # toks (B,C), width (B,), active=...) -> (last-position logits, state)
     prefill_chunk: Callable[..., Any] = None
+    # prefix-sharing admission for recurrent families: map donor snapshot
+    # slots and load the donor's state at the last shared page boundary
+    # (state, mask, src, nblk) -> state; None for families without a
+    # recurrent-state snapshot store
+    restore_snapshots: Callable[..., Dict[str, jax.Array]] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -83,4 +88,6 @@ def build_model(cfg: ArchConfig) -> Model:
         ),
         prefill_chunk=lambda params, state, toks, width, **kw:
             lm.prefill_chunk(cfg, params, state, toks, width, **kw),
+        restore_snapshots=lambda state, mask, src, nblk:
+            lm.restore_snapshots(state, mask, src, nblk),
     )

@@ -42,6 +42,18 @@ row per decode step.  Here the whole control state lives on-device:
     (``pager.cow_on_write``), so ``_admit``/``_prefill``/``_step_n`` all
     stay at jit cache size 1 and outputs are token-identical to the
     no-sharing engine.
+  * recurrent-state snapshots — sharing is first-class for the recurrent
+    families too (ssm, and the hybrid family's Mamba blocks): their
+    decode state holds a page-boundary snapshot store (per-(row,
+    boundary) SSM+conv slots, same refcounted allocator as KV pages —
+    ``repro.serving.pager`` documents the contract).  Steps that end
+    exactly at a boundary capture the post-step state (the engine clips
+    prefill chunk widths so every boundary is an endpoint); admission of
+    a matching prompt restores the donor's boundary state
+    (``lm.restore_snapshots``) and resumes prefill at the first unshared
+    token — the recurrence is *restored*, never skipped.  Shared depth is
+    capped below the prompt's last token so the resume point is always a
+    snapshotted boundary (recurrent sharing therefore never needs CoW).
 
 Supported families: dense / moe / ssm / hybrid (everything whose decode
 state supports per-row positions; VLM cross-caches would additionally need
@@ -113,7 +125,7 @@ def _sample(logits, slots: SlotState, wpos, *, temperature: float,
 
 def engine_step(model: Model, params, mstate, slots: SlotState,
                 *, temperature: float = 0.0, top_k: int = 0,
-                chunk: int = 1, cow: bool = False):
+                chunk: int = 1, cow: bool = False, snap_every: int = 0):
     """One decode (or chunked-prefill) step for every row — no host
     interaction.
 
@@ -137,10 +149,23 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
     gather covers the generated buffer), so a mixed batch needs no second
     dispatch point.  Everything else — sampling, token scatter,
     done-detection — is the same arithmetic with a per-row stride.
+
+    ``snap_every`` (trace-time constant; recurrent snapshot engines) does
+    two things: chunk widths are additionally clipped so no chunk crosses
+    a page boundary without *ending* on it (every boundary becomes a step
+    endpoint, so every boundary state gets captured — the availability
+    invariant the host-side prefix index relies on), and the model steps
+    capture/carry the snapshot store.  The host mirror in ``step()``
+    replays the same clip.
     """
     b, max_len = slots.tokens.shape
     if chunk > 1:
-        width = jnp.clip(slots.prompt_len - slots.progress, 1, chunk)
+        limit = jnp.full((b,), chunk, jnp.int32)
+        if snap_every:
+            limit = jnp.minimum(
+                limit, snap_every - slots.progress % snap_every
+            )
+        width = jnp.clip(slots.prompt_len - slots.progress, 1, limit)
         gidx = jnp.clip(
             slots.progress[:, None]
             + jnp.arange(chunk, dtype=jnp.int32)[None, :],
@@ -148,7 +173,8 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
         )
         toks = jnp.take_along_axis(slots.tokens, gidx, axis=1)
         logits, mstate = model.prefill_chunk(params, mstate, toks, width,
-                                             active=slots.active, cow=cow)
+                                             active=slots.active, cow=cow,
+                                             snap_every=snap_every)
         stride = width
     else:
         feed_idx = jnp.clip(slots.progress, 0, max_len - 1)
@@ -156,7 +182,8 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
             slots.tokens, feed_idx[:, None], axis=1
         )[:, 0]
         logits, mstate = model.decode_step(params, mstate, tok,
-                                           active=slots.active, cow=cow)
+                                           active=slots.active, cow=cow,
+                                           snap_every=snap_every)
         stride = jnp.ones((b,), jnp.int32)
 
     wpos = slots.progress + stride
@@ -224,16 +251,23 @@ class ServingEngine:
     shared prompt) copies-on-write to a private page.  Outputs are
     token-identical to the no-sharing engine; what changes is TTFT and
     resident KV bytes (shared pages are resident once, not per row).
-    Families with recurrent decode state (ssm, and the hybrid family's
-    Mamba blocks) never match: skipping prefill would also skip the
-    recurrence, so only pure-attention families (dense/moe) share —
-    others accept the flag and serve identically to no-sharing.  MoE
-    caveat as for chunked prefill: sharing changes which tokens batch
-    into a routing step, so parity needs ``capacity_factor >=
-    n_experts``.  Admission reserves the worst-case page count *without*
-    subtracting shared pages (plus the one CoW spare): a donor may
-    finish first, leaving the sharer sole holder, so the conservative
-    ledger is what keeps alloc-on-write sync-free and never dry.
+    Recurrent decode state (ssm, and the hybrid family's Mamba blocks)
+    shares through the page-boundary snapshot store: admission restores
+    the donor's captured SSM/conv state at the last shared boundary
+    instead of re-running the recurrence, with shared depth capped below
+    the prompt's final token so the resume point is always a snapshotted
+    boundary (recurrent sharing never CoWs; see the module docstring).
+    Snapshot engines clip prefill chunk widths to end at page
+    boundaries, so every boundary state is captured as it is first
+    reached.  MoE caveat as for chunked prefill: sharing changes which
+    tokens batch into a routing step, so parity needs
+    ``capacity_factor >= n_experts``.  Admission reserves the worst-case
+    page count *without* subtracting shared pages (plus the one CoW
+    spare for attention families): a donor may finish first, leaving the
+    sharer sole holder, so the conservative ledger is what keeps
+    alloc-on-write sync-free and never dry.  The snapshot-slot pool is
+    sized to the same worst case at construction (every row can
+    snapshot every boundary it can reach), so it needs no ledger at all.
     """
 
     def __init__(
@@ -290,12 +324,20 @@ class ServingEngine:
         self._mstate = model.init_decode_state(
             batch, max_len, per_row_pos=True,
             layout=layout, page_size=page_size, n_pages=n_pages,
+            snapshots=prefix_sharing,
         )
         # attention-free families have no pages regardless of the flag
         self._paged = "block_table" in self._mstate
+        # recurrent families carry a page-boundary snapshot store exactly
+        # when sharing is on (lm.init_decode_state adds it)
+        self._snap = "snap_table" in self._mstate
+        self._recurrent = model.cfg.family in ("ssm", "hybrid")
         self.page_size = page_size
         self.n_pages = (
             int(self._mstate["page_free"].shape[0]) if self._paged else 0
+        )
+        self.n_snap_slots = (
+            int(self._mstate["snap_free"].shape[0]) if self._snap else 0
         )
         # host-side reservation ledger: worst-case pages per occupied row.
         # Guarantees alloc-on-write never finds the free list empty, so no
@@ -303,12 +345,11 @@ class ServingEngine:
         self._row_pages: List[int] = [0] * batch
         self._pages_reserved = 0
         self.peak_pages_in_use = 0
-        # prefix sharing is only *effective* for pure-attention families:
-        # recurrent state (ssm/hybrid) cannot skip positions, so those
-        # accept the flag but never match (identical to no-sharing)
-        self._share_eligible = (
-            self.prefix_sharing and self._paged
-            and model.cfg.family in ("dense", "moe")
+        self.peak_snaps_in_use = 0
+        # every family shares: dense/moe through aliased KV pages, ssm
+        # through restored state snapshots, hybrid through both
+        self._share_eligible = self.prefix_sharing and (
+            self._paged or self._snap
         )
         # host-side prefix index: chained chunk hash -> (slot, epoch).
         # Epochs invalidate entries when their slot's request is released;
@@ -359,20 +400,28 @@ class ServingEngine:
 
         # the CoW pass only exists in traces that can ever share a page
         # (static per engine): non-sharing paged engines keep the plain
-        # allocator's decode trace
-        cow = self._share_eligible
+        # allocator's decode trace.  Recurrent sharing never writes into
+        # a shared page (resume points sit on unshared boundaries), so
+        # snapshot-only (ssm) engines skip the CoW pass too.
+        cow = self._share_eligible and self._paged
+        # snapshot capture + boundary-aligned chunk clipping only exist in
+        # traces that own a snapshot store (static per engine)
+        snap_every = page_size if self._snap else 0
+        self._snap_every = snap_every
 
         def _step_n(params, mstate, slots):
             def body(_, carry):
                 ms, sl = carry
                 return engine_step(model, params, ms, sl,
                                    temperature=self.temperature,
-                                   top_k=self.top_k, cow=cow)
+                                   top_k=self.top_k, cow=cow,
+                                   snap_every=snap_every)
             return jax.lax.fori_loop(
                 0, steps_per_sync, body, (mstate, slots)
             )
 
         paged = self._paged
+        snap = self._snap
 
         def _admit(mstate, slots, new_tokens, new_plen, new_total, new_rng,
                    mask, new_start, share_src, share_nblk):
@@ -393,6 +442,13 @@ class ServingEngine:
                 mstate = {**mstate, "block_table": bt,
                           "page_free": pstate.free, "page_top": pstate.top,
                           "page_rc": pstate.rc}
+            if snap:
+                # recurrent families: map the donor's snapshot slots and
+                # load its state at the last shared boundary, so prefill
+                # resumes there with the recurrence already advanced
+                mstate = model.restore_snapshots(
+                    mstate, mask, share_src, share_nblk
+                )
             return mstate, SlotState(
                 tokens=jnp.where(mask[:, None], new_tokens, slots.tokens),
                 prompt_len=jnp.where(mask, new_plen, slots.prompt_len),
@@ -412,7 +468,7 @@ class ServingEngine:
                 return engine_step(model, params, mstate, slots,
                                    temperature=self.temperature,
                                    top_k=self.top_k, chunk=prefill_chunk,
-                                   cow=cow)
+                                   cow=cow, snap_every=snap_every)
             self._prefill = jax.jit(_prefill_step, donate_argnums=(1, 2))
         else:
             self._prefill = None
@@ -496,7 +552,15 @@ class ServingEngine:
         check), its host-mirror progress shows the chunk fully *written*
         (mapped pages alone could still be mid-prefill), the chunk is all
         prompt (never a donor's generated tokens), and the tokens compare
-        equal — the hash only routes, equality decides."""
+        equal — the hash only routes, equality decides.
+
+        The same progress check certifies *snapshot* availability for the
+        recurrent families: snapshot engines clip chunk widths so every
+        boundary a row passes is a step endpoint (captured), and shared
+        slots travel with their boundaries, so boundary ``k`` has a
+        snapshot exactly when the donor's progress has reached ``k *
+        page_size`` — the index records availability without any extra
+        bookkeeping."""
         if not self._share_eligible:
             return 0, 0
         best = (0, 0)
@@ -552,10 +616,16 @@ class ServingEngine:
             if req is None:
                 break
             src, nblk = self._match_prefix(req.tokens)
+            if self._recurrent:
+                # recurrent families resume *from a restored snapshot*, so
+                # the resume point must be a boundary strictly inside the
+                # prompt (the re-fed last token then always lands in an
+                # unshared page — recurrent sharing never CoWs)
+                nblk = min(nblk, (req.prompt_len - 1) // self.page_size)
             shared = nblk * self.page_size
             # always re-feed at least the last prompt token: its logits
-            # seed generation (a fully shared prompt re-feeds exactly one
-            # token, whose write CoWs the final shared page)
+            # seed generation (a fully shared attention prompt re-feeds
+            # exactly one token, whose write CoWs the final shared page)
             start = min(shared, req.prompt_len - 1)
             cow = 1 if shared > start else 0
             if self._paged:
@@ -634,6 +704,16 @@ class ServingEngine:
             self._row_progress[b] = np_
         return crossed
 
+    def _chunk_limit(self, progress: int) -> int:
+        """Host mirror of ``engine_step``'s chunk-width cap: snapshot
+        engines clip chunks to end at page boundaries so every boundary
+        state is captured (the two formulas must stay identical — the
+        mirror's TTFT/ingestion ledger depends on it)."""
+        if self._snap_every:
+            return min(self.prefill_chunk,
+                       self._snap_every - progress % self._snap_every)
+        return self.prefill_chunk
+
     def _prompt_phase_rows(self) -> bool:
         """True while some occupied, unfinished row still has >= 2 prompt
         tokens to feed — the regime where a chunked step beats a decode
@@ -660,7 +740,7 @@ class ServingEngine:
             # Decode-phase rows ride along one token per chunk step.
             while self._prompt_phase_rows():
                 widths = [
-                    max(1, min(self.prefill_chunk,
+                    max(1, min(self._chunk_limit(self._row_progress[b]),
                                req.prompt_len - self._row_progress[b]))
                     if req is not None else 1
                     for b, req in enumerate(self._slot_req)
@@ -675,18 +755,22 @@ class ServingEngine:
         )
         self.steps += self.steps_per_sync
         crossed += self._advance_mirror([self.steps_per_sync] * self.batch)
-        # the one host sync of the cycle (page_top rides along — no extra)
+        # the one host sync of the cycle (allocator tops ride along — no
+        # extra round-trips)
+        fetch = [self._slots.active, self._slots.tokens]
         if self._paged:
-            active, tokens, page_top = jax.device_get(
-                (self._slots.active, self._slots.tokens,
-                 self._mstate["page_top"])
-            )
+            fetch.append(self._mstate["page_top"])
+        if self._snap:
+            fetch.append(self._mstate["snap_top"])
+        got = list(jax.device_get(tuple(fetch)))
+        active, tokens = got[0], got[1]
+        if self._paged:
             self.peak_pages_in_use = max(
-                self.peak_pages_in_use, self.n_pages - int(page_top)
+                self.peak_pages_in_use, self.n_pages - int(got[2])
             )
-        else:
-            active, tokens = jax.device_get(
-                (self._slots.active, self._slots.tokens)
+        if self._snap:
+            self.peak_snaps_in_use = max(
+                self.peak_snaps_in_use, self.n_snap_slots - int(got[-1])
             )
         # the readback above materialized every token this cycle produced,
         # so first-token latencies are stamped here, not at dispatch (the
@@ -712,9 +796,10 @@ class ServingEngine:
             self._evict_prefix(b)
             release[b] = True
             finished += 1
-        if finished and self._paged:
-            # free-on-completion: the finished rows' pages return to the
-            # pool now, not when the slot happens to be refilled
+        if finished and (self._paged or self._snap):
+            # free-on-completion: the finished rows' pages — and snapshot
+            # slots (a pure-ssm engine has the latter only) — return to
+            # their pools now, not when the slot happens to be refilled
             self._mstate = self._release(self._mstate, jnp.asarray(release))
         return finished
 
@@ -734,7 +819,7 @@ class ServingEngine:
         self.ttft.clear()
         self.steps = self.prefill_steps = 0
         self.generated = self.prompt_tokens = 0
-        self.peak_pages_in_use = 0
+        self.peak_pages_in_use = self.peak_snaps_in_use = 0
         self.shared_prompt_tokens = self.cow_pages = 0
 
     def kv_bytes_per_page(self) -> int:
@@ -769,6 +854,9 @@ class ServingEngine:
             out["kv_resident_bytes_peak"] = float(
                 self.kv_resident_bytes(peak=True)
             )
+        if self._snap:
+            out["snap_slots"] = float(self.n_snap_slots)
+            out["snap_slots_peak"] = float(self.peak_snaps_in_use)
         if self.prefix_sharing:
             out["shared_prompt_tokens"] = float(self.shared_prompt_tokens)
             out["cow_pages"] = float(self.cow_pages)

@@ -76,6 +76,42 @@ Prefix sharing and copy-on-write (the refcount's reason to exist):
     ranked by batch index inside each — the engine's host mirror relies
     on nothing finer than the reservation totals, but tests do.
 
+Recurrent-state snapshot slots (the same machinery, one level up): the
+recurrent families (ssm / hybrid) cannot *skip* prompt positions the way
+attention can read a peer's pages — the state at token t depends on every
+token before it.  What they can do is *restore*: the decode state grows a
+page-boundary snapshot store whose contract deliberately mirrors the
+block table's (``lm.init_decode_state(snapshots=True)`` builds it):
+
+  * snapshot pools ``snap_ssm (n_slots, layers, H, P, N)`` f32 and
+    ``snap_conv (n_slots, layers, K-1, d_inner)`` — one slot holds a
+    row's *full-depth* SSM + conv state captured exactly at a page
+    boundary (after feeding ``(j+1) * page_size`` tokens).
+  * slot table  ``snap_table (B, max_boundaries)`` int32 — column ``j``
+    maps the slot for boundary ``j+1``; ``-1`` = no snapshot.  Boundary
+    space is block space with ``page_size == 1``: the *same* allocator
+    functions (``alloc_on_write`` / ``share_prefix`` / ``release_rows``)
+    manage slots, so the free list / refcount conservation invariant —
+    and its property test — carry over verbatim.
+  * capture      a step that *ends* exactly at a boundary allocates the
+    column's slot and scatters the post-step state into the pools
+    (``lm._snap_capture``); the serving engine clips chunk widths so
+    every boundary is a step endpoint.  A slot with rc > 1 is read-only
+    (the shared-page contract); slots are recycled without zeroing — a
+    recycled slot is fully overwritten at its next capture before any
+    restore can read it.
+  * share/restore  admission maps the donor's leading ``nblk`` slots
+    (refcount bumps keep them alive past the donor's release, exactly
+    like shared pages) and loads slot ``nblk - 1`` into the row's live
+    state (``lm.restore_snapshots``), so prefill resumes at the first
+    unshared token with the recurrence already advanced.
+  * release      ``reset_decode_rows`` releases a row's slots with its
+    pages: refs drop, rc==0 slots return to the free stack, slots still
+    held by a sharer stay resident.
+  * sizing       the slot pool is built at the worst case
+    (``batch x ceil(max_len / page_size)``) so — like the engine's page
+    reservation ledger — capture can never find the free list dry.
+
 Multi-page-per-step allocation (chunked prefill): a step that writes a
 *range* of positions ``start..end`` may straddle several blocks, so
 ``alloc_range`` maps every block covering the range in one jitted call —

@@ -10,9 +10,12 @@ replays the engine's admission order: release the admitted rows, map the
 donor's leading blocks, resume one position before the shared frontier so
 the next write lands in a shared page and CoWs): hypothesis generates
 them when installed; a seeded fallback sweep always runs, so the
-invariant is covered even where dev deps are absent.  A separate case
-checks the allocator state round-trips through jit unchanged (the
-no-retrace requirement of the serving engine).
+invariant is covered even where dev deps are absent.  The recurrent-state
+snapshot store reuses these primitives over boundary space (page_size 1),
+so the same walk pinned to page_size 1 is its conservation property:
+snapshots partition with their pages, release frees slots only at rc==0.
+A separate case checks the allocator state round-trips through jit
+unchanged (the no-retrace requirement of the serving engine).
 """
 from collections import Counter
 
@@ -131,6 +134,45 @@ if HAVE_HYPOTHESIS:
         n_pages, batch, max_blocks, page_size, ops
     ):
         _run_sequence(n_pages, batch, max_blocks, page_size, ops)
+
+
+# -- snapshot store: boundary space is block space with page_size == 1 ------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_snapshot_slots_conserve_seeded(seed):
+    """The recurrent-state snapshot store (ssm/hybrid prefix sharing) runs
+    these exact allocator primitives over *boundary* space — block space
+    with page_size pinned to 1 (one slot per page boundary: capture
+    allocates at the boundary index, admission ``share_prefix``-maps the
+    donor's leading slots, release drops refs and frees only at rc==0 —
+    so snapshots partition with their pages).  Same walk, page_size 1:
+    the free-list prefix and the mapped slots must partition the pool and
+    every slot's rc must equal its reference multiplicity."""
+    rng = np.random.default_rng(1000 + seed)
+    n_slots = int(rng.integers(2, 12))
+    batch = int(rng.integers(1, 5))
+    n_bound = int(rng.integers(1, 5))
+    ops = [
+        (int(rng.choice([0, 0, 1, 2])), int(rng.integers(0, 2 ** batch)),
+         int(rng.integers(0, batch)))
+        for _ in range(int(rng.integers(4, 25)))
+    ]
+    _run_sequence(n_slots, batch, n_bound, 1, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_slots=st.integers(min_value=1, max_value=12),
+        batch=st.integers(min_value=1, max_value=4),
+        n_bound=st.integers(min_value=1, max_value=4),
+        ops=_ops,
+    )
+    def test_snapshot_slots_conserve_hypothesis(n_slots, batch, n_bound,
+                                                ops):
+        """Hypothesis form of the snapshot-store conservation property
+        (see the seeded variant): boundary space = page_size 1."""
+        _run_sequence(n_slots, batch, n_bound, 1, ops)
 
 
 def test_alloc_denial_when_pool_dry():

@@ -31,9 +31,12 @@ from repro.serving.pager import (
 )
 
 BACKENDS = ["reference", "pallas"]
-# one dense, one moe, one hybrid: the chunk path must cover chunked
-# attention, chunked MoE dispatch, and the token-sequential Mamba carry
-CHUNK_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b", "zamba2-2.7b"]
+# one dense, one moe, one hybrid, one pure ssm: the chunk path must cover
+# chunked attention, chunked MoE dispatch, and the chunked SSD scan with
+# carried recurrent state (decode is its C=1 case — same accumulation
+# order, so chunked and token-by-token ingestion stay token-identical)
+CHUNK_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b", "zamba2-2.7b",
+               "mamba2-2.7b"]
 
 
 def _cfg(arch):
@@ -182,19 +185,81 @@ def test_chunked_prefill_matches_token_by_token(arch, backend):
             assert eng.prefill_steps > 0
 
 
-def test_chunked_prefill_ssm_reference():
-    """Attention-free family: the chunk step is the token-sequential Mamba
-    carry alone — still token-identical and still one trace."""
-    cfg, model, params = _model_params("mamba2-2.7b")
-    rng = np.random.default_rng(23)
-    reqs = [
-        (rng.integers(0, cfg.vocab_size, size=int(n)).tolist(), 4)
-        for n in (5, 9, 3, 7)
-    ]
-    _, base = _serve(model, params, reqs)
-    eng, got = _serve(model, params, reqs, prefill_chunk=4)
-    assert got == base
-    assert eng._prefill._cache_size() == 1
+def test_mamba_prefill_block_matches_sequential_decode():
+    """The recurrent-state unification at the block level: one chunked
+    call of ``mamba_prefill_block`` (B*C-row GEMMs + one seeded SSD scan)
+    must reproduce the token-sequential ``mamba_decode_block`` — per-row
+    non-dividing widths, a zero-width row (carry untouched), carried
+    state across consecutive chunks, both backends."""
+    from repro.models import components as C
+
+    cfg = _cfg("mamba2-2.7b")
+    p = C.init_mamba(cfg, jax.random.PRNGKey(0))
+    b, c = 3, 5
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 2 * c, cfg.d_model),
+                          jnp.float32)
+    widths = np.asarray([[5, 3, 0], [2, 5, 4]])
+    for backend in BACKENDS:
+        with use_backend(backend):
+            ssm = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_head_dim,
+                             cfg.ssm_state), jnp.float32)
+            conv = jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32)
+            s1, s2 = ssm, conv
+            ys = []
+            for t in range(2 * c):
+                w = widths[t // c]
+                y, n1, n2 = C.mamba_decode_block(cfg, p, x[:, t], s1, s2)
+                vi = jnp.asarray(t % c < w)
+                s1 = jnp.where(vi[:, None, None, None], n1, s1)
+                s2 = jnp.where(vi[:, None, None], n2, s2)
+                ys.append(y)
+            ys = jnp.stack(ys, 1)
+            c1, c2 = ssm, conv
+            for k, w in enumerate(widths):
+                xs = x[:, k * c : (k + 1) * c]
+                valid = jnp.arange(c)[None, :] < jnp.asarray(w)[:, None]
+                yc, c1, c2 = C.mamba_prefill_block(cfg, p, xs, c1, c2, valid)
+                for r in range(b):
+                    if w[r]:
+                        np.testing.assert_allclose(
+                            np.asarray(yc[r, : w[r]]),
+                            np.asarray(ys[r, k * c : k * c + w[r]]),
+                            rtol=2e-4, atol=2e-4,
+                        )
+            np.testing.assert_allclose(np.asarray(c1), np.asarray(s1),
+                                       rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(np.asarray(c2), np.asarray(s2),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_prefill_chunk_registered_and_tuned():
+    """The chunked-SSD serving path is a first-class op: registered with
+    both lowerings (coverage reports the port) and tunable — the SSD
+    chunk size comes from the tuning table and any setting yields the
+    same math (chunk invariance), clamped so short chunks never pad."""
+    from repro.core.registry import clear_tuning, coverage, set_tuning
+    from repro.kernels import ops
+
+    assert coverage()["ssd_prefill_chunk"] is True
+    b, s, h, p, n = 2, 7, 3, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, 1, n))
+    C = jax.random.normal(ks[4], (b, s, 1, n))
+    st = jax.random.normal(jax.random.PRNGKey(9), (b, h, p, n))
+    y0, f0 = ops.ssd_prefill_chunk(x, dt, A, Bm, C, st)
+    try:
+        for chunk in (1, 3, 64):
+            set_tuning("ssd_prefill_chunk", chunk=chunk)
+            y, f = ops.ssd_prefill_chunk(x, dt, A, Bm, C, st)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                       rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(np.asarray(f), np.asarray(f0),
+                                       rtol=2e-4, atol=2e-4)
+    finally:
+        clear_tuning()
 
 
 @pytest.mark.parametrize("backend", BACKENDS)

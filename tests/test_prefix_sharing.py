@@ -5,10 +5,15 @@ across KV layouts and backends (the KVCacheLayout contract extended to
 admission, prefill resumed at the first unshared token, CoW on the one
 write that can land in a shared page, refcounted release through
 donor-death and slot-readmission cycles, and a real resident-memory win
-on the shared-system-prompt workload."""
+on the shared-system-prompt workload.  The recurrent families (ssm /
+hybrid) share through page-boundary state snapshots — the donor's
+SSM/conv state is restored at the last shared boundary, never skipped —
+and must meet the same token-identity, engagement and conservation bars
+(no CoW, snapshot slots partition with their pages)."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -18,9 +23,11 @@ from repro.models.model import build_model
 from repro.serving import ServingEngine
 
 BACKENDS = ["reference", "pallas"]
-# dense and moe share for real; hybrid carries recurrent state that
-# cannot skip positions, so it must accept the flag and serve unchanged
+# dense and moe share through aliased KV pages; ssm and hybrid share
+# through page-boundary recurrent-state snapshots (the donor's SSM/conv
+# state is *restored* at the last shared boundary, never skipped)
 SHARE_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b"]
+RECURRENT_ARCHS = ["mamba2-2.7b", "zamba2-2.7b"]
 
 
 def _cfg(arch):
@@ -223,17 +230,92 @@ def test_sampled_streams_invariant_under_sharing():
     assert eng.shared_prompt_tokens > 0
 
 
-def test_hybrid_accepts_flag_but_serves_unchanged():
-    """Recurrent decode state cannot skip positions: the hybrid family
-    must accept the flag, never match, and serve token-identically."""
-    cfg, model, params = _model_params("zamba2-2.7b")
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("arch", RECURRENT_ARCHS)
+def test_recurrent_sharing_is_token_identical(arch, backend):
+    """ssm/hybrid sharing via restored state snapshots: same tokens as the
+    no-sharing and contiguous engines, sharing demonstrably engaged, no
+    CoW ever (the resume point is always an unshared boundary), and both
+    the snapshot-slot pool and — for hybrid — the page pool whole at
+    drain."""
+    cfg, model, params = _model_params(arch)
+    donor, rest = _shared_requests(cfg)
+    kw = dict(layout="paged", page_size=4, prefill_chunk=4)
+    with use_backend(backend):
+        _, contig = _serve_staged(model, params, donor, rest)
+        _, base = _serve_staged(model, params, donor, rest, **kw)
+        eng, got = _serve_staged(model, params, donor, rest,
+                                 prefix_sharing=True, **kw)
+    assert got == base == contig
+    assert eng.shared_prompt_tokens > 0, "sharing never engaged"
+    assert eng.cow_pages == 0, "recurrent sharing must never CoW"
+    assert eng._step_n._cache_size() == 1
+    assert eng._admit._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+    # drain returns every snapshot slot (and page): nothing leaked
+    assert int(eng._mstate["snap_top"]) == eng.n_snap_slots
+    assert (np.asarray(eng._mstate["snap_rc"]) == 0).all()
+    assert (np.asarray(eng._mstate["snap_table"]) == -1).all()
+    if "block_table" in eng._mstate:
+        assert int(eng._mstate["page_top"]) == eng.n_pages
+
+
+def test_recurrent_sharing_without_chunked_prefill():
+    """prefill_chunk=1: boundaries are crossed one decode step at a time,
+    so every boundary state is still captured and restorable."""
+    cfg, model, params = _model_params("mamba2-2.7b")
     donor, rest = _shared_requests(cfg)
     kw = dict(layout="paged", page_size=4)
     _, base = _serve_staged(model, params, donor, rest, **kw)
     eng, got = _serve_staged(model, params, donor, rest,
                              prefix_sharing=True, **kw)
     assert got == base
-    assert eng.shared_prompt_tokens == 0 and eng.cow_pages == 0
+    assert eng.shared_prompt_tokens > 0
+    assert int(eng._mstate["snap_top"]) == eng.n_snap_slots
+
+
+def test_snapshot_capture_restore_roundtrip():
+    """The model-level snapshot contract, no engine in the loop: decode
+    steps that end at page boundaries capture the post-step state; a
+    sharer admitted with ``restore_snapshots`` holds bitwise the donor's
+    state at the shared boundary (restore is a load, not a recompute)."""
+    from repro.models import lm as LM
+
+    cfg, model, params = _model_params("mamba2-2.7b")
+    P = 4
+    state = LM.init_decode_state(cfg, 2, 16, per_row_pos=True,
+                                 layout="paged", page_size=P,
+                                 snapshots=True)
+    toks = np.arange(1, 11, dtype=np.int32)    # 10 tokens: boundaries 4, 8
+    active = jnp.asarray([True, False])
+    snap_at = {}
+    for t in toks:
+        _, state = LM.decode_step(
+            cfg, params, state, jnp.asarray([t, 0], jnp.int32),
+            active=active, snap_every=P,
+        )
+        if int(state["pos"][0]) % P == 0:
+            snap_at[int(state["pos"][0])] = np.asarray(state["ssm"][:, 0])
+    assert sorted(snap_at) == [4, 8]
+    tbl = np.asarray(state["snap_table"])
+    assert (tbl[0, :2] >= 0).all() and (tbl[0, 2:] == -1).all()
+    assert (tbl[1] == -1).all()
+    # restore row 1 from row 0's first two boundaries (8 shared tokens)
+    state = LM.restore_snapshots(
+        state, jnp.asarray([False, True]), jnp.zeros((2,), jnp.int32),
+        jnp.asarray([0, 2], jnp.int32),
+    )
+    np.testing.assert_array_equal(np.asarray(state["ssm"][:, 1]), snap_at[8])
+    # the shared slots are refcounted like pages: donor release keeps
+    # them resident, sharer release frees them
+    tbl = np.asarray(state["snap_table"])
+    np.testing.assert_array_equal(tbl[1, :2], tbl[0, :2])
+    assert (np.asarray(state["snap_rc"])[tbl[0, :2]] == 2).all()
+    state = LM.reset_decode_rows(cfg, state, jnp.asarray([True, False]))
+    assert (np.asarray(state["snap_rc"])[tbl[1, :2]] == 1).all()
+    state = LM.reset_decode_rows(cfg, state, jnp.asarray([False, True]))
+    assert (np.asarray(state["snap_rc"]) == 0).all()
+    assert int(state["snap_top"]) == state["snap_free"].shape[0]
 
 
 def test_sharing_requires_paged_layout():
@@ -275,3 +357,44 @@ def test_resident_kv_drops_with_shared_system_prompt():
     drop = (e_off.kv_resident_bytes(peak=True)
             / max(e_on.kv_resident_bytes(peak=True), 1))
     assert drop >= 3.0, f"resident-KV drop {drop:.2f}x < 3x"
+
+
+def test_hybrid_resident_kv_drops_with_shared_system_prompt():
+    """The acceptance workload for the recurrent families: 8 hybrid rows
+    sharing a 256-token prompt prefix.  Snapshot-restore sharing must
+    leave every token identical while peak resident KV collapses (the
+    shared attention pages are resident once) and nearly the whole
+    prefix is served from shared pages + restored state."""
+    cfg, model, params = _model_params("zamba2-2.7b")
+    n, plen, gen, page = 8, 256, 6, 8
+    rng = np.random.default_rng(29)
+    prefix = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+    tails = [rng.integers(0, cfg.vocab_size, size=3).tolist()
+             for _ in range(n)]
+    tails[-1] = []           # fully shared prompt (resume one page early)
+    donor_gen = gen + 4
+    max_len = plen + 3 + donor_gen + 1
+
+    def run(sharing):
+        eng = ServingEngine(model, params, batch=n, max_len=max_len,
+                            steps_per_sync=2, layout="paged",
+                            page_size=page, prefill_chunk=64,
+                            prefix_sharing=sharing)
+        rid0 = eng.submit(prefix + tails[0], donor_gen)
+        eng.step()                       # donor's prefix pages are written
+        rids = [rid0] + [eng.submit(prefix + t, gen) for t in tails[1:]]
+        outs = eng.run()
+        return eng, [outs[r].tolist() for r in rids]
+
+    e_off, base = run(False)
+    e_on, got = run(True)
+    assert got == base
+    # every sharer skips at least the page-aligned bulk of the prefix
+    # (the fully shared prompt resumes one boundary short of its end)
+    assert e_on.shared_prompt_tokens >= (n - 1) * (plen - page)
+    assert e_on.cow_pages == 0
+    drop = (e_off.kv_resident_bytes(peak=True)
+            / max(e_on.kv_resident_bytes(peak=True), 1))
+    assert drop >= 3.0, f"hybrid resident-KV drop {drop:.2f}x < 3x"
+    assert int(e_on._mstate["snap_top"]) == e_on.n_snap_slots
+    assert (np.asarray(e_on._mstate["snap_rc"]) == 0).all()

@@ -38,8 +38,9 @@ def test_registry_coverage_report():
                 "conv2d", "maxpool", "softmax", "softmax_xent"]
     for name in required:
         assert cov[name], f"block {name} not ported"
-    # LM hot-spots too
-    for name in ["attention", "attention_decode", "rmsnorm", "ssd_scan"]:
+    # LM hot-spots too (serving: decode is ssd_prefill_chunk's C=1 case)
+    for name in ["attention", "attention_decode", "rmsnorm", "ssd_scan",
+                 "attention_prefill_chunk", "ssd_prefill_chunk"]:
         assert cov[name], name
 
 
