@@ -41,9 +41,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.audit import jit_cache_audit
 from repro.configs.registry import get_arch
 from repro.models.model import build_model
 from repro.serving import ServingEngine
+
+
+def _audit_ctx(eng, enabled):
+    """Under --audit, fail loudly on any retrace instead of timing it."""
+    import contextlib
+
+    return jit_cache_audit(eng) if enabled else contextlib.nullcontext()
 
 
 def make_requests(seed, n, vocab_size, gen, lo=4, hi=12):
@@ -118,20 +126,22 @@ def run_host_loop(model, params, reqs, batch, max_len):
 
 
 def run_engine(model, params, reqs, batch, max_len, steps_per_sync,
-               **engine_kwargs):
+               audit=False, **engine_kwargs):
     eng = ServingEngine(model, params, batch=batch, max_len=max_len,
                         steps_per_sync=steps_per_sync, **engine_kwargs)
-    # compile outside the timed region (a server compiles once at startup):
-    # a throwaway workload drives admit + fused-step (+ prefill) traces once
-    for _ in range(batch):
-        eng.submit([1, 2, 3], 2)
-    eng.run()
-    eng.reset_stats()
+    with _audit_ctx(eng, audit):
+        # compile outside the timed region (a server compiles once at
+        # startup): a throwaway workload drives admit + fused-step
+        # (+ prefill) traces once
+        for _ in range(batch):
+            eng.submit([1, 2, 3], 2)
+        eng.run()
+        eng.reset_stats()
 
-    rids = [eng.submit(t, g) for t, g in reqs]
-    t0 = time.perf_counter()
-    outs = eng.run()
-    dt = time.perf_counter() - t0
+        rids = [eng.submit(t, g) for t, g in reqs]
+        t0 = time.perf_counter()
+        outs = eng.run()
+        dt = time.perf_counter() - t0
     ttft = [eng.ttft[r] for r in rids if r in eng.ttft]
     return {"tok_s": eng.generated / dt, "steps": eng.steps, "seconds": dt,
             "prefill_steps": eng.prefill_steps,
@@ -173,7 +183,7 @@ def compare_layouts(args):
                        n_pages=max(max_need, full_pool // 2))),
     ):
         rows[name] = run_engine(model, params, reqs, args.batch, max_len,
-                                args.steps_per_sync, **kw)
+                                args.steps_per_sync, audit=args.audit, **kw)
     for i in range(len(reqs)):
         a, b = rows["contiguous"]["outputs"][i], rows["paged"]["outputs"][i]
         assert a == b, f"request {i}: contiguous {a} != paged {b}"
@@ -233,19 +243,20 @@ def compare_prefix_sharing(args):
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
             prefix_sharing=sharing,
         )
-        for _ in range(2):                     # compile outside the clock
-            eng.submit([1, 2, 3], 2)
-        eng.run()
-        eng.reset_stats()
-        rid0 = eng.submit(prefix + tails[0], donor_gen)
-        eng.step()                             # donor ingests the prefix
-        rids = [rid0] + [
-            eng.submit(prefix + t, gen) for t in tails[1:]
-        ]
-        pt0 = eng.prompt_tokens                # donor's pre-window tokens
-        t0 = time.perf_counter()
-        outs = eng.run()
-        dt = time.perf_counter() - t0
+        with _audit_ctx(eng, args.audit):
+            for _ in range(2):                 # compile outside the clock
+                eng.submit([1, 2, 3], 2)
+            eng.run()
+            eng.reset_stats()
+            rid0 = eng.submit(prefix + tails[0], donor_gen)
+            eng.step()                         # donor ingests the prefix
+            rids = [rid0] + [
+                eng.submit(prefix + t, gen) for t in tails[1:]
+            ]
+            pt0 = eng.prompt_tokens            # donor's pre-window tokens
+            t0 = time.perf_counter()
+            outs = eng.run()
+            dt = time.perf_counter() - t0
         ttft = [eng.ttft[r] for r in rids[1:] if r in eng.ttft]
         return {
             "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else float("nan"),
@@ -321,7 +332,8 @@ def compare_prefill(args):
         for pc in chunks:
             rows[(layout, pc)] = run_engine(
                 model, params, reqs, args.batch, max_len,
-                args.steps_per_sync, prefill_chunk=pc, **kw,
+                args.steps_per_sync, prefill_chunk=pc, audit=args.audit,
+                **kw,
             )
     base = rows[(layouts[0], 1)]["outputs"]
     for key, r in rows.items():
@@ -384,6 +396,10 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal sizes: CI driver-rot check, not a benchmark")
+    ap.add_argument("--audit", action="store_true",
+                    help="wrap every engine run in jit_cache_audit so an "
+                         "accidental retrace fails loudly instead of "
+                         "reporting bogus tok/s")
     args = ap.parse_args(argv)
     if args.family:
         args.kv_arch = {
@@ -418,7 +434,7 @@ def main(argv=None):
         main_kw.update(layout="paged", page_size=args.page_size)
     host = run_host_loop(model, params, reqs, args.batch, max_len)
     eng = run_engine(model, params, reqs, args.batch, max_len,
-                     args.steps_per_sync, **main_kw)
+                     args.steps_per_sync, audit=args.audit, **main_kw)
 
     # both schedulers must produce identical tokens before we compare speed
     for i in range(len(reqs)):

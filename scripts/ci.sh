@@ -14,6 +14,9 @@
 #                                     both (default)
 #   ./scripts/ci.sh --matrix          the full smoke matrix locally:
 #                                     {reference,pallas} x {contiguous,paged}
+#   ./scripts/ci.sh --lint            invariant linter (R001-R005) + op
+#                                     coverage lint (repro.analysis);
+#                                     fails on any finding
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,16 +39,20 @@ python -m pip install -q -r requirements-dev.txt ||
 # share_prefix + CoW) really run.  A second, hybrid-family pass keeps the
 # recurrent serving path (chunked SSD prefill + page-boundary snapshot
 # sharing/restore) continuously exercised alongside the attention one.
+#
+# Every smoke invocation runs under --audit (repro.analysis's
+# jit_cache_audit): a benchmark driver that retraces fails the cell
+# instead of reporting bogus tok/s.
 smoke() {
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1"
+            --layout "$1" --audit
     echo "== smoke (recurrent): family=hybrid layout=$1 =="
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1" --family hybrid
+            --layout "$1" --family hybrid --audit
 }
 
 case "${1:-}" in
@@ -60,11 +67,16 @@ case "${1:-}" in
         done
     done
     ;;
+--lint)
+    # the bytecode-artifact check above already ran (every entry point
+    # shares it); this adds the AST rules + the op coverage lint
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/lint.py
+    ;;
 "")
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
     ;;
 *)
-    echo "usage: $0 [--smoke [contiguous|paged|both] | --matrix]" >&2
+    echo "usage: $0 [--smoke [contiguous|paged|both] | --matrix | --lint]" >&2
     exit 2
     ;;
 esac

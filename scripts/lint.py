@@ -1,0 +1,21 @@
+#!/usr/bin/env python3
+"""Run the repro invariant linter (R001-R005) + op coverage lint.
+
+Usage:
+    python scripts/lint.py [paths...] [--no-coverage]
+
+With no paths, lints ``src/repro``.  Exits nonzero on any finding.  The
+rule set and suppression syntax are documented in the ``repro.analysis``
+package docstring.
+"""
+import sys
+from pathlib import Path
+
+_SRC = Path(__file__).resolve().parents[1] / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""``repro.analysis`` — invariant linter + runtime auditors for the stack.
+
+The PHAST port survived because every ported layer was *checkable* against
+the original; this package gives the repro stack the same property.  The
+ROADMAP "Standing notes" (jit cache size 1, host-mirror scheduling without
+device syncs, ``pallas_compat`` as the single Pallas-API import point,
+scoped backend policy, f32 SSD state) are enforced here as failing checks
+rather than prose.
+
+Static rules (AST-based, run by ``scripts/lint.py`` / ``ci.sh --lint``)
+========================================================================
+
+R001  no-direct-tpu-import
+    ``jax.experimental.pallas.tpu`` (and ``TPU*`` symbols from pallas) may
+    only be imported by ``repro/kernels/pallas_compat.py``.  JAX renames
+    these symbols across releases; the compat shim is the one place that
+    absorbs the drift.  Fix: import ``pallas_compat as plc`` and use
+    ``plc.VMEM`` / ``plc.CompilerParams`` / ``plc.MemorySpace`` / etc.
+
+R002  no-implicit-host-sync
+    The host-mirror scheduler and the traced ``engine_step`` paths
+    (``serving/engine.py`` step-choice code, ``models/lm.py`` chunk-width
+    logic) must not force device→host syncs: no ``.item()``,
+    ``int()/bool()/float()`` on device values, ``np.asarray``/``np.array``
+    on device arrays, ``jax.device_get`` or ``jax.block_until_ready``.
+    The one sanctioned sync is the ``steps_per_sync`` harvest in
+    ``ServingEngine.step`` (allowlisted).  Fix: keep scheduling decisions
+    on the host mirror; batch device reads into the harvest.
+
+R003  jit-must-donate
+    Every ``jax.jit`` call site under ``serving/`` must declare
+    ``donate_argnums`` (or ``donate_argnames``) so decode-state pytrees
+    are donated instead of copied each step.  Fix: pass the state
+    arguments' positions in ``donate_argnums=...``.
+
+R004  no-process-wide-backend
+    Library code under ``src/repro/`` must not call
+    ``set_default_backend``: it mutates process-wide state and leaks
+    across serving worker threads (the PR 1 lesson).  Fix: use the scoped
+    ``use_backend(...)`` context-manager stack; ``set_default_backend``
+    is for application entry points only.
+
+R005  ssd-state-stays-f32
+    The SSD scan's carried state must stay float32 end to end — a lower
+    precision cast compounds across chunks.  In
+    ``kernels/mamba_scan.py`` / ``models/components.py``, any
+    ``.astype(...)`` of a state-carrying value (``state*``, ``h0*``,
+    ``hf*``, ``ssm_state*``) to anything but ``jnp.float32`` is flagged.
+    Fix: keep the cast as ``jnp.float32`` (the kernel's out_shape already
+    declares f32) or rename the value if it is genuinely not scan state.
+
+Coverage lint (C101–C103, run by the same entry points)
+=======================================================
+
+C101  an op registered without a Pallas lowering must say so explicitly
+      (``register_op(..., reference_only=True)``) — half-wired kernels
+      can't hide behind a missing backend.
+C102  an op with a Pallas lowering must declare which tuning-table keys
+      it resolves (``register_op(..., tuning="gemm")``; ``tuning=()``
+      declares "no tunable parameters").
+C103  every declared tuning key must actually appear at a ``get_tuning``
+      call site under ``src/repro/kernels`` — declarations can't go stale.
+
+Suppression syntax
+==================
+
+Append ``# repro-lint: disable=R001`` (comma-separate several IDs, or
+``disable=all``) to the offending line, or put the comment alone on the
+line directly above it.  Suppressions are for sanctioned exceptions such
+as the ``pallas_compat`` import itself — use sparingly.
+
+Runtime auditors (``repro.analysis.audit``)
+===========================================
+
+``jit_cache_audit(engine)`` wraps the engine's jitted entry points
+(``_step_n``/``_admit``/``_prefill``/``_release``) and raises
+``JitCacheRetrace`` the moment any of them retraces (cache size > 1) —
+run it over a mixed prefill/decode/admission workload to prove the
+cache-size-1 standing note.  ``no_transfer_audit()`` arms
+``jax.transfer_guard_device_to_host("disallow")`` so any *implicit*
+device→host transfer between harvest syncs raises, while the explicit
+``jax.device_get`` harvest (and host→device uploads) stay legal.
+"""
+from __future__ import annotations
+
+from repro.analysis.audit import JitCacheRetrace, jit_cache_audit, no_transfer_audit
+from repro.analysis.lint import Finding, lint_file, lint_paths, lint_source
+from repro.analysis.coverage import coverage_findings
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "JitCacheRetrace",
+    "coverage_findings",
+    "jit_cache_audit",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "no_transfer_audit",
+]

@@ -1,0 +1,132 @@
+"""Runtime auditors for the serving engine's jit/transfer discipline.
+
+``jit_cache_audit(engine)`` proves the "jit cache size stays 1" standing
+note over a real workload; ``no_transfer_audit()`` proves the scheduler
+never syncs device→host outside the sanctioned ``steps_per_sync``
+harvest.  Both are context managers so tests and benchmarks can wrap an
+unmodified engine run.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterator, Optional, Sequence
+
+import jax
+
+
+class JitCacheRetrace(AssertionError):
+    """A jitted engine entry point retraced (cache size grew past 1)."""
+
+
+#: Engine attributes wrapped by default — the four jitted entry points.
+ENGINE_JIT_FNS = ("_step_n", "_admit", "_prefill", "_release")
+
+
+class JitCacheReport:
+    """Observed jit-cache sizes per wrapped function.
+
+    ``growth(name)`` is the number of cache entries added *inside* the
+    audited region (1 == the single expected compilation, or 0 if the
+    function was already warm); ``max_sizes`` keeps the absolute size.
+    """
+
+    def __init__(self) -> None:
+        self.starts: Dict[str, int] = {}
+        self.max_sizes: Dict[str, int] = {}
+        self.calls: Dict[str, int] = {}
+
+    def record(self, name: str, size: int, start: int) -> None:
+        self.starts[name] = start
+        self.calls[name] = self.calls.get(name, 0) + 1
+        self.max_sizes[name] = max(self.max_sizes.get(name, 0), size)
+
+    def growth(self, name: str) -> int:
+        return self.max_sizes[name] - self.starts[name]
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"JitCacheReport(starts={self.starts}, "
+            f"max_sizes={self.max_sizes}, calls={self.calls})"
+        )
+
+
+@contextlib.contextmanager
+def jit_cache_audit(
+    engine,
+    fn_names: Sequence[str] = ENGINE_JIT_FNS,
+    max_cache_size: int = 1,
+) -> Iterator[JitCacheReport]:
+    """Assert the engine's jitted entry points never retrace.
+
+    Wraps each ``fn_names`` attribute of ``engine`` (skipping absent
+    ones) so that after every call the function's jit-cache *growth
+    since the audit began* is checked against ``max_cache_size`` — a
+    violation raises :class:`JitCacheRetrace` at the offending call,
+    naming the function, instead of silently re-compiling (and, in a
+    benchmark, reporting bogus tok/s).  Growth is measured against a
+    baseline taken at wrap time because jax shares a jit cache between
+    wrappers of the same underlying callable — e.g. every engine's
+    ``_release`` is ``jax.jit(model.reset_decode_rows, ...)``, so a
+    second engine over the same model starts with that cache warm; the
+    invariant is "this workload compiled each entry point at most
+    once", not an absolute cache size.  Yields a
+    :class:`JitCacheReport`; originals are restored on exit.
+    """
+    report = JitCacheReport()
+    saved = {}
+
+    def _wrap(name: str, fn):
+        start = fn._cache_size()
+
+        def checked(*args, **kwargs):
+            out = fn(*args, **kwargs)
+            size = fn._cache_size()
+            report.record(name, size, start)
+            if size - start > max_cache_size:
+                raise JitCacheRetrace(
+                    f"{name} retraced: jit cache grew {size - start} > "
+                    f"{max_cache_size} entries (size {start} -> {size}) "
+                    f"over {report.calls[name]} call(s) — an argument "
+                    "changed shape/dtype or a static arg varied"
+                )
+            return out
+
+        return checked
+
+    for name in fn_names:
+        fn = getattr(engine, name, None)
+        if fn is None:
+            continue
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(
+                f"{name} has no _cache_size(); is it a jax.jit function?"
+            )
+        saved[name] = fn
+        setattr(engine, name, _wrap(name, fn))
+    if not saved:
+        raise ValueError(f"engine has none of {tuple(fn_names)} to audit")
+    try:
+        yield report
+    finally:
+        for name, fn in saved.items():
+            setattr(engine, name, fn)
+
+
+@contextlib.contextmanager
+def no_transfer_audit() -> Iterator[None]:
+    """Disallow *implicit* transfers inside the block.
+
+    Arms ``jax.transfer_guard("disallow")``: any implicit sync —
+    ``int()``/``float()``/``bool()`` on a device array, ``.item()``,
+    ``np.asarray`` on a device value, or a host value smuggled into a
+    jitted call — raises immediately, while *explicit* transfers (the
+    engine's sanctioned ``jax.device_get`` harvest, ``jnp.asarray``
+    uploads in ``_refill``) stay legal.  The full guard rather than the
+    device→host one because on CPU backends device→host reads are
+    zero-copy and never guarded — the host→device side is what actually
+    trips when scheduler code touches device values implicitly.
+    Wrapping ``ServingEngine.run()`` in this proves the "no device syncs
+    for step choice" claim between harvest syncs.
+    """
+    with jax.transfer_guard("disallow"):
+        yield

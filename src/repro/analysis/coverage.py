@@ -1,0 +1,127 @@
+"""Op-registry coverage lint (C101–C103) — new kernels can't ship half-wired.
+
+Cross-checks the op registry's declarations against the kernel sources:
+
+    C101  op without a Pallas lowering not declared ``reference_only``
+    C102  op with a Pallas lowering but no declared tuning keys
+    C103  declared tuning key never resolved by a ``get_tuning`` call
+          site under ``src/repro/kernels`` (stale declaration)
+
+Tuning keys at call sites are collected by AST scan: the literal first
+argument of ``get_tuning(...)``, literal ``tuning_op=`` / ``op_name=``
+keyword arguments (kernels that thread the key through a helper), and
+literal defaults of parameters with those names.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set
+
+from repro.analysis.rules import Finding
+
+_KEY_PARAMS = ("tuning_op", "op_name")
+
+
+def _collect_tuning_keys(kernels_root: Path) -> Set[str]:
+    keys: Set[str] = set()
+    for fp in sorted(kernels_root.rglob("*.py")):
+        tree = ast.parse(fp.read_text(encoding="utf-8"), filename=str(fp))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                fn = node.func
+                name = fn.id if isinstance(fn, ast.Name) else (
+                    fn.attr if isinstance(fn, ast.Attribute) else None
+                )
+                if name == "get_tuning" and node.args:
+                    first = node.args[0]
+                    if isinstance(first, ast.Constant) and isinstance(
+                        first.value, str
+                    ):
+                        keys.add(first.value)
+                for kw in node.keywords:
+                    if kw.arg in _KEY_PARAMS and isinstance(
+                        kw.value, ast.Constant
+                    ) and isinstance(kw.value.value, str):
+                        keys.add(kw.value.value)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                params = args.posonlyargs + args.args + args.kwonlyargs
+                defaults = list(args.defaults) + list(args.kw_defaults)
+                names = [a.arg for a in params][-len(defaults):] if defaults else []
+                for pname, dflt in zip(names, defaults):
+                    if (
+                        pname in _KEY_PARAMS
+                        and isinstance(dflt, ast.Constant)
+                        and isinstance(dflt.value, str)
+                    ):
+                        keys.add(dflt.value)
+    return keys
+
+
+def coverage_findings(kernels_root: Optional[Path] = None) -> List[Finding]:
+    """Run the coverage lint; importing the ops module registers everything."""
+    import repro.kernels.ops  # noqa: F401  - populates the registry
+    from repro.core.registry import list_ops
+
+    if kernels_root is None:
+        import repro.kernels
+
+        kernels_root = Path(repro.kernels.__file__).resolve().parent
+    call_site_keys = _collect_tuning_keys(kernels_root)
+    path = "src/repro/kernels/ops.py"
+    out: List[Finding] = []
+    for name, entry in sorted(list_ops().items()):
+        if entry.pallas is None and not entry.reference_only:
+            out.append(
+                Finding(
+                    rule="C101",
+                    path=path,
+                    line=1,
+                    col=1,
+                    message=(
+                        f"op {name!r} has no Pallas lowering and is not "
+                        "declared reference_only"
+                    ),
+                    hint=(
+                        "add the lowering, or register_op(..., "
+                        "reference_only=True) to record the gap explicitly"
+                    ),
+                )
+            )
+        if entry.pallas is not None and entry.tuning is None:
+            out.append(
+                Finding(
+                    rule="C102",
+                    path=path,
+                    line=1,
+                    col=1,
+                    message=(
+                        f"op {name!r} has a Pallas lowering but no declared "
+                        "tuning keys"
+                    ),
+                    hint=(
+                        "register_op(..., tuning=\"<get_tuning key>\") — "
+                        "use tuning=() if the kernel has no tunable knobs"
+                    ),
+                )
+            )
+        for key in entry.tuning or ():
+            if key not in call_site_keys:
+                out.append(
+                    Finding(
+                        rule="C103",
+                        path=path,
+                        line=1,
+                        col=1,
+                        message=(
+                            f"op {name!r} declares tuning key {key!r} but no "
+                            "get_tuning call site under kernels/ resolves it"
+                        ),
+                        hint=(
+                            "fix the declared key or delete the stale "
+                            "declaration"
+                        ),
+                    )
+                )
+    return out

@@ -1,0 +1,152 @@
+"""Driver for the repro invariant linter.
+
+``lint_source`` lints one source string under a (possibly virtual) path —
+used both for real files and for the known-bad fixtures in
+``tests/fixtures/lint/`` which are linted *as if* they lived at the
+canonical path their rule is scoped to.  ``lint_paths`` walks directories.
+
+Suppression: a finding on line L is dropped when line L, or a
+comment-only line L-1, carries ``# repro-lint: disable=RXXX`` (several
+IDs comma-separated, or ``all``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.rules import ALL_RULES, Finding, Rule
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+def _suppressed_rules(line: str) -> frozenset:
+    m = _SUPPRESS_RE.search(line)
+    if not m:
+        return frozenset()
+    return frozenset(tok.strip() for tok in m.group(1).split(",") if tok.strip())
+
+
+def _is_suppressed(finding: Finding, lines: Sequence[str]) -> bool:
+    idx = finding.line - 1
+    candidates = []
+    if 0 <= idx < len(lines):
+        candidates.append(lines[idx])
+    if idx - 1 >= 0 and lines[idx - 1].lstrip().startswith("#"):
+        candidates.append(lines[idx - 1])
+    for line in candidates:
+        ids = _suppressed_rules(line)
+        if finding.rule in ids or "all" in ids:
+            return True
+    return False
+
+
+def lint_source(
+    src: str,
+    path: str,
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    """Lint ``src`` as if it lived at ``path``; returns surviving findings."""
+    rules = ALL_RULES if rules is None else rules
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as exc:
+        return [
+            Finding(
+                rule="E000",
+                path=path,
+                line=exc.lineno or 1,
+                col=(exc.offset or 0) + 1,
+                message=f"syntax error: {exc.msg}",
+            )
+        ]
+    lines = src.splitlines()
+    out: List[Finding] = []
+    for rule in rules:
+        if not rule.applies(path):
+            continue
+        for finding in rule.check(tree, path, src):
+            if not _is_suppressed(finding, lines):
+                out.append(finding)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def lint_file(
+    file_path: str | Path,
+    root: Optional[str | Path] = None,
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    """Lint one file; paths in findings are relative to ``root`` if given."""
+    fp = Path(file_path)
+    shown = fp
+    if root is not None:
+        try:
+            shown = fp.resolve().relative_to(Path(root).resolve())
+        except ValueError:
+            shown = fp
+    return lint_source(
+        fp.read_text(encoding="utf-8"), shown.as_posix(), rules=rules
+    )
+
+
+def lint_paths(
+    paths: Iterable[str | Path],
+    root: Optional[str | Path] = None,
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    """Lint files and/or directory trees (``*.py``, sorted, deduped)."""
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    seen = set()
+    out: List[Finding] = []
+    for fp in files:
+        key = os.path.realpath(fp)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.extend(lint_file(fp, root=root, rules=rules))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI body shared with ``scripts/lint.py``: AST rules + coverage lint."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="repro invariant linter (R001-R005) + op coverage lint",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/dirs to lint (default: src/repro relative to repo root)",
+    )
+    ap.add_argument(
+        "--no-coverage",
+        action="store_true",
+        help="skip the op-registry coverage lint (no jax import needed)",
+    )
+    args = ap.parse_args(argv)
+
+    repo_root = Path(__file__).resolve().parents[3]
+    paths = [Path(p) for p in args.paths] or [repo_root / "src" / "repro"]
+    findings = lint_paths(paths, root=repo_root)
+
+    if not args.no_coverage:
+        from repro.analysis.coverage import coverage_findings
+
+        findings.extend(coverage_findings())
+
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    print(f"repro-lint: {n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0

@@ -1,0 +1,356 @@
+"""AST rule classes for the repro invariant linter.
+
+Each rule is path-scoped: ``applies(path)`` decides whether a file is in
+scope (paths are repo-relative posix strings, matched by suffix so the
+linter works from any checkout root and on fixture files linted under a
+virtual path), and ``check(tree, path, src)`` yields findings.  Rule
+semantics are documented in the ``repro.analysis`` package docstring.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding, formatted as ``path:line:col: RXXX message``."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        out = f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def _endswith(path: str, suffixes: Iterable[str]) -> bool:
+    p = _norm(path)
+    return any(p.endswith(s) for s in suffixes)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Reconstruct a dotted name from Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Rule:
+    rule_id: str = ""
+    title: str = ""
+    hint: str = ""
+
+    def applies(self, path: str) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def check(
+        self, tree: ast.AST, path: str, src: str
+    ) -> Iterator[Finding]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=self.rule_id,
+            path=_norm(path),
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message,
+            hint=self.hint,
+        )
+
+
+class R001DirectTpuImport(Rule):
+    """No ``jax.experimental.pallas.tpu`` / ``TPU*`` imports outside compat."""
+
+    rule_id = "R001"
+    title = "no-direct-tpu-import"
+    hint = (
+        "import `repro.kernels.pallas_compat as plc` and use plc.VMEM / "
+        "plc.CompilerParams / plc.MemorySpace — pallas_compat.py is the "
+        "only module allowed to touch jax.experimental.pallas.tpu"
+    )
+
+    EXEMPT = ("repro/kernels/pallas_compat.py",)
+    TPU_MOD = "jax.experimental.pallas.tpu"
+
+    def applies(self, path: str) -> bool:
+        return _norm(path).endswith(".py") and not _endswith(path, self.EXEMPT)
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith(self.TPU_MOD):
+                        yield self.finding(
+                            path, node, f"direct import of {alias.name}"
+                        )
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith(self.TPU_MOD):
+                    yield self.finding(
+                        path, node, f"direct import from {mod}"
+                    )
+                elif mod == "jax.experimental.pallas":
+                    for alias in node.names:
+                        if alias.name == "tpu" or alias.name.startswith("TPU"):
+                            yield self.finding(
+                                path,
+                                node,
+                                f"direct import of pallas.{alias.name}",
+                            )
+
+
+class _ScopedCallVisitor(ast.NodeVisitor):
+    """Tracks the enclosing-function-name stack while visiting calls."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+        self.calls: List[Tuple[ast.Call, Tuple[str, ...]]] = []
+
+    def _visit_fn(self, node) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.calls.append((node, tuple(self.stack)))
+        self.generic_visit(node)
+
+
+class R002ImplicitHostSync(Rule):
+    """No implicit device→host syncs in scheduler / traced step paths."""
+
+    rule_id = "R002"
+    title = "no-implicit-host-sync"
+    hint = (
+        "keep step choice on the host mirror and batch device reads into "
+        "the sanctioned steps_per_sync harvest in ServingEngine.step; "
+        "inside traced code use jnp ops, never python scalar coercion"
+    )
+
+    # Functions (by name, at any nesting depth) that make up the
+    # host-mirror scheduler and the traced step paths.  The harvest
+    # allowlist marks the one function where explicit device reads are
+    # sanctioned — everything else flags them.
+    SCOPES = {
+        "repro/serving/engine.py": frozenset(
+            {
+                "engine_step",
+                "_sample",
+                "_step_n",
+                "_admit",
+                "_prefill_step",
+                "_refill",
+                "_advance_mirror",
+                "_chunk_limit",
+                "_prompt_phase_rows",
+                "_match_prefix",
+                "step",
+            }
+        ),
+        "repro/models/lm.py": frozenset(
+            {
+                "decode_step",
+                "prefill_chunk",
+                "_cache_index",
+                "_cache_update",
+                "_cache_update_chunk",
+                "_paged_cow",
+                "_paged_commit",
+                "_snap_capture",
+                "restore_snapshots",
+                "reset_decode_rows",
+            }
+        ),
+    }
+    HARVEST_ALLOW = frozenset({"step"})
+
+    SCALAR_COERCIONS = frozenset({"int", "float", "bool"})
+    NP_NAMES = frozenset({"np", "numpy", "onp"})
+    NP_SYNCS = frozenset({"asarray", "array"})
+    JAX_SYNCS = frozenset({"device_get", "block_until_ready"})
+
+    def _scope_for(self, path: str) -> Optional[frozenset]:
+        p = _norm(path)
+        for suffix, names in self.SCOPES.items():
+            if p.endswith(suffix):
+                return names
+        return None
+
+    def applies(self, path: str) -> bool:
+        return self._scope_for(path) is not None
+
+    def _classify(self, call: ast.Call) -> Optional[str]:
+        """Return a description if the call is a host sync, else None."""
+        fn = call.func
+        if isinstance(fn, ast.Attribute):
+            if fn.attr == "item":
+                return ".item() forces a device->host sync"
+            base = _dotted(fn.value)
+            if base in self.NP_NAMES and fn.attr in self.NP_SYNCS:
+                return f"{base}.{fn.attr}() on a device array syncs to host"
+            if base == "jax" and fn.attr in self.JAX_SYNCS:
+                return f"jax.{fn.attr}() outside the sanctioned harvest"
+        elif isinstance(fn, ast.Name) and fn.id in self.SCALAR_COERCIONS:
+            if call.args and not isinstance(call.args[0], ast.Constant):
+                return (
+                    f"{fn.id}() on a traced/device value forces a host sync"
+                )
+        return None
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        scope = self._scope_for(path)
+        assert scope is not None
+        visitor = _ScopedCallVisitor()
+        visitor.visit(tree)
+        for call, stack in visitor.calls:
+            if not any(name in scope for name in stack):
+                continue
+            if any(name in self.HARVEST_ALLOW for name in stack):
+                continue
+            desc = self._classify(call)
+            if desc is not None:
+                yield self.finding(path, call, desc)
+
+
+class R003JitMustDonate(Rule):
+    """``jax.jit`` in serving/ must declare donate_argnums."""
+
+    rule_id = "R003"
+    title = "jit-must-donate"
+    hint = (
+        "pass donate_argnums=(...) (or donate_argnames) naming the state "
+        "pytree arguments so decode state is donated, not copied each step"
+    )
+
+    DONATE_KWS = frozenset({"donate_argnums", "donate_argnames"})
+
+    def applies(self, path: str) -> bool:
+        return "repro/serving/" in _norm(path) and path.endswith(".py")
+
+    def _is_jit(self, node: ast.AST) -> bool:
+        return _dotted(node) in ("jax.jit", "jit")
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and self._is_jit(node.func):
+                kws = {kw.arg for kw in node.keywords}
+                if not kws & self.DONATE_KWS:
+                    yield self.finding(
+                        path, node, "jax.jit call without donate_argnums"
+                    )
+            elif isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                for dec in node.decorator_list:
+                    if not isinstance(dec, ast.Call) and self._is_jit(dec):
+                        yield self.finding(
+                            path,
+                            dec,
+                            "bare @jax.jit decorator without donate_argnums",
+                        )
+
+
+class R004NoProcessWideBackend(Rule):
+    """Library code must not call process-wide ``set_default_backend``."""
+
+    rule_id = "R004"
+    title = "no-process-wide-backend"
+    hint = (
+        "use the scoped `with use_backend(...):` stack — "
+        "set_default_backend mutates process-wide state and leaks across "
+        "serving worker threads; it is for application entry points only"
+    )
+
+    # The definition site (and its package re-export) are not calls, so
+    # they pass naturally; no file exemption needed.
+    def applies(self, path: str) -> bool:
+        p = _norm(path)
+        return "repro/" in p and p.endswith(".py") and "tests/" not in p
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else (
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            )
+            if name == "set_default_backend":
+                yield self.finding(
+                    path, node, "set_default_backend() call in library code"
+                )
+
+
+class R005SsdStateStaysF32(Rule):
+    """Carried SSD-scan state must not be cast below float32."""
+
+    rule_id = "R005"
+    title = "ssd-state-stays-f32"
+    hint = (
+        "carry scan state as jnp.float32 end to end — a lower-precision "
+        "cast compounds across chunks; if the value is not scan state, "
+        "rename it so it does not look like one"
+    )
+
+    FILES = ("repro/kernels/mamba_scan.py", "repro/models/components.py")
+    STATE_RE = re.compile(r"\b(ssm_state|state|h0|hf)\w*")
+    F32_NAMES = frozenset({"jnp.float32", "np.float32", "float32"})
+
+    def applies(self, path: str) -> bool:
+        return _endswith(path, self.FILES)
+
+    def _is_f32(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant) and node.value == "float32":
+            return True
+        return _dotted(node) in self.F32_NAMES
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+                and node.args
+            ):
+                continue
+            target = ast.get_source_segment(src, node.func.value) or ""
+            if not self.STATE_RE.search(target):
+                continue
+            if not self._is_f32(node.args[0]):
+                cast = ast.get_source_segment(src, node.args[0]) or "?"
+                yield self.finding(
+                    path,
+                    node,
+                    f"scan state `{target}` cast to {cast} (must stay f32)",
+                )
+
+
+ALL_RULES: Tuple[Rule, ...] = (
+    R001DirectTpuImport(),
+    R002ImplicitHostSync(),
+    R003JitMustDonate(),
+    R004NoProcessWideBackend(),
+    R005SsdStateStaysF32(),
+)

@@ -19,7 +19,7 @@ look up at trace time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.policy import Backend, current_backend
 
@@ -30,6 +30,14 @@ class OpEntry:
     reference: Callable[..., Any]
     pallas: Optional[Callable[..., Any]] = None
     doc: str = ""
+    # Coverage-lint declarations (repro.analysis.coverage).  ``tuning``
+    # names the tuning-table keys the Pallas lowering resolves via
+    # ``get_tuning`` — ``()`` declares "no tunable parameters", ``None``
+    # means undeclared (a C102 finding for ops with a lowering).
+    # ``reference_only=True`` records that the op intentionally has no
+    # Pallas lowering (silences C101).
+    tuning: Optional[Tuple[str, ...]] = None
+    reference_only: bool = False
 
     def resolve(self, backend: Backend) -> Callable[..., Any]:
         if backend is Backend.PALLAS and self.pallas is not None:
@@ -47,10 +55,27 @@ def register_op(
     reference: Callable[..., Any],
     pallas: Optional[Callable[..., Any]] = None,
     doc: str = "",
+    tuning: Optional[str | Sequence[str]] = None,
+    reference_only: bool = False,
 ) -> OpEntry:
     if name in _OPS:
         raise ValueError(f"op {name!r} already registered")
-    entry = OpEntry(name=name, reference=reference, pallas=pallas, doc=doc)
+    if reference_only and pallas is not None:
+        raise ValueError(
+            f"op {name!r}: reference_only=True with a pallas lowering"
+        )
+    if isinstance(tuning, str):
+        tuning = (tuning,)
+    elif tuning is not None:
+        tuning = tuple(tuning)
+    entry = OpEntry(
+        name=name,
+        reference=reference,
+        pallas=pallas,
+        doc=doc,
+        tuning=tuning,
+        reference_only=reference_only,
+    )
     _OPS[name] = entry
     return entry
 

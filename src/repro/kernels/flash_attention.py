@@ -38,7 +38,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import pallas_compat as plc
 
@@ -162,9 +161,9 @@ def flash_attention_pallas(
             jax.ShapeDtypeStruct(qt.shape[:3], jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
+            plc.VMEM((bq, d), jnp.float32),
+            plc.VMEM((bq, 1), jnp.float32),
+            plc.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
@@ -303,7 +302,7 @@ def flash_attention_bwd_pallas(
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
-        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        scratch_shapes=[plc.VMEM((bq, d), jnp.float32)],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
@@ -344,8 +343,8 @@ def flash_attention_bwd_pallas(
             jax.ShapeDtypeStruct(vt.shape, v.dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bk, d), jnp.float32),
-            pltpu.VMEM((bk, d), jnp.float32),
+            plc.VMEM((bk, d), jnp.float32),
+            plc.VMEM((bk, d), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
@@ -476,9 +475,9 @@ def flash_decode_pallas(
         out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            plc.VMEM((g, d), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
@@ -561,7 +560,7 @@ def flash_decode_paged_pallas(
     def kv_ix(b_, h, j, lens_ref, bt_ref):
         return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = plc.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                    # lens, block table
         grid=(b, hkv, n_b),
         in_specs=[
@@ -571,9 +570,9 @@ def flash_decode_paged_pallas(
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, d), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            plc.VMEM((g, d), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(
@@ -709,9 +708,9 @@ def flash_prefill_chunk_pallas(
         out_specs=pl.BlockSpec((1, 1, g * c, d), lambda b_, h, j: (b_, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g * c, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((g * c, d), jnp.float32),
-            pltpu.VMEM((g * c, 1), jnp.float32),
-            pltpu.VMEM((g * c, 1), jnp.float32),
+            plc.VMEM((g * c, d), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
@@ -800,7 +799,7 @@ def flash_prefill_chunk_paged_pallas(
     def kv_ix(b_, h, j, starts_ref, w_ref, bt_ref):
         return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = plc.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                    # starts, widths, table
         grid=(b, hkv, n_b),
         in_specs=[
@@ -812,9 +811,9 @@ def flash_prefill_chunk_paged_pallas(
             (1, 1, g * c, d), lambda b_, h, j, *_: (b_, h, 0, 0)
         ),
         scratch_shapes=[
-            pltpu.VMEM((g * c, d), jnp.float32),
-            pltpu.VMEM((g * c, 1), jnp.float32),
-            pltpu.VMEM((g * c, 1), jnp.float32),
+            plc.VMEM((g * c, d), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(

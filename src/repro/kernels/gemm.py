@@ -16,7 +16,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import pallas_compat as plc
 
@@ -79,7 +78,7 @@ def gemm_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[plc.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")

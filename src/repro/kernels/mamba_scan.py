@@ -22,7 +22,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import pallas_compat as plc
 
@@ -70,7 +69,7 @@ def _ssd_kernel(
 
     @pl.when(ic == n_c - 1)
     def _done():
-        hf_ref[0, 0] = state_ref[...].astype(hf_ref.dtype)
+        hf_ref[0, 0] = state_ref[...].astype(jnp.float32)
 
 
 @functools.partial(
@@ -137,7 +136,7 @@ def ssd_scan_pallas(
             jax.ShapeDtypeStruct((b, sp, h, p), x.dtype),
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        scratch_shapes=[plc.VMEM((p, n), jnp.float32)],
         interpret=interpret,
         compiler_params=plc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")

@@ -690,52 +690,60 @@ def ssd_prefill_chunk(
 # ---------------------------------------------------------------------------
 
 register_op("matmul", reference=ref.gemm, pallas=gemm_pallas,
-            doc="MXU-tiled GEMM")
+            doc="MXU-tiled GEMM", tuning="gemm")
 register_op("bias_add_rows", reference=ref.bias_add_rows,
-            pallas=bias_add_rows_pallas, doc="matrixPlusVectorRows functor")
+            pallas=bias_add_rows_pallas, doc="matrixPlusVectorRows functor",
+            tuning="bias_add")
 register_op("relu", reference=ref.relu, pallas=relu_pallas,
-            doc="leaky-capable ReLU")
+            doc="leaky-capable ReLU", tuning="relu")
 register_op("im2col", reference=ref.im2col, pallas=im2col_pallas,
-            doc="merged penta-loop im2col")
+            doc="merged penta-loop im2col", tuning=())
 register_op("col2im", reference=ref.col2im, pallas=col2im_pallas,
-            doc="gather-form col2im (stride=1)")
+            doc="gather-form col2im (stride=1)", tuning=())
 register_op("conv2d", reference=ref.conv2d, pallas=_conv2d_fwd_impl,
-            doc="im2col+GEMM convolution")
+            doc="im2col+GEMM convolution", tuning="gemm")
 from repro.kernels.conv_direct import conv2d_direct_pallas  # noqa: E402
 register_op("conv2d_direct", reference=ref.conv2d,
             pallas=conv2d_direct_pallas,
-            doc="fused direct conv (implicit GEMM; beyond-paper)")
+            doc="fused direct conv (implicit GEMM; beyond-paper)",
+            tuning="conv_direct")
 register_op("maxpool", reference=ref.maxpool, pallas=maxpool_pallas,
-            doc="argmax-tracking maxpool")
+            doc="argmax-tracking maxpool", tuning=())
 register_op("avgpool", reference=ref.avgpool, pallas=None,
-            doc="average pool (reference only)")
+            doc="average pool (reference only)", reference_only=True)
 register_op("softmax", reference=ref.softmax, pallas=softmax_pallas,
-            doc="row softmax")
+            doc="row softmax", tuning="softmax")
 register_op("softmax_xent", reference=ref.softmax_xent,
-            pallas=softmax_xent_pallas, doc="fused softmax+NLL")
+            pallas=softmax_xent_pallas, doc="fused softmax+NLL",
+            tuning="softmax_xent")
 register_op("accuracy", reference=ref.accuracy, pallas=None,
-            doc="top-k accuracy (reference only)")
+            doc="top-k accuracy (reference only)", reference_only=True)
 register_op("rmsnorm", reference=ref.rmsnorm, pallas=rmsnorm_pallas,
-            doc="fused RMSNorm")
+            doc="fused RMSNorm", tuning="rmsnorm")
 register_op("layernorm", reference=ref.layernorm, pallas=None,
-            doc="LayerNorm (reference only)")
+            doc="LayerNorm (reference only)", reference_only=True)
 register_op("attention", reference=ref.mha_attention,
-            pallas=flash_attention_pallas, doc="GQA flash attention")
+            pallas=flash_attention_pallas, doc="GQA flash attention",
+            tuning="flash_attention")
 register_op("attention_decode", reference=ref.mha_attention,
-            pallas=flash_decode_pallas, doc="KV-cache decode attention")
+            pallas=flash_decode_pallas, doc="KV-cache decode attention",
+            tuning="flash_decode")
 register_op("attention_decode_paged", reference=_attention_decode_paged_ref,
             pallas=flash_decode_paged_pallas,
-            doc="block-table paged decode attention")
+            doc="block-table paged decode attention", tuning=())
 register_op("attention_prefill_chunk", reference=_attention_prefill_chunk_ref,
             pallas=flash_prefill_chunk_pallas,
-            doc="chunked-prefill attention (C-token query block vs cache)")
+            doc="chunked-prefill attention (C-token query block vs cache)",
+            tuning="flash_prefill")
 register_op("attention_prefill_chunk_paged",
             reference=_attention_prefill_chunk_paged_ref,
             pallas=flash_prefill_chunk_paged_pallas,
-            doc="block-table paged chunked-prefill attention")
+            doc="block-table paged chunked-prefill attention", tuning=())
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
-            doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)")
+            doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)",
+            tuning="ssd_scan")
 register_op("ssd_prefill_chunk", reference=ref.ssd_scan,
             pallas=ssd_scan_pallas,
             doc="chunked-SSD serving scan (C-token chunk vs carried state; "
-                "decode is the C=1 case)")
+                "decode is the C=1 case)",
+            tuning="ssd_prefill_chunk")

@@ -5,10 +5,22 @@ JAX renamed ``TPUCompilerParams`` -> ``CompilerParams`` and
 names from here so the same source compiles against either side of the
 rename — the library-level analogue of the paper's single-source property
 (the kernel text does not change when the toolchain does).
+
+This module is the *only* place in the library allowed to import
+``jax.experimental.pallas.tpu`` — lint rule R001 (``repro.analysis``)
+enforces that every other module routes through these aliases.
 """
 from __future__ import annotations
 
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # repro-lint: disable=R001
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+# Scratch-shape constructor for VMEM buffers: ``plc.VMEM((m, n), dtype)``.
+VMEM = MemorySpace.VMEM
+SMEM = MemorySpace.SMEM
+
+# Grid spec with scalar prefetch (decode kernels' page tables); name has
+# been stable but route it here so kernels never touch pltpu directly.
+PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec

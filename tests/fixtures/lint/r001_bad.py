@@ -1,0 +1,14 @@
+"""Known-bad R001 fixture: the pre-fix ``flash_attention.py`` header —
+the seeded violation this PR removed, preserved so the rule provably
+catches it.  Linted under the virtual path
+``src/repro/kernels/flash_attention.py``."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl  # noqa: F401 - allowed
+from jax.experimental.pallas import tpu as pltpu  # R001 fires here
+
+
+def scratch_shapes(bq, d):
+    return [
+        pltpu.VMEM((bq, d), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+    ]

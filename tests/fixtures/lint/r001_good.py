@@ -1,0 +1,12 @@
+"""Known-good R001 fixture: the post-fix header — tpu-namespace symbols
+routed through ``pallas_compat``."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl  # noqa: F401 - allowed
+from repro.kernels import pallas_compat as plc
+
+
+def scratch_shapes(bq, d):
+    return [
+        plc.VMEM((bq, d), jnp.float32),
+        plc.VMEM((bq, 1), jnp.float32),
+    ]

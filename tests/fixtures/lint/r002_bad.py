@@ -1,0 +1,18 @@
+"""Known-bad R002 fixture: implicit host syncs in scheduler / step-path
+functions.  Linted under the virtual path ``src/repro/serving/engine.py``."""
+import numpy as np
+
+
+def _chunk_limit(mstate):
+    budget = mstate["budget"]
+    return int(budget)  # R002: int() on a device value
+
+
+def engine_step(state, toks):
+    flag = state["halt"].item()  # R002: .item()
+    mirror = np.asarray(state["active"])  # R002: np.asarray on device array
+    return flag, mirror
+
+
+def outside_scope(x):
+    return int(x)  # not a scoped function: no finding here

@@ -1,0 +1,19 @@
+"""Known-good R002 fixture: step choice stays on the device / host
+mirror, and the one sanctioned sync lives in the ``step`` harvest."""
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_limit(mstate):
+    return jnp.minimum(mstate["budget"], 8)
+
+
+def engine_step(state, toks):
+    halt = jnp.where(state["halt"], 0, toks)
+    return halt, state
+
+
+def step(fetch):
+    # the steps_per_sync harvest: explicit, batched, allowlisted
+    got = list(jax.device_get(tuple(fetch)))
+    return int(got[0])

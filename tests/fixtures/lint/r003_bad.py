@@ -1,0 +1,12 @@
+"""Known-bad R003 fixture: ``jax.jit`` in serving/ without donation.
+Linted under the virtual path ``src/repro/serving/engine.py``."""
+import jax
+
+
+def build(step_fn):
+    return jax.jit(step_fn)  # R003: no donate_argnums
+
+
+@jax.jit  # R003: bare decorator cannot donate
+def decorated(state):
+    return state

@@ -1,0 +1,10 @@
+"""Known-good R003 fixture: every serving jit site donates its state."""
+import jax
+
+
+def build(step_fn):
+    return jax.jit(step_fn, donate_argnums=(1, 2))
+
+
+def build_named(step_fn):
+    return jax.jit(step_fn, donate_argnames=("state",))

@@ -1,0 +1,7 @@
+"""Known-bad R004 fixture: library code mutating the process-wide
+backend.  Linted under the virtual path ``src/repro/serving/worker.py``."""
+from repro.core import set_default_backend
+
+
+def setup_worker():
+    set_default_backend("pallas")  # R004: leaks across worker threads

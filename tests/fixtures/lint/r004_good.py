@@ -1,0 +1,7 @@
+"""Known-good R004 fixture: the scoped, thread-local backend stack."""
+from repro.core import use_backend
+
+
+def run_scoped(fn):
+    with use_backend("pallas"):
+        return fn()

@@ -1,0 +1,11 @@
+"""Known-bad R005 fixture: SSD scan state cast below f32.  Linted under
+the virtual path ``src/repro/kernels/mamba_scan.py``."""
+import jax.numpy as jnp
+
+
+def finalize(hf_ref, state_ref):
+    hf_ref[0, 0] = state_ref[...].astype(jnp.bfloat16)  # R005
+
+
+def carry(ssm_state, out_dtype):
+    return ssm_state.astype(out_dtype)  # R005: non-f32 target dtype

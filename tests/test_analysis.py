@@ -1,0 +1,227 @@
+"""Tests for ``repro.analysis``: every rule fires on its known-bad fixture
+exactly where expected (and nowhere on the known-good twin), suppression
+comments work, the clean tree reports zero findings, the coverage lint
+catches half-wired ops, and the runtime auditors hold over a real mixed
+prefill/decode/admission workload."""
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    JitCacheRetrace,
+    coverage_findings,
+    jit_cache_audit,
+    lint_paths,
+    lint_source,
+    no_transfer_audit,
+)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+REPO = Path(__file__).resolve().parents[1]
+
+# fixture stem -> (virtual path it is linted under, expected (rule, line))
+CASES = {
+    "r001": (
+        "src/repro/kernels/flash_attention.py",
+        [("R001", 7)],
+    ),
+    "r002": (
+        "src/repro/serving/engine.py",
+        [("R002", 8), ("R002", 12), ("R002", 13)],
+    ),
+    "r003": (
+        "src/repro/serving/engine.py",
+        [("R003", 7), ("R003", 10)],
+    ),
+    "r004": (
+        "src/repro/serving/worker.py",
+        [("R004", 7)],
+    ),
+    "r005": (
+        "src/repro/kernels/mamba_scan.py",
+        [("R005", 7), ("R005", 11)],
+    ),
+}
+
+
+def _lint_fixture(name: str, vpath: str):
+    src = (FIXTURES / f"{name}.py").read_text()
+    return src, lint_source(src, vpath)
+
+
+@pytest.mark.parametrize("stem", sorted(CASES))
+def test_rule_fires_on_bad_fixture(stem):
+    """Each bad fixture produces exactly the expected (rule, line) set —
+    all rules run, so cross-rule false positives fail the test too."""
+    vpath, want = CASES[stem]
+    _, findings = _lint_fixture(f"{stem}_bad", vpath)
+    assert [(f.rule, f.line) for f in findings] == want
+    for f in findings:
+        assert f.path == vpath and f.hint  # every rule ships a fix-hint
+
+
+@pytest.mark.parametrize("stem", sorted(CASES))
+def test_good_fixture_is_clean(stem):
+    vpath, _ = CASES[stem]
+    _, findings = _lint_fixture(f"{stem}_good", vpath)
+    assert findings == []
+
+
+@pytest.mark.parametrize("stem", sorted(CASES))
+def test_suppression_comment_silences_rule(stem):
+    """Appending `# repro-lint: disable=RXXX` to each flagged line makes
+    the bad fixture lint clean."""
+    vpath, want = CASES[stem]
+    src, findings = _lint_fixture(f"{stem}_bad", vpath)
+    assert findings  # precondition
+    lines = src.splitlines()
+    for rule, line in want:
+        lines[line - 1] += f"  # repro-lint: disable={rule}"
+    assert lint_source("\n".join(lines), vpath) == []
+
+
+def test_suppression_on_preceding_comment_line():
+    src = (
+        "# repro-lint: disable=R001\n"
+        "from jax.experimental.pallas import tpu as pltpu\n"
+    )
+    assert lint_source(src, "src/repro/kernels/foo.py") == []
+    # disabling a different rule does not silence R001
+    src2 = src.replace("R001", "R003")
+    assert [f.rule for f in lint_source(src2, "src/repro/kernels/foo.py")] == [
+        "R001"
+    ]
+
+
+def test_seeded_violation_is_fixed_in_tree():
+    """The day-one R001 violation: the fixture reproducing the pre-fix
+    flash_attention header is caught; the in-tree file is clean."""
+    _, findings = _lint_fixture("r001_bad", "src/repro/kernels/flash_attention.py")
+    assert [f.rule for f in findings] == ["R001"]
+    real = REPO / "src/repro/kernels/flash_attention.py"
+    assert "pallas.tpu" not in real.read_text().replace("\n", "")
+    assert (
+        lint_source(real.read_text(), "src/repro/kernels/flash_attention.py")
+        == []
+    )
+
+
+def test_clean_tree_has_zero_findings():
+    findings = lint_paths([REPO / "src" / "repro"], root=REPO)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_main_clean_tree(capsys):
+    from repro.analysis.lint import main
+
+    assert main(["--no-coverage"]) == 0
+    assert "0 findings" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Coverage lint (C101-C103)
+# ---------------------------------------------------------------------------
+
+
+def test_coverage_lint_clean_registry():
+    assert coverage_findings() == []
+
+
+def test_coverage_lint_catches_half_wired_ops():
+    from repro.core import registry
+
+    def fake(*args):  # pragma: no cover - never called
+        raise NotImplementedError
+
+    names = ("_lint_nopallas", "_lint_untuned", "_lint_stale")
+    registry.register_op(names[0], reference=fake)
+    registry.register_op(names[1], reference=fake, pallas=fake, tuning=None)
+    registry.register_op(
+        names[2], reference=fake, pallas=fake, tuning="no_such_tuning_key"
+    )
+    try:
+        got = {
+            f.rule for f in coverage_findings() if "_lint_" in f.message
+        }
+        assert got == {"C101", "C102", "C103"}
+    finally:
+        for n in names:
+            registry._OPS.pop(n, None)
+
+
+def test_register_op_rejects_contradictory_declaration():
+    from repro.core import registry
+
+    with pytest.raises(ValueError):
+        registry.register_op(
+            "_lint_bogus", reference=lambda: None, pallas=lambda: None,
+            reference_only=True,
+        )
+    assert "_lint_bogus" not in registry._OPS
+
+
+# ---------------------------------------------------------------------------
+# Runtime auditors
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_arch("qwen2.5-3b").reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(
+        model, params, batch=2, max_len=16, steps_per_sync=3, **kw
+    )
+
+
+def test_jit_cache_audit_mixed_workload():
+    """5 heterogeneous requests through 2 slots (chunked prefill, decode,
+    mid-stream admission, paged release): every jitted entry point must
+    hold at cache size 1, with no implicit sync between harvests."""
+    cfg, eng = _engine(layout="paged", page_size=4, prefill_chunk=4)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        toks = rng.integers(
+            0, cfg.vocab_size, size=int(rng.integers(2, 8))
+        ).tolist()
+        eng.submit(toks, 3)
+    with jit_cache_audit(eng) as report, no_transfer_audit():
+        eng.run()
+    assert report.calls["_step_n"] > 0 and report.calls["_prefill"] > 0
+    for name in ("_step_n", "_admit", "_prefill"):
+        # cache size stays 1: exactly one compilation, never a retrace
+        assert report.max_sizes[name] == 1, report
+        assert report.growth(name) == 1, report
+    # wrappers restored on exit
+    assert hasattr(eng._step_n, "_cache_size")
+
+
+def test_jit_cache_audit_catches_retrace():
+    class Holder:
+        pass
+
+    h = Holder()
+    h._step_n = jax.jit(lambda x: x * 2)
+    orig = h._step_n
+    with pytest.raises(JitCacheRetrace, match="_step_n retraced"):
+        with jit_cache_audit(h, fn_names=("_step_n",)):
+            h._step_n(jnp.ones((2,)))
+            h._step_n(jnp.ones((3,)))  # shape change -> second trace
+    assert h._step_n is orig  # restored even on failure
+
+
+def test_no_transfer_audit_blocks_implicit_sync():
+    x = jnp.arange(4)
+    with no_transfer_audit():
+        got = jax.device_get(x)  # explicit harvest: allowed
+        assert got.tolist() == [0, 1, 2, 3]
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            int(x[0])  # implicit device->host sync: blocked

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.audit import no_transfer_audit
 from repro.core import Backend, use_backend
 from repro.core.policy import current_backend, set_default_backend
 from repro.configs.registry import get_arch
@@ -71,7 +72,10 @@ def test_continuous_batching_matches_isolated_decode(arch, backend):
         eng = ServingEngine(model, params, batch=2, max_len=max_len,
                             steps_per_sync=3)
         rids = [eng.submit(t, g) for t, g in reqs]
-        outs = eng.run()
+        # the step loop must not sync device->host outside the sanctioned
+        # steps_per_sync harvest — R002's claim, asserted at runtime
+        with no_transfer_audit():
+            outs = eng.run()
         for (toks, g), rid in zip(reqs, rids):
             want = _isolated_decode(model, params, toks, g, max_len)
             np.testing.assert_array_equal(outs[rid], want)
@@ -117,7 +121,8 @@ def test_paged_decode_matches_contiguous(arch, backend):
             eng = ServingEngine(model, params, batch=2, max_len=16,
                                 steps_per_sync=3, layout=layout, **kw)
             rids = [eng.submit(t, g) for t, g in reqs]
-            got = eng.run()
+            with no_transfer_audit():
+                got = eng.run()
             outs[layout] = [got[r].tolist() for r in rids]
             assert eng._step_n._cache_size() == 1
             assert eng._admit._cache_size() == 1
