@@ -1,0 +1,383 @@
+"""Perf snapshot + trajectory check — ``BENCH_<n>.json`` emission.
+
+One command captures the serving stack's headline numbers and the per-op
+tuned-vs-default picture into a committed artifact, so the perf
+trajectory of the repo is a reviewable file series instead of folklore:
+
+    PYTHONPATH=src python -m benchmarks.perf_snapshot            # emit next
+    PYTHONPATH=src python -m benchmarks.perf_snapshot --check    # regress?
+
+Each ``benchmarks/trajectory/BENCH_%04d.json`` carries:
+
+* ``serving`` — per family cell (the same smoke workloads as
+  ``ci.sh --smoke``, run via ``benchmarks.serve_engine --json`` under
+  ``--audit`` so a retracing driver fails instead of reporting bogus
+  numbers): generated tok/s, prefill tok/s, mean and p99 TTFT ms, peak
+  resident KV bytes (the paged pool from the layout ablation when the
+  arch has one).
+* ``ops`` — for every autotuned shape case (``repro.tuning.autotune``
+  drives the same cells the sweep used): wall ms with the committed
+  tuning table vs the hand-set call-site defaults, the resulting
+  speedup, and the op's roofline fraction computed from the *reference*
+  lowering's optimized HLO via ``repro.roofline.analysis`` (the
+  interpret-mode Pallas HLO is an emulation artifact; the reference HLO
+  is the stable arithmetic footprint).
+
+``--check`` re-measures and compares against the newest committed
+BENCH file with per-metric-family tolerances: timing metrics get a
+generous relative band (machines differ; the default catches only
+collapse-grade regressions), resident-KV bytes must match exactly and
+roofline fractions almost exactly (both deterministic given the code).
+``ci.sh --bench-check`` wires this into CI.
+
+The backend is pinned with the scoped ``use_backend("pallas")`` (R004)
+— never ``set_default_backend``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+SCHEMA_VERSION = 1
+
+TRAJECTORY_DIR = Path(__file__).resolve().parent / "trajectory"
+
+#: timing metrics: relative regression band (0.5 = fail below 50% of the
+#: committed throughput / above 2x the committed latency)
+REL_TOL = 0.5
+#: roofline fractions are deterministic given the op's HLO
+ROOFLINE_ATOL = 0.05
+
+_LOWER_IS_BETTER = ("ttft", "_ms",)
+
+
+def _log(msg: str) -> None:
+    print(msg, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Serving cells (benchmarks.serve_engine --json)
+# ---------------------------------------------------------------------------
+
+_SERVING_CELLS = {
+    # default smoke arch (ssm family) — mirrors `ci.sh --smoke`
+    "default": [],
+    # recurrent+attention family: chunked SSD prefill, snapshot sharing
+    "hybrid": ["--family", "hybrid"],
+}
+
+
+def _serving_metrics(doc: Dict[str, Any]) -> Dict[str, float]:
+    eng = doc["engine"]
+    out = {"tok_s": eng["tok_s"], "kv_bytes": eng["kv_bytes"]}
+    layouts = doc.get("layouts") or {}
+    if layouts.get("paged"):
+        out["kv_bytes"] = layouts["paged"]["kv_bytes"]
+    prefill = doc.get("prefill") or {}
+    chunked = {k: v for k, v in prefill.items() if not k.endswith(":1")}
+    for pick in ("paged", "contiguous"):
+        row = next((v for k, v in sorted(chunked.items())
+                    if k.startswith(pick + ":")), None)
+        if row is not None:
+            out.update(prefill_tok_s=row["prefill_tok_s"],
+                       ttft_ms=row["ttft_ms"],
+                       ttft_ms_p99=row["ttft_ms_p99"])
+            break
+    return out
+
+
+def run_serving(log=_log) -> Dict[str, Dict[str, float]]:
+    from benchmarks import serve_engine
+    from repro.core.policy import use_backend
+
+    cells: Dict[str, Dict[str, float]] = {}
+    for name, extra in _SERVING_CELLS.items():
+        log(f"  serving cell {name!r} ...")
+        with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+            argv = ["--smoke", "--prefill-chunk", "8", "--audit",
+                    "--json", tmp.name] + extra
+            with use_backend("pallas"):
+                serve_engine.main(argv)
+            doc = json.loads(Path(tmp.name).read_text())
+        cells[name] = _serving_metrics(doc)
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Per-op cells (tuned vs hand-set defaults + roofline fraction)
+# ---------------------------------------------------------------------------
+
+def _roofline_fraction(ref_fn, ref_args, key: str, cls: str) -> float:
+    from repro.roofline.analysis import analyze
+
+    # arrays go in as jit *arguments*: closed-over constants would let
+    # XLA fold the whole op away and report zero flops
+    hlo = jax.jit(ref_fn).lower(*ref_args).compile().as_text()
+    r = analyze(key, cls, "host", 1, {}, hlo, model_flops=0.0)
+    return round(r.roofline_fraction, 4)
+
+
+def run_ops(
+    table_doc: Dict[str, Any],
+    *,
+    repeats: int = 3,
+    only: Optional[Sequence[str]] = None,
+    log=_log,
+) -> Dict[str, Dict[str, Any]]:
+    """Time every sweep shape case under table vs call-site defaults."""
+    from repro.analysis.coverage import collect_tuning_sites
+    from repro.core.policy import use_backend
+    from repro.core.registry import tuning_table
+    from repro.tuning.autotune import measure, shape_cases
+    from repro.tuning.shapes import shape_class
+
+    keys = sorted(collect_tuning_sites())
+    if only is not None:
+        keys = [k for k in keys if k in only]
+    out: Dict[str, Dict[str, Any]] = {}
+    for key in keys:
+        for case_name, dims, build in shape_cases(key, smoke=False):
+            cls = shape_class(**dims)
+            pallas_thunk, ref_fn, ref_args = build()
+            with use_backend("pallas"):
+                with tuning_table(None):
+                    default_ms = measure(pallas_thunk, repeats)
+                with tuning_table(table_doc):
+                    tuned_ms = measure(pallas_thunk, repeats)
+            cell = {
+                "case": case_name,
+                "shape_class": cls,
+                "default_ms": round(default_ms, 4),
+                "tuned_ms": round(tuned_ms, 4),
+                "speedup": round(default_ms / tuned_ms, 3),
+                "roofline_fraction": _roofline_fraction(
+                    ref_fn, ref_args, key, cls),
+            }
+            out[f"{key}[{cls}]"] = cell
+            log(f"  {key}[{cls}]: {default_ms:.2f} -> {tuned_ms:.2f} ms "
+                f"(x{cell['speedup']:.2f}, roofline "
+                f"{cell['roofline_fraction']:.3f})")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Snapshot document + trajectory
+# ---------------------------------------------------------------------------
+
+def snapshot(
+    *, repeats: int = 3, only: Optional[Sequence[str]] = None,
+    serving: bool = True, log=_log,
+) -> Dict[str, Any]:
+    from repro.tuning import table as tt
+
+    table_doc = tt.load(tt.resolved_path())
+    doc: Dict[str, Any] = {
+        "schema": SCHEMA_VERSION,
+        "environment": {
+            "jax": jax.__version__,
+            "device": jax.devices()[0].platform,
+            "repeats": repeats,
+        },
+        "tuning_entries": sum(
+            len(v) for v in table_doc.get("entries", {}).values()
+        ),
+        "serving": {},
+        "ops": {},
+    }
+    if serving:
+        log("serving cells:")
+        doc["serving"] = run_serving(log)
+    log("op cells (tuned vs defaults):")
+    doc["ops"] = run_ops(table_doc, repeats=repeats, only=only, log=log)
+    improved = [k for k, v in doc["ops"].items() if v["speedup"] > 1.05]
+    doc["improved_ops"] = sorted(improved)
+    return doc
+
+
+def bench_files(out_dir: Path = TRAJECTORY_DIR) -> List[Path]:
+    return sorted(out_dir.glob("BENCH_[0-9][0-9][0-9][0-9].json"))
+
+
+def next_path(out_dir: Path = TRAJECTORY_DIR) -> Path:
+    files = bench_files(out_dir)
+    n = int(files[-1].stem.split("_")[1]) + 1 if files else 1
+    return out_dir / f"BENCH_{n:04d}.json"
+
+
+def validate_bench(doc: Any) -> List[str]:
+    """Schema check for a BENCH document; returns errors (empty = ok)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != SCHEMA_VERSION:
+        errs.append(f"schema must be {SCHEMA_VERSION}")
+    serving = doc.get("serving")
+    if not isinstance(serving, dict):
+        errs.append("'serving' must be an object")
+    else:
+        for cell, metrics in serving.items():
+            if not isinstance(metrics, dict):
+                errs.append(f"serving[{cell!r}] must be an object")
+                continue
+            for fld in ("tok_s", "prefill_tok_s", "ttft_ms",
+                        "ttft_ms_p99", "kv_bytes"):
+                if not isinstance(metrics.get(fld), (int, float)):
+                    errs.append(f"serving[{cell!r}].{fld} must be a number")
+    ops = doc.get("ops")
+    if not isinstance(ops, dict):
+        errs.append("'ops' must be an object")
+    else:
+        for cell, m in ops.items():
+            if not isinstance(m, dict):
+                errs.append(f"ops[{cell!r}] must be an object")
+                continue
+            for fld in ("default_ms", "tuned_ms", "speedup",
+                        "roofline_fraction"):
+                if not isinstance(m.get(fld), (int, float)):
+                    errs.append(f"ops[{cell!r}].{fld} must be a number")
+    if not isinstance(doc.get("improved_ops"), list):
+        errs.append("'improved_ops' must be a list")
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Trajectory check
+# ---------------------------------------------------------------------------
+
+def _is_lower_better(metric: str) -> bool:
+    return any(t in metric for t in _LOWER_IS_BETTER)
+
+
+def compare(
+    old: Dict[str, Any], new: Dict[str, Any], *, rel_tol: float = REL_TOL,
+) -> List[str]:
+    """Regressions of ``new`` vs ``old``; empty list = trajectory holds.
+
+    Only cells present in both snapshots are compared (ops come and go as
+    kernels land); deterministic metrics are tight, timing metrics wide.
+    """
+    regressions: List[str] = []
+
+    def timing(where: str, metric: str, o: float, n: float) -> None:
+        if not (o > 0 and n > 0):     # NaN / zero: nothing to compare
+            return
+        if _is_lower_better(metric):
+            if n > o * (1.0 + rel_tol) / (1.0 - rel_tol):
+                regressions.append(
+                    f"{where}.{metric}: {n:.2f} vs committed {o:.2f} "
+                    f"(latency regression beyond rel_tol={rel_tol})"
+                )
+        elif n < o * (1.0 - rel_tol):
+            regressions.append(
+                f"{where}.{metric}: {n:.2f} vs committed {o:.2f} "
+                f"(throughput regression beyond rel_tol={rel_tol})"
+            )
+
+    for cell in sorted(set(old.get("serving", {})) & set(new.get("serving", {}))):
+        o, n = old["serving"][cell], new["serving"][cell]
+        for metric in ("tok_s", "prefill_tok_s", "ttft_ms", "ttft_ms_p99"):
+            if metric in o and metric in n:
+                timing(f"serving.{cell}", metric, o[metric], n[metric])
+        if o.get("kv_bytes") != n.get("kv_bytes"):
+            regressions.append(
+                f"serving.{cell}.kv_bytes: {n.get('kv_bytes')} vs committed "
+                f"{o.get('kv_bytes')} (resident KV is deterministic — this "
+                "is a real change, not noise)"
+            )
+
+    for cell in sorted(set(old.get("ops", {})) & set(new.get("ops", {}))):
+        o, n = old["ops"][cell], new["ops"][cell]
+        for metric in ("default_ms", "tuned_ms"):
+            # sub-0.1ms cells are timer-noise-dominated either way; a real
+            # collapse still trips because the *new* value leaves the floor
+            if o[metric] < 0.1 and n[metric] < 0.1:
+                continue
+            timing(f"ops.{cell}", metric, o[metric], n[metric])
+        if abs(o["roofline_fraction"] - n["roofline_fraction"]) \
+                > ROOFLINE_ATOL:
+            regressions.append(
+                f"ops.{cell}.roofline_fraction: {n['roofline_fraction']} vs "
+                f"committed {o['roofline_fraction']} (beyond "
+                f"{ROOFLINE_ATOL} — the op's arithmetic footprint changed)"
+            )
+        # where the committed snapshot shows the table helping, the tuned
+        # path must not lose to the hand-set defaults outright now.  Cells
+        # the sweep left at defaults hover around 1.0 by construction and
+        # are exempt — their "speedup" is two timings of identical code.
+        if o["speedup"] >= 1.0 and n["speedup"] < 1.0 - rel_tol:
+            regressions.append(
+                f"ops.{cell}.speedup: {n['speedup']} — the committed table "
+                "now slows this op down; re-run python -m "
+                "repro.tuning.autotune"
+            )
+    return regressions
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.perf_snapshot",
+        description="emit BENCH_<n>.json or check the perf trajectory",
+    )
+    ap.add_argument("--check", action="store_true",
+                    help="re-measure and compare against the newest "
+                         "committed BENCH file instead of emitting")
+    ap.add_argument("--out-dir", default=None,
+                    help="trajectory directory (default benchmarks/"
+                         "trajectory)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--keys", default=None,
+                    help="comma-separated tuning keys for the op section "
+                         "(default all)")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="skip the serving cells (op-only snapshot)")
+    ap.add_argument("--rel-tol", type=float, default=REL_TOL,
+                    help="relative band for timing metrics in --check")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out_dir) if args.out_dir else TRAJECTORY_DIR
+    only = args.keys.split(",") if args.keys else None
+
+    doc = snapshot(repeats=args.repeats, only=only,
+                   serving=not args.no_serving)
+    errs = validate_bench(doc)
+    if errs:
+        _log("snapshot failed schema validation: " + "; ".join(errs))
+        return 1
+
+    if args.check:
+        files = bench_files(out_dir)
+        if not files:
+            _log(f"no committed BENCH files under {out_dir}; emit one first")
+            return 1
+        committed = json.loads(files[-1].read_text())
+        errs = validate_bench(committed)
+        if errs:
+            _log(f"{files[-1].name} is invalid: " + "; ".join(errs))
+            return 1
+        regressions = compare(committed, doc, rel_tol=args.rel_tol)
+        if regressions:
+            _log(f"perf trajectory check FAILED vs {files[-1].name}:")
+            for r in regressions:
+                _log(f"  - {r}")
+            return 1
+        _log(f"perf trajectory holds vs {files[-1].name} "
+             f"({len(doc['ops'])} op cells, "
+             f"{len(doc['serving'])} serving cells)")
+        return 0
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = next_path(out_dir)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    _log(f"wrote {path} (improved ops: {len(doc['improved_ops'])})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -147,6 +147,8 @@ def run_engine(model, params, reqs, batch, max_len, steps_per_sync,
             "prefill_steps": eng.prefill_steps,
             "prefill_tok_s": eng.prompt_tokens / dt,
             "ttft_ms": 1e3 * float(np.mean(ttft)) if ttft else float("nan"),
+            "ttft_ms_p99": (1e3 * float(np.percentile(ttft, 99))
+                            if ttft else float("nan")),
             "kv_bytes": eng.kv_resident_bytes(peak=True),
             "outputs": {i: outs[r].tolist() for i, r in enumerate(rids)}}
 
@@ -400,6 +402,10 @@ def main(argv=None):
                     help="wrap every engine run in jit_cache_audit so an "
                          "accidental retrace fails loudly instead of "
                          "reporting bogus tok/s")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result dict as JSON (token lists "
+                         "dropped, tuple keys flattened) — the machine-"
+                         "readable feed for benchmarks/perf_snapshot.py")
     args = ap.parse_args(argv)
     if args.family:
         args.kv_arch = {
@@ -463,7 +469,32 @@ def main(argv=None):
         print()
         print("-- Prefix sharing: shared system prompt, CoW (paged) --")
         out["sharing"] = compare_prefix_sharing(args)
+    if args.json:
+        import json
+
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(_jsonable(out), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote {args.json}")
     return out
+
+
+def _jsonable(obj):
+    """Result dict -> JSON-safe: tuple keys flattened ("layout:chunk"),
+    per-request token lists dropped (the parity asserts already ran)."""
+    if isinstance(obj, dict):
+        return {
+            (":".join(map(str, k)) if isinstance(k, tuple) else str(k)):
+                _jsonable(v)
+            for k, v in obj.items() if k != "outputs"
+        }
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
 
 
 if __name__ == "__main__":

@@ -15,8 +15,16 @@
 #   ./scripts/ci.sh --matrix          the full smoke matrix locally:
 #                                     {reference,pallas} x {contiguous,paged}
 #   ./scripts/ci.sh --lint            invariant linter (R001-R005) + op
-#                                     coverage lint (repro.analysis);
-#                                     fails on any finding
+#                                     coverage lint (repro.analysis,
+#                                     incl. C104/C105 tuning-table
+#                                     staleness); fails on any finding
+#   ./scripts/ci.sh --bench-check     perf-trajectory check: re-measure
+#                                     the BENCH metrics (smoke-scale,
+#                                     audited engine runs) and compare
+#                                     against the newest committed
+#                                     benchmarks/trajectory/BENCH_*.json;
+#                                     fails on a regression beyond the
+#                                     per-metric-family tolerances
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -72,11 +80,16 @@ case "${1:-}" in
     # shares it); this adds the AST rules + the op coverage lint
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/lint.py
     ;;
+--bench-check)
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.perf_snapshot --check
+    ;;
 "")
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
     ;;
 *)
-    echo "usage: $0 [--smoke [contiguous|paged|both] | --matrix | --lint]" >&2
+    echo "usage: $0 [--smoke [contiguous|paged|both] | --matrix | --lint |" \
+         "--bench-check]" >&2
     exit 2
     ;;
 esac

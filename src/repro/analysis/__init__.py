@@ -49,7 +49,7 @@ R005  ssd-state-stays-f32
     Fix: keep the cast as ``jnp.float32`` (the kernel's out_shape already
     declares f32) or rename the value if it is genuinely not scan state.
 
-Coverage lint (C101–C103, run by the same entry points)
+Coverage lint (C101–C105, run by the same entry points)
 =======================================================
 
 C101  an op registered without a Pallas lowering must say so explicitly
@@ -60,6 +60,15 @@ C102  an op with a Pallas lowering must declare which tuning-table keys
       declares "no tunable parameters").
 C103  every declared tuning key must actually appear at a ``get_tuning``
       call site under ``src/repro/kernels`` — declarations can't go stale.
+C104  every entry in the persisted tuning table
+      (``src/repro/tuning/tuning_table.json``) must match a declared
+      tuning key of an op that still *has* a Pallas lowering — a table
+      entry whose op was deleted, renamed, or demoted to reference-only
+      fails the lint instead of silently feeding dead values.  Schema
+      violations in the table surface here too.
+C105  the parameters a table entry sets must be knobs some ``get_tuning``
+      call site still resolves (the sweep artifact can't outlive the
+      kernel's knob set).
 
 Suppression syntax
 ==================
@@ -85,14 +94,20 @@ from __future__ import annotations
 
 from repro.analysis.audit import JitCacheRetrace, jit_cache_audit, no_transfer_audit
 from repro.analysis.lint import Finding, lint_file, lint_paths, lint_source
-from repro.analysis.coverage import coverage_findings
+from repro.analysis.coverage import (
+    collect_tuning_sites,
+    coverage_findings,
+    table_findings,
+)
 from repro.analysis.rules import ALL_RULES
 
 __all__ = [
     "ALL_RULES",
     "Finding",
     "JitCacheRetrace",
+    "collect_tuning_sites",
     "coverage_findings",
+    "table_findings",
     "jit_cache_audit",
     "lint_file",
     "lint_paths",

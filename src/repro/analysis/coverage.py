@@ -1,62 +1,238 @@
-"""Op-registry coverage lint (C101–C103) — new kernels can't ship half-wired.
+"""Op-registry coverage lint (C101–C105) — new kernels can't ship half-wired.
 
-Cross-checks the op registry's declarations against the kernel sources:
+Cross-checks the op registry's declarations against the kernel sources
+and the persisted tuning table:
 
     C101  op without a Pallas lowering not declared ``reference_only``
     C102  op with a Pallas lowering but no declared tuning keys
     C103  declared tuning key never resolved by a ``get_tuning`` call
           site under ``src/repro/kernels`` (stale declaration)
+    C104  tuning-table entry for an unknown key, or for a key whose
+          declaring op(s) lost their Pallas lowering (stale table)
+    C105  tuning-table params name a knob no ``get_tuning`` call site
+          resolves anymore (stale sweep artifact)
 
 Tuning keys at call sites are collected by AST scan: the literal first
 argument of ``get_tuning(...)``, literal ``tuning_op=`` / ``op_name=``
 keyword arguments (kernels that thread the key through a helper), and
-literal defaults of parameters with those names.
+literal defaults of parameters with those names.  The same scan collects
+each key's *knobs* — the keyword arguments of the ``get_tuning`` call
+(``key=`` excluded) with their hand-set defaults, resolving a
+``knob=knob`` pass-through to the enclosing function parameter's literal
+default.  This is what makes the autotuner's sweep space derivable
+instead of hand-listed (``repro.tuning.autotune``).
 """
 from __future__ import annotations
 
 import ast
 from pathlib import Path
-from typing import List, Optional, Set
+from typing import Dict, List, Optional, Set
 
 from repro.analysis.rules import Finding
 
 _KEY_PARAMS = ("tuning_op", "op_name")
 
+#: knob-name -> hand-set default, per tuning key (None = default unknown)
+KnobMap = Dict[str, Dict[str, Optional[int]]]
 
-def _collect_tuning_keys(kernels_root: Path) -> Set[str]:
+
+def _literal_param_defaults(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Parameter name -> literal int default, for one function def."""
+    args = fn.args
+    params = args.posonlyargs + args.args
+    out: Dict[str, int] = {}
+    for a, dflt in zip(params[len(params) - len(args.defaults):],
+                       args.defaults):
+        if isinstance(dflt, ast.Constant) and isinstance(dflt.value, int) \
+                and not isinstance(dflt.value, bool):
+            out[a.arg] = dflt.value
+    for a, dflt in zip(args.kwonlyargs, args.kw_defaults):
+        if isinstance(dflt, ast.Constant) and isinstance(dflt.value, int) \
+                and not isinstance(dflt.value, bool):
+            out[a.arg] = dflt.value
+    return out
+
+
+def _call_name(node: ast.Call) -> Optional[str]:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _scan_file(tree: ast.AST, sites: KnobMap, keys: Set[str]) -> None:
+    """One file's contribution to ``sites``/``keys``.
+
+    ``get_tuning`` calls with a literal key attach their knobs to that
+    key; calls whose key is threaded through a variable (``tuning_op`` /
+    ``op_name``) attach to every key this *file* names via those params —
+    the helper-kernel pattern (eltwise, mamba_scan).
+    """
+    file_keys: Set[str] = set()
+    wildcard_knobs: Dict[str, Optional[int]] = {}
+
+    # (enclosing-function literal defaults, call) pairs; module level uses {}
+    contexts = [({}, n) for n in ast.iter_child_nodes(tree)
+                if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            contexts.append((_literal_param_defaults(node), node))
+
+    for params, scope in contexts:
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg in _KEY_PARAMS and isinstance(
+                    kw.value, ast.Constant
+                ) and isinstance(kw.value.value, str):
+                    keys.add(kw.value.value)
+                    file_keys.add(kw.value.value)
+            if _call_name(node) != "get_tuning":
+                continue
+            knobs: Dict[str, Optional[int]] = {}
+            for kw in node.keywords:
+                if kw.arg is None or kw.arg == "key":
+                    continue
+                if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, int
+                ) and not isinstance(kw.value.value, bool):
+                    knobs[kw.arg] = kw.value.value
+                elif isinstance(kw.value, ast.Name):
+                    knobs[kw.arg] = params.get(kw.value.id)
+                else:
+                    knobs[kw.arg] = None
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, str):
+                key = node.args[0].value
+                keys.add(key)
+                merged = sites.setdefault(key, {})
+                for k, v in knobs.items():
+                    merged.setdefault(k, v)
+            else:
+                for k, v in knobs.items():
+                    wildcard_knobs.setdefault(k, v)
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = scope.args
+            pos = a.posonlyargs + a.args
+            aligned = list(zip(pos[len(pos) - len(a.defaults):], a.defaults))
+            aligned += [p for p in zip(a.kwonlyargs, a.kw_defaults)
+                        if p[1] is not None]
+            for param, dflt in aligned:
+                if param.arg in _KEY_PARAMS and isinstance(dflt, ast.Constant) \
+                        and isinstance(dflt.value, str):
+                    keys.add(dflt.value)
+                    file_keys.add(dflt.value)
+
+    for key in file_keys:
+        merged = sites.setdefault(key, {})
+        for k, v in wildcard_knobs.items():
+            merged.setdefault(k, v)
+
+
+def collect_tuning_sites(kernels_root: Optional[Path] = None) -> KnobMap:
+    """Tuning key -> {knob: hand-set default} from the kernel sources."""
+    if kernels_root is None:
+        import repro.kernels
+
+        kernels_root = Path(repro.kernels.__file__).resolve().parent
+    sites: KnobMap = {}
     keys: Set[str] = set()
     for fp in sorted(kernels_root.rglob("*.py")):
         tree = ast.parse(fp.read_text(encoding="utf-8"), filename=str(fp))
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Call):
-                fn = node.func
-                name = fn.id if isinstance(fn, ast.Name) else (
-                    fn.attr if isinstance(fn, ast.Attribute) else None
+        _scan_file(tree, sites, keys)
+    for key in keys:
+        sites.setdefault(key, {})
+    return sites
+
+
+def _collect_tuning_keys(kernels_root: Path) -> Set[str]:
+    return set(collect_tuning_sites(kernels_root))
+
+
+def table_findings(
+    doc: Optional[dict] = None,
+    kernels_root: Optional[Path] = None,
+) -> List[Finding]:
+    """Lint the persisted tuning table against the live registry (C104/C105)."""
+    import repro.kernels.ops  # noqa: F401  - populates the registry
+    from repro.core.registry import list_ops
+    from repro.tuning import table as tt
+
+    path = "src/repro/tuning/tuning_table.json"
+    if doc is None:
+        fs_path = tt.resolved_path()
+        if fs_path is None or not fs_path.exists():
+            return []
+        try:
+            doc = tt.load(fs_path)
+        except ValueError as exc:
+            return [
+                Finding(
+                    rule="C104", path=path, line=1, col=1,
+                    message=f"tuning table failed schema validation: {exc}",
+                    hint="regenerate with python -m repro.tuning.autotune",
                 )
-                if name == "get_tuning" and node.args:
-                    first = node.args[0]
-                    if isinstance(first, ast.Constant) and isinstance(
-                        first.value, str
-                    ):
-                        keys.add(first.value)
-                for kw in node.keywords:
-                    if kw.arg in _KEY_PARAMS and isinstance(
-                        kw.value, ast.Constant
-                    ) and isinstance(kw.value.value, str):
-                        keys.add(kw.value.value)
-            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                args = node.args
-                params = args.posonlyargs + args.args + args.kwonlyargs
-                defaults = list(args.defaults) + list(args.kw_defaults)
-                names = [a.arg for a in params][-len(defaults):] if defaults else []
-                for pname, dflt in zip(names, defaults):
-                    if (
-                        pname in _KEY_PARAMS
-                        and isinstance(dflt, ast.Constant)
-                        and isinstance(dflt.value, str)
-                    ):
-                        keys.add(dflt.value)
-    return keys
+            ]
+    errs = tt.validate(doc)
+    if errs:
+        return [
+            Finding(
+                rule="C104", path=path, line=1, col=1,
+                message=f"tuning table failed schema validation: {err}",
+                hint="regenerate with python -m repro.tuning.autotune",
+            )
+            for err in errs
+        ]
+
+    declared_by: Dict[str, List[str]] = {}
+    pallas_keys: Set[str] = set()
+    for name, entry in sorted(list_ops().items()):
+        for key in entry.tuning or ():
+            declared_by.setdefault(key, []).append(name)
+            if entry.pallas is not None:
+                pallas_keys.add(key)
+    sites = collect_tuning_sites(kernels_root)
+
+    out: List[Finding] = []
+    for key, classes in sorted(doc.get("entries", {}).items()):
+        if key not in pallas_keys:
+            if key in declared_by:
+                msg = (
+                    f"tuning-table entry {key!r}: declaring op(s) "
+                    f"{declared_by[key]} no longer have a Pallas lowering"
+                )
+                hint = ("drop the entry or restore the lowering — tuned "
+                        "values for a reference-only op are dead weight")
+            else:
+                msg = (
+                    f"tuning-table entry {key!r} matches no registered "
+                    "op's declared tuning keys"
+                )
+                hint = ("regenerate the table (python -m "
+                        "repro.tuning.autotune) or remove the entry")
+            out.append(Finding(rule="C104", path=path, line=1, col=1,
+                               message=msg, hint=hint))
+            continue
+        knobs = sites.get(key, {})
+        for cls, cell in sorted(classes.items()):
+            for pname in sorted(cell.get("params", {})):
+                if pname not in knobs:
+                    out.append(
+                        Finding(
+                            rule="C105", path=path, line=1, col=1,
+                            message=(
+                                f"tuning-table entry {key!r}[{cls!r}] sets "
+                                f"knob {pname!r} that no get_tuning call "
+                                "site under kernels/ resolves"
+                            ),
+                            hint=("the kernel's knobs changed; regenerate "
+                                  "the table"),
+                        )
+                    )
+    return out
 
 
 def coverage_findings(kernels_root: Optional[Path] = None) -> List[Finding]:
@@ -64,11 +240,7 @@ def coverage_findings(kernels_root: Optional[Path] = None) -> List[Finding]:
     import repro.kernels.ops  # noqa: F401  - populates the registry
     from repro.core.registry import list_ops
 
-    if kernels_root is None:
-        import repro.kernels
-
-        kernels_root = Path(repro.kernels.__file__).resolve().parent
-    call_site_keys = _collect_tuning_keys(kernels_root)
+    call_site_keys = set(collect_tuning_sites(kernels_root))
     path = "src/repro/kernels/ops.py"
     out: List[Finding] = []
     for name, entry in sorted(list_ops().items()):
@@ -124,4 +296,5 @@ def coverage_findings(kernels_root: Optional[Path] = None) -> List[Finding]:
                         ),
                     )
                 )
+    out.extend(table_findings(kernels_root=kernels_root))
     return out

@@ -25,9 +25,13 @@ from repro.core.registry import (
     dispatch,
     get_op,
     get_tuning,
+    last_resolved,
     list_ops,
+    load_tuning_table,
     register_op,
     set_tuning,
+    tuning_overrides,
+    tuning_table,
 )
 
 __all__ = [
@@ -47,9 +51,13 @@ __all__ = [
     "dispatch",
     "get_op",
     "get_tuning",
+    "last_resolved",
     "list_ops",
+    "load_tuning_table",
     "register_op",
     "set_tuning",
+    "tuning_overrides",
+    "tuning_table",
     "for_each_elementwise",
     "for_each_rows",
     "for_each_tiles",

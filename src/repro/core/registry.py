@@ -18,8 +18,9 @@ look up at trace time.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple
 
 from repro.core.policy import Backend, current_backend
 
@@ -109,19 +110,129 @@ def coverage() -> Dict[str, bool]:
 
 
 # ---------------------------------------------------------------------------
-# Tuning registry: per-(op, key) kernel parameters, settable from config.
+# Tuning registry: per-(op, key) kernel parameters.
+#
+# Three layers resolve at trace time, lowest to highest precedence:
+#
+#     call-site defaults (the hand-set values baked into kernel source)
+#         < persisted table (op, "default") < persisted table (op, key)
+#         < set_tuning (op, "default")      < set_tuning (op, key)
+#
+# The persisted table is the committed artifact of the autotuning sweep
+# (src/repro/tuning/tuning_table.json, format documented in the
+# ``repro.tuning`` package docstring); ``key`` is normally a shape class
+# (``repro.tuning.shapes.shape_class``).  A ``key`` that misses every
+# layer falls back cleanly to the call-site defaults — and the table
+# always supersedes the hand-set defaults for classes it covers, while
+# an explicit ``set_tuning`` (tests, experiments, config overrides)
+# always beats the table.
 # ---------------------------------------------------------------------------
+
+_TABLE: Optional[Dict[tuple, Dict[str, Any]]] = None
+_LAST_RESOLVED: Dict[str, str] = {}
+
+
+def _table() -> Dict[tuple, Dict[str, Any]]:
+    """Lazily load the persisted tuning table (flattened view)."""
+    global _TABLE
+    if _TABLE is None:
+        from repro.tuning import table as _tt
+
+        path = _tt.resolved_path()
+        if path is None:
+            _TABLE = {}
+        else:
+            try:
+                _TABLE = _tt.flatten(_tt.load(path))
+            except ValueError:
+                # a corrupt table must not brick every op; the coverage
+                # lint (C104/C105) is the loud path for table problems
+                _TABLE = {}
+    return _TABLE
+
+
+def load_tuning_table(source: Any = None) -> int:
+    """(Re)load the persisted table; returns the number of entries.
+
+    ``source`` may be a path, a table document (dict with ``entries``),
+    an already-flattened ``{(op, key): params}`` mapping, or ``None``
+    for the default path (``REPRO_TUNING_TABLE`` respected).
+    """
+    global _TABLE
+    from repro.tuning import table as _tt
+
+    if source is None:
+        _TABLE = None
+        return len(_table())
+    if isinstance(source, dict):
+        if "entries" in source:
+            _TABLE = _tt.flatten(source)
+        else:
+            _TABLE = {k: dict(v) for k, v in source.items()}
+    else:
+        _TABLE = _tt.flatten(_tt.load(source))
+    return len(_TABLE)
+
+
+@contextlib.contextmanager
+def tuning_table(source: Any) -> Iterator[None]:
+    """Scoped table replacement; ``{}`` (or ``None``) disables the table.
+
+    Used by the autotuner (sweep against a clean slate) and by the perf
+    snapshot (measure the hand-set defaults the table supersedes).
+    """
+    global _TABLE
+    saved = _TABLE
+    try:
+        if source is None:
+            _TABLE = {}
+        else:
+            _TABLE = None
+            load_tuning_table(source)
+        yield
+    finally:
+        _TABLE = saved
+
 
 def set_tuning(op: str, key: str = "default", **params: Any) -> None:
     _TUNING[(op, key)] = dict(params)
 
 
+@contextlib.contextmanager
+def tuning_overrides(op: str, key: str = "default",
+                     **params: Any) -> Iterator[None]:
+    """Scoped ``set_tuning`` — the autotuner's per-candidate install."""
+    saved = _TUNING.get((op, key))
+    _TUNING[(op, key)] = dict(params)
+    try:
+        yield
+    finally:
+        if saved is None:
+            _TUNING.pop((op, key), None)
+        else:
+            _TUNING[(op, key)] = saved
+
+
 def get_tuning(op: str, key: str = "default", **defaults: Any) -> Dict[str, Any]:
     out = dict(defaults)
+    tab = _table()
+    out.update(tab.get((op, "default"), {}))
+    if key != "default":
+        out.update(tab.get((op, key), {}))
     out.update(_TUNING.get((op, "default"), {}))
     if key != "default":
         out.update(_TUNING.get((op, key), {}))
+    _LAST_RESOLVED[op] = key
     return out
+
+
+def last_resolved(op: str) -> Optional[str]:
+    """The ``key`` the most recent ``get_tuning(op, ...)`` resolved.
+
+    A debugging/self-check aid: the autotuner asserts its cell drivers
+    classify shapes exactly like the kernel call sites do.
+    """
+    return _LAST_RESOLVED.get(op)
 
 
 def clear_tuning() -> None:

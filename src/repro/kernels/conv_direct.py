@@ -22,6 +22,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 from repro.kernels.ref import conv_out_size
 
 
@@ -66,7 +67,7 @@ def conv2d_direct_pallas(
     ow = conv_out_size(wd, kw, stride, pad)
     xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
     hp, wp = xp.shape[2], xp.shape[3]
-    t = get_tuning("conv_direct", ft=128)
+    t = get_tuning("conv_direct", key=shape_class(c=c, f=f), ft=128)
     ft = min(t["ft"], f)
     fpad = (-f) % ft
     wf = jnp.pad(w, ((0, fpad), (0, 0), (0, 0), (0, 0)))

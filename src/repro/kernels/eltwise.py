@@ -17,6 +17,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 from repro.kernels.gemm import pad_to
 
 
@@ -33,8 +34,9 @@ def _eltwise_call(kernel, out_dtype, *arrays, interpret=None, op_name="eltwise")
         interpret = interpret_default()
     x2, orig_shape = _tile2d(arrays[0])
     rest = [a.reshape(x2.shape) for a in arrays[1:]]
-    t = get_tuning(op_name, bm=256, bn=512)
     m, n = x2.shape
+    t = get_tuning(op_name, key=shape_class(m=m, n=n),
+                   bm=256, bn=512)
     bm, bn = min(t["bm"], m), min(t["bn"], n)
     xs = [pad_to(a, (bm, bn)) for a in (x2, *rest)]
     mp, np_ = xs[0].shape
@@ -97,8 +99,9 @@ def bias_add_rows_pallas(m: jax.Array, vec: jax.Array, interpret=None):
     """m: (M,N) += vec (N,) broadcast over rows (Listing 1.2's functor)."""
     if interpret is None:
         interpret = interpret_default()
-    t = get_tuning("bias_add", bm=256, bn=512)
     mm, n = m.shape
+    t = get_tuning("bias_add", key=shape_class(m=mm, n=n),
+                   bm=256, bn=512)
     bm, bn = min(t["bm"], mm), min(t["bn"], n)
     mp = pad_to(m, (bm, bn))
     vp = pad_to(vec.reshape(1, -1), (1, bn))

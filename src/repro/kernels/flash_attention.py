@@ -43,6 +43,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 
 NEG_INF = float(-1e30)
 
@@ -133,7 +134,8 @@ def flash_attention_pallas(
     _, sk, hkv, _ = k.shape
     g = hq // hkv
     scale = scale if scale is not None else float(1.0 / np.sqrt(d))
-    t = get_tuning("flash_attention", bq=128, bk=128)
+    t = get_tuning("flash_attention", key=shape_class(d=d, s=sk),
+                   bq=128, bk=128)
     bq, bk = min(t["bq"], sq), min(t["bk"], sk)
     qt = _pad_seq(q.transpose(0, 2, 1, 3), bq, 2)    # (B,Hq,Sq',D)
     kt = _pad_seq(k.transpose(0, 2, 1, 3), bk, 2)    # (B,Hkv,Sk',D)
@@ -273,7 +275,8 @@ def flash_attention_bwd_pallas(
     _, sk, hkv, _ = k.shape
     g = hq // hkv
     scale = scale if scale is not None else float(1.0 / np.sqrt(d))
-    t = get_tuning("flash_attention", bq=128, bk=128)
+    t = get_tuning("flash_attention", key=shape_class(d=d, s=sk),
+                   bq=128, bk=128)
     bq, bk = min(t["bq"], sq), min(t["bk"], sk)
     qt = _pad_seq(q.transpose(0, 2, 1, 3), bq, 2)
     kt = _pad_seq(k.transpose(0, 2, 1, 3), bk, 2)
@@ -453,7 +456,7 @@ def flash_decode_pallas(
     _, smax, hkv, _ = k_cache.shape
     g = hq // hkv
     scale = scale if scale is not None else float(1.0 / np.sqrt(d))
-    t = get_tuning("flash_decode", bk=512)
+    t = get_tuning("flash_decode", key=shape_class(s=smax), bk=512)
     bk = min(t["bk"], smax)
     kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), bk, 2)  # (B,Hkv,S',D)
     vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), bk, 2)
@@ -683,7 +686,8 @@ def flash_prefill_chunk_pallas(
     _, smax, hkv, _ = k_cache.shape
     g = hq // hkv
     scale = scale if scale is not None else float(1.0 / np.sqrt(d))
-    t = get_tuning("flash_prefill", bk=512)
+    t = get_tuning("flash_prefill", key=shape_class(c=c, s=smax),
+                   bk=512)
     bk = min(t["bk"], smax)
     kt = _pad_seq(k_cache.transpose(0, 2, 1, 3), bk, 2)   # (B,Hkv,S',D)
     vt = _pad_seq(v_cache.transpose(0, 2, 1, 3), bk, 2)

@@ -21,6 +21,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
@@ -62,7 +63,8 @@ def gemm_pallas(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    t = get_tuning("gemm", bm=128, bn=128, bk=128)
+    t = get_tuning("gemm", key=shape_class(m=m, n=n, k=k),
+                   bm=128, bn=128, bk=128)
     bm, bn, bk = (min(t["bm"], m), min(t["bn"], n), min(t["bk"], k))
     ap = pad_to(a, (bm, bk))
     bp = pad_to(b, (bk, bn))

@@ -27,6 +27,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 
 
 def _ssd_kernel(
@@ -98,7 +99,7 @@ def ssd_scan_pallas(
     b, s, h, p = x.shape
     assert B_.shape[2] == 1, "pallas SSD kernel supports n_groups=1"
     n = B_.shape[3]
-    t = get_tuning(tuning_op, chunk=chunk)
+    t = get_tuning(tuning_op, key=shape_class(s=s), chunk=chunk)
     # a chunk longer than the sequence is identical math on pure padding
     # (dt pads with 0 = state no-op): clamp so short sequences — down to
     # the S=1 decode-as-C=1 case — never pay a full chunk of dead MXU work

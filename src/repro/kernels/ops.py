@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.policy import Backend, current_backend
 from repro.core.registry import get_tuning, register_op
+from repro.tuning.shapes import shape_class
 from repro.kernels import ref
 from repro.kernels.eltwise import (
     bias_add_rows_pallas,
@@ -672,7 +673,8 @@ def ssd_prefill_chunk(
     Both lowerings are registered and kept in lock-step
     (``ssd_prefill_chunk`` in ``coverage()``).
     """
-    t = get_tuning("ssd_prefill_chunk", chunk=chunk)
+    t = get_tuning("ssd_prefill_chunk", key=shape_class(s=x.shape[1]),
+                   chunk=chunk)
     c = max(1, min(int(t["chunk"]), x.shape[1]))
     if _pallas() and B_.shape[2] == 1:
         # the kernel re-resolves its chunk from the tuning table; naming

@@ -15,6 +15,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 from repro.kernels.gemm import pad_to
 
 
@@ -32,7 +33,7 @@ def rmsnorm_pallas(x: jax.Array, w: jax.Array, eps: float = 1e-6, interpret=None
     d = orig[-1]
     x2 = x.reshape(-1, d)
     r = x2.shape[0]
-    t = get_tuning("rmsnorm", br=256)
+    t = get_tuning("rmsnorm", key=shape_class(d=d, r=r), br=256)
     br = min(t["br"], r)
     xp = pad_to(x2, (br, d))
     grid = (xp.shape[0] // br,)
@@ -80,7 +81,7 @@ def rmsnorm_bwd_pallas(
     d = orig[-1]
     x2, dy2 = x.reshape(-1, d), dy.reshape(-1, d)
     r = x2.shape[0]
-    t = get_tuning("rmsnorm", br=256)
+    t = get_tuning("rmsnorm", key=shape_class(d=d, r=r), br=256)
     br = min(t["br"], r)
     xp, dyp = pad_to(x2, (br, d)), pad_to(dy2, (br, d))
     grid = (xp.shape[0] // br,)

@@ -20,6 +20,7 @@ from repro.kernels import pallas_compat as plc
 
 from repro.core.policy import interpret_default
 from repro.core.registry import get_tuning
+from repro.tuning.shapes import shape_class
 from repro.kernels.gemm import pad_to
 
 
@@ -38,7 +39,7 @@ def softmax_pallas(x: jax.Array, interpret=None) -> jax.Array:
     orig = x.shape
     x2 = x.reshape(-1, orig[-1])
     r, v = x2.shape
-    t = get_tuning("softmax", br=256)
+    t = get_tuning("softmax", key=shape_class(r=r, v=v), br=256)
     br = min(t["br"], r)
     xp = pad_to(x2, (br, v))
     if xp.shape[0] != r:
@@ -79,7 +80,7 @@ def softmax_xent_pallas(logits: jax.Array, labels: jax.Array, interpret=None):
     if interpret is None:
         interpret = interpret_default()
     b, v = logits.shape
-    t = get_tuning("softmax_xent", br=128)
+    t = get_tuning("softmax_xent", key=shape_class(b=b, v=v), br=128)
     br = min(t["br"], b)
     xp = pad_to(logits, (br, v))
     yp = pad_to(labels.astype(jnp.int32).reshape(-1, 1), (br, 1))
@@ -120,7 +121,7 @@ def softmax_xent_bwd_pallas(probs: jax.Array, labels: jax.Array, interpret=None)
     if interpret is None:
         interpret = interpret_default()
     b, v = probs.shape
-    t = get_tuning("softmax_xent", br=128)
+    t = get_tuning("softmax_xent", key=shape_class(b=b, v=v), br=128)
     br = min(t["br"], b)
     pp = pad_to(probs, (br, v))
     yp = pad_to(labels.astype(jnp.int32).reshape(-1, 1), (br, 1))

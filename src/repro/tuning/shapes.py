@@ -1,0 +1,60 @@
+"""Shape classes — the bucketing that keys the persisted tuning table.
+
+A *shape class* is a deterministic, coarse name for "shapes that should
+share kernel tuning": every classified dimension is rounded up to the
+next power of two and the buckets are joined into a canonical string,
+e.g. ``shape_class(m=48, n=256, k=200)`` -> ``"k256.m64.n256"``.
+
+Rules (load-bearing for the table contract):
+
+  * dimension names are sorted, so the class string is independent of
+    keyword order at the call site;
+  * buckets are pure ceil-to-power-of-two (min 1, capped at ``_CAP``),
+    so classification needs no tables and two call sites that classify
+    the same dims always agree;
+  * each kernel call site classifies the *dims its knobs depend on*
+    (documented per key in the ``repro.tuning`` package docstring), and
+    the autotuner's cell drivers must mirror that choice — the registry
+    records the last key each op resolved (``registry.last_resolved``)
+    so the autotuner can assert the two stayed in lock-step.
+
+This module is deliberately dependency-free (no jax, no registry) so
+kernel modules can import it without cycles.
+"""
+from __future__ import annotations
+
+_CAP = 1 << 20
+
+
+def bucket(n: int) -> int:
+    """Smallest power of two >= ``n`` (floor 1, cap ``_CAP``)."""
+    n = int(n)
+    if n <= 1:
+        return 1
+    p = 1
+    while p < n and p < _CAP:
+        p <<= 1
+    return p
+
+
+def shape_class(**dims: int) -> str:
+    """Canonical class string for the given dimensions.
+
+    ``shape_class(m=48, n=256, k=200)`` -> ``"k256.m64.n256"``.
+    """
+    if not dims:
+        raise ValueError("shape_class needs at least one dimension")
+    return ".".join(f"{name}{bucket(v)}" for name, v in sorted(dims.items()))
+
+
+def parse_shape_class(cls: str) -> dict:
+    """Inverse of :func:`shape_class` (bucketed values, not originals)."""
+    out = {}
+    for part in cls.split("."):
+        i = len(part)
+        while i > 0 and part[i - 1].isdigit():
+            i -= 1
+        if i == 0 or i == len(part):
+            raise ValueError(f"malformed shape-class component {part!r}")
+        out[part[:i]] = int(part[i:])
+    return out

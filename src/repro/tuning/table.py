@@ -1,0 +1,138 @@
+"""Persisted tuning table — load / save / validate ``tuning_table.json``.
+
+The table is a committed artifact produced by ``python -m
+repro.tuning.autotune`` (see the package docstring for the full format).
+This module owns the schema; ``repro.core.registry`` consumes the
+flattened ``{(op, shape_class): params}`` view at ``get_tuning`` time and
+``repro.analysis.coverage`` lints the file against the live op registry
+(C104/C105).
+
+Deliberately dependency-free (stdlib only) so both the registry and the
+linter can import it without cycles.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: Environment override for the table location.  Set to a path to load a
+#: different table, or to the empty string to disable table loading.
+ENV_VAR = "REPRO_TUNING_TABLE"
+
+
+def default_path() -> Path:
+    """The committed table location: ``src/repro/tuning/tuning_table.json``."""
+    return Path(__file__).resolve().parent / "tuning_table.json"
+
+
+def resolved_path() -> Optional[Path]:
+    """Default path after applying the ``REPRO_TUNING_TABLE`` override.
+
+    Returns ``None`` when loading is disabled (env var set but empty).
+    """
+    env = os.environ.get(ENV_VAR)
+    if env is None:
+        return default_path()
+    if not env:
+        return None
+    return Path(env)
+
+
+def load(path: Optional[Path] = None) -> Dict[str, Any]:
+    """Read and validate a table document; missing file -> empty doc."""
+    path = Path(path) if path is not None else default_path()
+    if not path.exists():
+        return empty_doc()
+    doc = json.loads(path.read_text(encoding="utf-8"))
+    errors = validate(doc)
+    if errors:
+        raise ValueError(
+            f"invalid tuning table {path}: " + "; ".join(errors)
+        )
+    return doc
+
+
+def save(doc: Dict[str, Any], path: Optional[Path] = None) -> Path:
+    """Validate and write ``doc``; returns the path written."""
+    errors = validate(doc)
+    if errors:
+        raise ValueError("refusing to write invalid table: "
+                         + "; ".join(errors))
+    path = Path(path) if path is not None else default_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return path
+
+
+def empty_doc() -> Dict[str, Any]:
+    return {
+        "schema": SCHEMA_VERSION,
+        "backend": "pallas",
+        "environment": {},
+        "cells": [],
+        "entries": {},
+    }
+
+
+def validate(doc: Any) -> List[str]:
+    """Schema check; returns a list of human-readable errors (empty = ok)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != SCHEMA_VERSION:
+        errs.append(f"schema must be {SCHEMA_VERSION}, got "
+                    f"{doc.get('schema')!r}")
+    if doc.get("backend") != "pallas":
+        errs.append("backend must be 'pallas' (the only tunable lowering)")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        return errs + ["'entries' must be an object"]
+    for op, classes in entries.items():
+        if not isinstance(op, str) or not op:
+            errs.append(f"entry key {op!r} is not an op name")
+            continue
+        if not isinstance(classes, dict):
+            errs.append(f"entries[{op!r}] must be an object")
+            continue
+        for cls, cell in classes.items():
+            where = f"entries[{op!r}][{cls!r}]"
+            if not isinstance(cell, dict):
+                errs.append(f"{where} must be an object")
+                continue
+            params = cell.get("params")
+            if not isinstance(params, dict) or not params:
+                errs.append(f"{where}.params must be a non-empty object")
+            else:
+                for k, v in params.items():
+                    if not isinstance(k, str) or not isinstance(v, int):
+                        errs.append(
+                            f"{where}.params[{k!r}] must map a knob name "
+                            "to an int"
+                        )
+            for fld in ("ms", "default_ms", "speedup"):
+                if fld in cell and not isinstance(
+                    cell[fld], (int, float)
+                ):
+                    errs.append(f"{where}.{fld} must be a number")
+    cells = doc.get("cells", [])
+    if not isinstance(cells, list):
+        errs.append("'cells' must be a list")
+    else:
+        for i, c in enumerate(cells):
+            if not isinstance(c, dict) or "op" not in c or "status" not in c:
+                errs.append(f"cells[{i}] must carry at least op and status")
+    return errs
+
+
+def flatten(doc: Dict[str, Any]) -> Dict[Tuple[str, str], Dict[str, int]]:
+    """``{(op, shape_class): params}`` — the view ``get_tuning`` resolves."""
+    out: Dict[Tuple[str, str], Dict[str, int]] = {}
+    for op, classes in doc.get("entries", {}).items():
+        for cls, cell in classes.items():
+            out[(op, cls)] = dict(cell["params"])
+    return out

@@ -153,6 +153,59 @@ def test_coverage_lint_catches_half_wired_ops():
             registry._OPS.pop(n, None)
 
 
+def test_table_lint_flags_unknown_key():
+    """C104: a table entry under a tuning key no registered op declares."""
+    from repro.analysis.coverage import table_findings
+    from repro.tuning import table as tt
+
+    doc = tt.empty_doc()
+    doc["entries"] = {"no_such_key": {"m8": {"params": {"bm": 32}}}}
+    got = table_findings(doc)
+    assert [f.rule for f in got] == ["C104"]
+    assert "no_such_key" in got[0].message
+
+
+def test_table_lint_flags_key_that_lost_its_lowering():
+    """C104: the op exists but is no longer Pallas-lowered — the persisted
+    entry is dead weight that would silently stop applying."""
+    from repro.analysis.coverage import table_findings
+    from repro.core import registry
+    from repro.tuning import table as tt
+
+    registry.register_op(
+        "_lint_tbl", reference=lambda: None, tuning="_lint_tbl_key",
+        reference_only=True,
+    )
+    try:
+        doc = tt.empty_doc()
+        doc["entries"] = {"_lint_tbl_key": {"m8": {"params": {"bm": 32}}}}
+        got = table_findings(doc)
+        assert [f.rule for f in got] == ["C104"]
+        assert "lowering" in got[0].message
+    finally:
+        registry._OPS.pop("_lint_tbl", None)
+
+
+def test_table_lint_flags_param_no_call_site_resolves():
+    """C105: the key is live but the stored knob name matches no
+    get_tuning call-site default — a typo or a renamed knob."""
+    from repro.analysis.coverage import table_findings
+    from repro.tuning import table as tt
+
+    doc = tt.empty_doc()
+    doc["entries"] = {"gemm": {"m8": {"params": {"block_mm": 32}}}}
+    got = table_findings(doc)
+    assert [f.rule for f in got] == ["C105"]
+    assert "block_mm" in got[0].message
+
+
+def test_table_lint_reports_malformed_table_as_c104():
+    from repro.analysis.coverage import table_findings
+
+    got = table_findings({"schema": 99})
+    assert got and all(f.rule == "C104" for f in got)
+
+
 def test_register_op_rejects_contradictory_declaration():
     from repro.core import registry
 

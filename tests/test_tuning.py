@@ -1,0 +1,333 @@
+"""Tests for the autotuning stack: shape-class bucketing, the five-layer
+``get_tuning`` precedence, table schema + persistence round-trips (same
+process, fresh process via ``REPRO_TUNING_TABLE``, and a real smoke sweep
+through ``repro.tuning.autotune``), the committed artifacts
+(``tuning_table.json``, ``BENCH_*.json``), and the perf-trajectory
+checker's regression detection."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import registry
+from repro.core.registry import (
+    clear_tuning,
+    get_tuning,
+    last_resolved,
+    set_tuning,
+    tuning_overrides,
+    tuning_table,
+)
+from repro.tuning import table as tt
+from repro.tuning.shapes import bucket, parse_shape_class, shape_class
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:          # for benchmarks.perf_snapshot
+    sys.path.insert(0, str(REPO))
+
+from benchmarks.perf_snapshot import (  # noqa: E402
+    compare,
+    validate_bench,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuning():
+    clear_tuning()
+    yield
+    clear_tuning()
+
+
+# ---------------------------------------------------------------------------
+# shape classes
+# ---------------------------------------------------------------------------
+
+def test_bucket_pow2_ceiling():
+    assert [bucket(n) for n in (1, 2, 3, 7, 8, 9, 1000)] == [
+        1, 2, 4, 8, 8, 16, 1024,
+    ]
+
+
+def test_shape_class_deterministic_and_order_free():
+    a = shape_class(m=48, n=256, k=200)
+    b = shape_class(k=200, m=48, n=256)
+    assert a == b == "k256.m64.n256"
+    assert parse_shape_class(a) == {"k": 256, "m": 64, "n": 256}
+
+
+def test_shape_class_bucketing_stable_within_bucket():
+    # every size in (64, 128] lands in the same class -> same table cell
+    assert len({shape_class(m=m) for m in range(65, 129)}) == 1
+
+
+def test_shape_class_rejects_empty():
+    with pytest.raises(ValueError):
+        shape_class()
+
+
+def test_kernel_call_site_agrees_with_driver_classification():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.gemm import gemm_pallas
+
+    a = jnp.ones((48, 200), jnp.float32)
+    b = jnp.ones((200, 96), jnp.float32)
+    with tuning_table(None):
+        gemm_pallas(a, b, interpret=True)
+    assert last_resolved("gemm") == shape_class(m=48, n=96, k=200)
+
+
+# ---------------------------------------------------------------------------
+# get_tuning precedence
+# ---------------------------------------------------------------------------
+
+def test_precedence_call_site_defaults_lowest():
+    with tuning_table(None):
+        assert get_tuning("nosuch", key="m8", bm=128) == {"bm": 128}
+
+
+def test_precedence_table_beats_call_site_defaults():
+    with tuning_table({("gemm", "m8"): {"bm": 32}}):
+        assert get_tuning("gemm", key="m8", bm=128) == {"bm": 32}
+
+
+def test_precedence_table_class_beats_table_default():
+    with tuning_table({("gemm", "default"): {"bm": 64},
+                       ("gemm", "m8"): {"bm": 32}}):
+        assert get_tuning("gemm", key="m8", bm=128) == {"bm": 32}
+        # a class the table misses falls back to the table default
+        assert get_tuning("gemm", key="m999", bm=128) == {"bm": 64}
+
+
+def test_precedence_set_tuning_beats_table():
+    # tests/experiments force values with set_tuning; the committed table
+    # must never shadow them
+    with tuning_table({("gemm", "m8"): {"bm": 32}}):
+        set_tuning("gemm", "default", bm=16)
+        assert get_tuning("gemm", key="m8", bm=128) == {"bm": 16}
+        set_tuning("gemm", "m8", bm=8)
+        assert get_tuning("gemm", key="m8", bm=128) == {"bm": 8}
+
+
+def test_precedence_key_miss_falls_back_cleanly():
+    with tuning_table({("gemm", "m8"): {"bm": 32}}):
+        # unknown class, no defaults anywhere -> call-site values survive
+        assert get_tuning("gemm", key="zz9", bm=128, bk=64) == {
+            "bm": 128, "bk": 64,
+        }
+
+
+def test_tuning_overrides_scoped():
+    with tuning_table(None):
+        with tuning_overrides("gemm", "m8", bm=4):
+            assert get_tuning("gemm", key="m8", bm=128) == {"bm": 4}
+        assert get_tuning("gemm", key="m8", bm=128) == {"bm": 128}
+
+
+def test_partial_table_entry_merges_over_defaults():
+    with tuning_table({("gemm", "m8"): {"bm": 32}}):
+        out = get_tuning("gemm", key="m8", bm=128, bn=256, bk=512)
+        assert out == {"bm": 32, "bn": 256, "bk": 512}
+
+
+# ---------------------------------------------------------------------------
+# table schema + persistence
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_bad_documents():
+    assert tt.validate([]) != []
+    assert any("schema" in e for e in tt.validate({"schema": 99}))
+    doc = tt.empty_doc()
+    doc["entries"] = {"gemm": {"m8": {"params": {}}}}
+    assert any("params" in e for e in tt.validate(doc))
+    doc["entries"] = {"gemm": {"m8": {"params": {"bm": "big"}}}}
+    assert any("int" in e for e in tt.validate(doc))
+    doc["entries"] = {"gemm": {"m8": {"params": {"bm": 32}, "ms": "fast"}}}
+    assert any("ms" in e for e in tt.validate(doc))
+    doc = tt.empty_doc()
+    doc["cells"] = [{"op": "matmul"}]          # missing status
+    assert any("cells" in e for e in tt.validate(doc))
+
+
+def test_save_load_roundtrip(tmp_path):
+    doc = tt.empty_doc()
+    doc["entries"] = {"gemm": {"m8": {"params": {"bm": 32}, "ms": 0.5}}}
+    doc["cells"] = [{"op": "matmul", "status": "swept"}]
+    path = tt.save(doc, tmp_path / "t.json")
+    assert tt.load(path) == doc
+    assert tt.flatten(doc) == {("gemm", "m8"): {"bm": 32}}
+
+
+def test_save_refuses_invalid(tmp_path):
+    doc = tt.empty_doc()
+    doc["schema"] = 99
+    with pytest.raises(ValueError):
+        tt.save(doc, tmp_path / "t.json")
+
+
+def test_fresh_process_resolves_from_env_table(tmp_path):
+    """autotune -> persist -> a *new* process resolves the swept value."""
+    doc = tt.empty_doc()
+    doc["entries"] = {"gemm": {"m8.n8": {"params": {"bm": 7}}}}
+    path = tt.save(doc, tmp_path / "t.json")
+    code = (
+        "from repro.core.registry import get_tuning;"
+        "print(get_tuning('gemm', key='m8.n8', bm=128)['bm'])"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, check=True,
+        env={"PYTHONPATH": str(REPO / "src"),
+             "REPRO_TUNING_TABLE": str(path),
+             "PATH": "/usr/bin:/bin"},
+    )
+    assert out.stdout.strip() == "7"
+
+
+def test_env_var_empty_disables_table(monkeypatch):
+    monkeypatch.setenv(tt.ENV_VAR, "")
+    assert tt.resolved_path() is None
+
+
+def test_autotune_smoke_roundtrip(tmp_path):
+    """A real (smoke) sweep produces a valid, loadable, resolvable table."""
+    from repro.tuning.autotune import run_autotune
+
+    doc = run_autotune(smoke=True, only=["rmsnorm"], repeats=1)
+    assert tt.validate(doc) == []
+    cells = {c["op"]: c["status"] for c in doc["cells"]}
+    assert cells["rmsnorm"] == "swept"
+    assert cells["avgpool"] == "reference_only"
+    assert cells["im2col"] == "no-knobs"
+    assert cells["matmul"] == "skipped"
+    path = tt.save(doc, tmp_path / "t.json")
+    loaded = tt.flatten(tt.load(path))
+    if loaded:  # defaults may win the sweep; if not, values must resolve
+        (op, cls), params = sorted(loaded.items())[0]
+        with tuning_table(loaded):
+            assert get_tuning(op, key=cls) == params
+
+
+def test_autotune_cell_enumeration_deterministic():
+    from repro.tuning.autotune import enumerate_cells
+
+    a = enumerate_cells()
+    b = enumerate_cells()
+    assert a == b
+    assert [c["op"] for c in a] == sorted(c["op"] for c in a)
+    assert {c["status"] for c in a} <= {
+        "swept", "no-knobs", "reference_only", "skipped",
+    }
+
+
+def test_candidates_deterministic_and_exclude_baseline():
+    from repro.tuning.autotune import candidates
+
+    knobs = {"bm": 128, "bn": 128, "bk": 128}
+    a = candidates(knobs, smoke=False)
+    assert a == candidates(knobs, smoke=False)
+    assert {"bm": 128, "bn": 128, "bk": 128} not in a
+    assert all(all(v >= 8 for v in c.values()) for c in a)
+
+
+def test_committed_table_is_valid_and_lint_clean():
+    doc = tt.load(tt.default_path())
+    assert tt.validate(doc) == []
+    assert doc["entries"], "committed table has no entries"
+    from repro.analysis.coverage import table_findings
+
+    assert table_findings(doc) == []
+
+
+# ---------------------------------------------------------------------------
+# BENCH snapshots + trajectory checker
+# ---------------------------------------------------------------------------
+
+def _bench_doc():
+    return {
+        "schema": 1,
+        "serving": {"default": {"tok_s": 100.0, "prefill_tok_s": 200.0,
+                                "ttft_ms": 50.0, "ttft_ms_p99": 80.0,
+                                "kv_bytes": 4096}},
+        "ops": {"gemm[m8]": {"case": "decode", "shape_class": "m8",
+                             "default_ms": 1.0, "tuned_ms": 0.5,
+                             "speedup": 2.0, "roofline_fraction": 0.2}},
+        "improved_ops": ["gemm[m8]"],
+    }
+
+
+def test_bench_schema_validation():
+    assert validate_bench(_bench_doc()) == []
+    bad = _bench_doc()
+    del bad["ops"]["gemm[m8]"]["speedup"]
+    assert validate_bench(bad) != []
+    bad = _bench_doc()
+    bad["serving"]["default"]["tok_s"] = "fast"
+    assert validate_bench(bad) != []
+
+
+def test_committed_bench_files_are_valid():
+    files = sorted((REPO / "benchmarks" / "trajectory").glob("BENCH_*.json"))
+    assert files, "no committed BENCH files"
+    for f in files:
+        doc = json.loads(f.read_text())
+        assert validate_bench(doc) == [], f.name
+    latest = json.loads(files[-1].read_text())
+    assert len(latest["improved_ops"]) >= 3, (
+        "the committed snapshot must show >=3 ops beating their hand-set "
+        f"defaults; got {latest['improved_ops']}"
+    )
+
+
+def test_checker_passes_on_identical_snapshot():
+    doc = _bench_doc()
+    assert compare(doc, doc) == []
+
+
+def test_checker_fails_on_throughput_collapse():
+    old, new = _bench_doc(), _bench_doc()
+    new["serving"]["default"]["tok_s"] = 10.0       # 10x collapse
+    assert any("tok_s" in r for r in compare(old, new))
+
+
+def test_checker_fails_on_kv_bytes_change():
+    old, new = _bench_doc(), _bench_doc()
+    new["serving"]["default"]["kv_bytes"] = 8192
+    assert any("kv_bytes" in r for r in compare(old, new))
+
+
+def test_checker_fails_on_roofline_shift():
+    old, new = _bench_doc(), _bench_doc()
+    new["ops"]["gemm[m8]"]["roofline_fraction"] = 0.5
+    assert any("roofline_fraction" in r for r in compare(old, new))
+
+
+def test_checker_fails_when_table_slows_op_down():
+    old, new = _bench_doc(), _bench_doc()
+    new["ops"]["gemm[m8]"]["speedup"] = 0.3
+    assert any("speedup" in r for r in compare(old, new))
+
+
+def test_checker_tolerates_timing_noise():
+    old, new = _bench_doc(), _bench_doc()
+    new["serving"]["default"]["tok_s"] = 80.0        # within the band
+    new["ops"]["gemm[m8]"]["tuned_ms"] = 0.6
+    assert compare(old, new) == []
+
+
+def test_checker_ignores_cells_only_on_one_side():
+    old, new = _bench_doc(), _bench_doc()
+    new["ops"]["newop[x]"] = new["ops"]["gemm[m8]"]
+    del new["ops"]["gemm[m8]"]
+    old["serving"]["gone"] = old["serving"]["default"]
+    assert compare(old, new) == []
+
+
+def test_last_resolved_tracks_latest_key():
+    with tuning_table(None):
+        get_tuning("gemm", key="aaa", bm=1)
+        assert last_resolved("gemm") == "aaa"
+        get_tuning("gemm", key="bbb", bm=1)
+        assert last_resolved("gemm") == "bbb"
+    assert registry.last_resolved("never-called-op") is None
