@@ -14,7 +14,11 @@ Each ``benchmarks/trajectory/BENCH_%04d.json`` carries:
   ``--audit`` so a retracing driver fails instead of reporting bogus
   numbers): generated tok/s, prefill tok/s, mean and p99 TTFT ms, peak
   resident KV bytes (the paged pool from the layout ablation when the
-  arch has one).
+  arch has one), and — from the ``--faults`` pressure cell —
+  ``preemptions`` / ``restores`` / ``pressure_survivors``, the
+  host-spill scheduler's counters under the scripted FaultPlan (exact,
+  deterministic: the cell's submission sequence and fault cycles are
+  fixed, so a drift here is a scheduler behavior change, not noise).
 * ``ops`` — for every autotuned shape case (``repro.tuning.autotune``
   drives the same cells the sweep used): wall ms with the committed
   tuning table vs the hand-set call-site defaults, the resulting
@@ -89,6 +93,12 @@ def _serving_metrics(doc: Dict[str, Any]) -> Dict[str, float]:
                        ttft_ms=row["ttft_ms"],
                        ttft_ms_p99=row["ttft_ms_p99"])
             break
+    pressure = doc.get("pressure") or {}
+    cell = pressure.get("paged") or pressure.get("contiguous")
+    if cell:
+        out.update(preemptions=cell["preemptions"],
+                   restores=cell["restores"],
+                   pressure_survivors=cell["survivors"])
     return out
 
 
@@ -101,7 +111,7 @@ def run_serving(log=_log) -> Dict[str, Dict[str, float]]:
         log(f"  serving cell {name!r} ...")
         with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
             argv = ["--smoke", "--prefill-chunk", "8", "--audit",
-                    "--json", tmp.name] + extra
+                    "--faults", "--json", tmp.name] + extra
             with use_backend("pallas"):
                 serve_engine.main(argv)
             doc = json.loads(Path(tmp.name).read_text())
@@ -290,6 +300,13 @@ def compare(
                 f"{o.get('kv_bytes')} (resident KV is deterministic — this "
                 "is a real change, not noise)"
             )
+        for metric in ("preemptions", "restores", "pressure_survivors"):
+            if metric in o and metric in n and o[metric] != n[metric]:
+                regressions.append(
+                    f"serving.{cell}.{metric}: {n[metric]} vs committed "
+                    f"{o[metric]} (the pressure cell is deterministic — "
+                    "the scheduler's behavior under faults changed)"
+                )
 
     for cell in sorted(set(old.get("ops", {})) & set(new.get("ops", {}))):
         o, n = old["ops"][cell], new["ops"][cell]

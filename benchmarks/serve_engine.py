@@ -26,6 +26,20 @@ A fourth ablation measures *prefix sharing*: N requests carrying the same
 long system prompt, with and without page-level prefix sharing/CoW —
 sharer TTFT and peak resident KV bytes, outputs token-identical.
 
+``--faults`` adds a *pressure* cell (robustness harness, not a perf
+table): the same submission sequence served unpressured and under an
+injected ``FaultPlan`` — a pool-exhaustion window that forces a
+preemption (host spill) and delays the restore, a cancel, and a
+deadline storm.  The pressured engine must drain the doomed requests
+through the release path, finish the survivors with *bit-identical*
+tokens, and hand back every page and snapshot slot in both tiers.
+
+``--arrival poisson --rate R`` adds an open-loop cell: seeded
+exponential inter-arrival gaps on the wall clock, mixed priorities, a
+deliberately undersized paged pool — reporting p50/p99 TTFT plus the
+preemption/restore counters (latency under load; correctness under
+pressure is the ``--faults`` cell's job).
+
 ``--layout`` scopes the single-layout sections to one KV layout so a CI
 matrix cell (backend x layout) exercises exactly its own path; the
 inherently cross-layout ablation only runs under the default ``both``.
@@ -44,7 +58,7 @@ import numpy as np
 from repro.analysis.audit import jit_cache_audit
 from repro.configs.registry import get_arch
 from repro.models.model import build_model
-from repro.serving import ServingEngine
+from repro.serving import FaultEvent, FaultPlan, ServingEngine
 
 
 def _audit_ctx(eng, enabled):
@@ -358,6 +372,202 @@ def compare_prefill(args):
     return rows
 
 
+def _assert_conserved(eng, label):
+    """Post-drain invariant: every pool the engine owns — device and host,
+    KV pages and snapshot slots — fully free, every table clear.  Zero
+    leaked pages/slots is the acceptance bar for the pressure cell."""
+    st = eng._mstate
+    for top, free, table in (
+        ("page_top", "page_free", "block_table"),
+        ("host_top", "host_free", "host_table"),
+        ("snap_top", "snap_free", "snap_table"),
+        ("hsnap_top", "hsnap_free", "hsnap_table"),
+    ):
+        if top not in st:
+            continue
+        nslots = st[free].shape[0]
+        leaked = nslots - int(st[top])
+        assert leaked == 0, f"{label}: {top} leaked {leaked}/{nslots} slots"
+        assert bool((np.asarray(st[table]) == -1).all()), (
+            f"{label}: {table} still maps freed rows"
+        )
+
+
+def _pressure_cell(args, layout):
+    """One --faults cell: unpressured baseline vs FaultPlan-injected run.
+
+    Paged: pool sized so the high-priority arrival *must* preempt the
+    resident low-priority long request mid-prefill (host spill), and an
+    exhaustion window provably delays its restore.  Contiguous (no pool
+    to squeeze): the cancel/deadline half of the plan only.  Either way
+    the survivors' tokens must be bit-identical to the baseline's and no
+    page or snapshot slot may leak."""
+    cfg = get_arch(args.kv_arch)
+    spillable = layout == "paged" and not cfg.is_attention_free
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    gen_long, gen_short = 8, 6
+    rng = np.random.default_rng(17)
+    long_prompt = rng.integers(0, cfg.vocab_size, size=24).tolist()
+    shorts = [rng.integers(0, cfg.vocab_size, size=6).tolist()
+              for _ in range(3)]
+
+    def mk(n_pages=None, budget=0):
+        kw = {"layout": layout}
+        if layout == "paged":
+            kw.update(page_size=4, n_pages=n_pages,
+                      prefix_sharing=not cfg.is_attention_free)
+        return ServingEngine(model, params, batch=2, max_len=40,
+                             steps_per_sync=2, prefill_chunk=4,
+                             prefill_budget=budget, **kw)
+
+    def drive(eng, plan=None):
+        with _audit_ctx(eng, args.audit):
+            rids = [eng.submit(long_prompt, gen_long, priority=0)]
+            eng.step()              # low-priority long request resident
+            rids.append(eng.submit(shorts[0], gen_short, priority=1))
+            rids.append(eng.submit(shorts[1], gen_short, priority=0))
+            rids.append(eng.submit(shorts[2], gen_short, priority=0,
+                                   deadline_ms=60_000.0))
+            if plan is not None:
+                eng.set_fault_plan(plan(rids))
+            outs = eng.run()
+        return rids, outs
+
+    base_rids, base_outs = drive(mk(n_pages=20))
+
+    def plan(rids):
+        events = [
+            FaultEvent(cycle=2, kind="cancel", req_id=rids[2]),
+            FaultEvent(cycle=2, kind="deadline", req_id=rids[3],
+                       deadline_ms=0.0),
+        ]
+        if spillable:
+            events += [
+                FaultEvent(cycle=1, kind="exhaust_pool", pages=4),
+                FaultEvent(cycle=8, kind="release_pool"),
+            ]
+        return FaultPlan(events=tuple(events))
+
+    # paged: pool == the long request's worst-case need, so the
+    # high-priority arrival cannot fit without spilling it
+    eng = mk(n_pages=8, budget=1)
+    rids, outs = drive(eng, plan)
+
+    survivors = [rids[0], rids[1]]
+    assert sorted(outs) == sorted(survivors), (
+        f"{layout}: expected only survivors {survivors}, got {sorted(outs)}"
+    )
+    for r in survivors:
+        assert np.array_equal(outs[r], base_outs[r]), (
+            f"{layout}: survivor {r} diverged from unpressured run"
+        )
+    assert rids[2] in eng.cancelled, f"{layout}: cancel never landed"
+    assert rids[3] in eng.expired, f"{layout}: deadline never landed"
+    if spillable:
+        assert eng.preemptions >= 1, "pressure never forced a preemption"
+        assert eng.restores >= 1, "spilled row was never restored"
+    _assert_conserved(eng, layout)
+
+    row = {"preemptions": eng.preemptions, "restores": eng.restores,
+           "cancelled": len(eng.cancelled), "expired": len(eng.expired),
+           "survivors": len(outs)}
+    print(f"  {layout:<12} {row['preemptions']:>8d} {row['restores']:>8d} "
+          f"{row['cancelled']:>9d} {row['expired']:>7d} "
+          f"{row['survivors']:>9d}   ok")
+    return row
+
+
+def run_pressure(args):
+    """The --faults section: serving survives injected pressure."""
+    layouts = (("contiguous", "paged") if args.layout == "both"
+               else (args.layout,))
+    print(f"arch={args.kv_arch} batch=2 prompt_len=24/6 gen=8/6 "
+          f"prefill_chunk=4 prefill_budget=1")
+    print(f"  {'layout':<12} {'preempt':>8} {'restore':>8} "
+          f"{'cancelled':>9} {'expired':>7} {'survivors':>9}")
+    out = {}
+    for layout in layouts:
+        if layout == "paged" and get_arch(args.kv_arch).is_attention_free:
+            print("  (paged cell skipped: attention-free arch — no KV "
+                  "pages to spill)")
+            continue
+        out[layout] = _pressure_cell(args, layout)
+    print("  (survivor outputs bit-identical to unpressured run; all "
+          "pools conserved)")
+    return out
+
+
+def run_open_loop(args):
+    """The --arrival poisson section: open-loop latency under load.
+
+    Arrivals land at seeded exponential gaps on the wall clock whether or
+    not the engine has kept up (open loop), with mixed priorities and an
+    undersized paged pool, so queueing delay — and, under the squeeze,
+    preemption — shows up in the TTFT tail instead of being absorbed by a
+    closed feedback loop."""
+    cfg = get_arch(args.kv_arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n, gen = args.requests, args.gen
+    rng = np.random.default_rng(args.arrival_seed)
+    lo, hi = 4, 17
+    prompts = [
+        rng.integers(0, cfg.vocab_size,
+                     size=int(rng.integers(lo, hi))).tolist()
+        for _ in range(n)
+    ]
+    prios = [int(rng.integers(0, 2)) for _ in range(n)]
+    gaps = rng.exponential(1.0 / args.rate, size=n)
+    gaps[0] = 0.0
+    arrivals = np.cumsum(gaps)
+    max_len = hi + gen + 1
+    kw = {}
+    if not cfg.is_attention_free:
+        from repro.serving.pager import pages_needed
+        page = args.page_size
+        full_pool = args.batch * (-(-max_len // page))
+        max_need = max(pages_needed(len(p) + gen, page) for p in prompts)
+        kw = dict(layout="paged", page_size=page,
+                  n_pages=max(max_need, (2 * full_pool) // 3))
+    eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
+                        steps_per_sync=args.steps_per_sync, **kw)
+    with _audit_ctx(eng, args.audit):
+        for _ in range(args.batch):        # compile outside the clock
+            eng.submit([1, 2, 3], 2)
+        eng.run()
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        nxt = 0
+        while nxt < n or len(eng.outputs) < n:
+            now = time.perf_counter() - t0
+            while nxt < n and arrivals[nxt] <= now:
+                eng.submit(prompts[nxt], gen, priority=prios[nxt])
+                nxt += 1
+            if eng.queue or any(r is not None for r in eng._slot_req):
+                eng.step()
+            elif nxt < n:
+                time.sleep(min(1e-3, max(0.0, arrivals[nxt] - now)))
+        dt = time.perf_counter() - t0
+    ttft = np.asarray(sorted(eng.ttft.values()))
+    row = {
+        "requests": n, "rate": args.rate, "seconds": dt,
+        "tok_s": eng.generated / dt,
+        "ttft_ms_p50": 1e3 * float(np.percentile(ttft, 50)),
+        "ttft_ms_p99": 1e3 * float(np.percentile(ttft, 99)),
+        "preemptions": eng.preemptions, "restores": eng.restores,
+    }
+    print(f"arch={args.kv_arch} requests={n} batch={args.batch} gen={gen} "
+          f"rate={args.rate}/s seed={args.arrival_seed}"
+          + (f" pool={kw['n_pages']}p" if "n_pages" in kw else ""))
+    print(f"  {'gen tok/s':>10} {'TTFT p50 ms':>12} {'TTFT p99 ms':>12} "
+          f"{'preempt':>8} {'restore':>8}")
+    print(f"  {row['tok_s']:>10.1f} {row['ttft_ms_p50']:>12.1f} "
+          f"{row['ttft_ms_p99']:>12.1f} {row['preemptions']:>8d} "
+          f"{row['restores']:>8d}")
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-2.7b-smoke")
@@ -395,6 +605,20 @@ def main(argv=None):
     ap.add_argument("--share-prefix-len", type=int, default=256,
                     help="shared system-prompt length for the "
                          "prefix-sharing ablation")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the pressure cell: preemption + host spill "
+                         "under a scripted FaultPlan (pool exhaustion, "
+                         "cancel, deadline storm) with survivor "
+                         "token-identity and conservation asserts")
+    ap.add_argument("--arrival", choices=["batch", "poisson"],
+                    default="batch",
+                    help="'poisson' adds an open-loop cell: seeded "
+                         "exponential inter-arrival gaps on the wall "
+                         "clock, p50/p99 TTFT + preemption counts")
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="open-loop arrival rate, requests/second")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="seed for the open-loop arrival process")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal sizes: CI driver-rot check, not a benchmark")
@@ -469,6 +693,15 @@ def main(argv=None):
         print()
         print("-- Prefix sharing: shared system prompt, CoW (paged) --")
         out["sharing"] = compare_prefix_sharing(args)
+    if args.faults:
+        print()
+        print(f"-- Pressure: preemption/spill + FaultPlan "
+              f"(layout={args.layout}) --")
+        out["pressure"] = run_pressure(args)
+    if args.arrival == "poisson":
+        print()
+        print("-- Open loop: poisson arrivals, TTFT under load --")
+        out["open_loop"] = run_open_loop(args)
     if args.json:
         import json
 

@@ -50,17 +50,21 @@ python -m pip install -q -r requirements-dev.txt ||
 #
 # Every smoke invocation runs under --audit (repro.analysis's
 # jit_cache_audit): a benchmark driver that retraces fails the cell
-# instead of reporting bogus tok/s.
+# instead of reporting bogus tok/s.  --faults adds the pressure cell to
+# each pass: a small pool plus a scripted FaultPlan (preemption/host
+# spill, cancel, deadline storm) with survivor token-identity and
+# pool-conservation asserts — under the paged layout the jitted
+# _spill/_restore pair is audited too.
 smoke() {
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1" --audit
+            --layout "$1" --audit --faults
     echo "== smoke (recurrent): family=hybrid layout=$1 =="
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1" --family hybrid --audit
+            --layout "$1" --family hybrid --audit --faults
 }
 
 case "${1:-}" in

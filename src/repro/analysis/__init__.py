@@ -82,7 +82,8 @@ Runtime auditors (``repro.analysis.audit``)
 ===========================================
 
 ``jit_cache_audit(engine)`` wraps the engine's jitted entry points
-(``_step_n``/``_admit``/``_prefill``/``_release``) and raises
+(``_step_n``/``_admit``/``_prefill``/``_release``/``_spill``/``_restore``
+— absent or ``None`` attributes are skipped) and raises
 ``JitCacheRetrace`` the moment any of them retraces (cache size > 1) —
 run it over a mixed prefill/decode/admission workload to prove the
 cache-size-1 standing note.  ``no_transfer_audit()`` arms

@@ -18,8 +18,11 @@ class JitCacheRetrace(AssertionError):
     """A jitted engine entry point retraced (cache size grew past 1)."""
 
 
-#: Engine attributes wrapped by default — the four jitted entry points.
-ENGINE_JIT_FNS = ("_step_n", "_admit", "_prefill", "_release")
+#: Engine attributes wrapped by default — every jitted entry point
+#: (``_prefill`` only exists with chunked prefill; ``_spill``/``_restore``
+#: only on two-tier-pager engines — absent/None attributes are skipped).
+ENGINE_JIT_FNS = ("_step_n", "_admit", "_prefill", "_release",
+                  "_spill", "_restore")
 
 
 class JitCacheReport:
@@ -65,11 +68,10 @@ def jit_cache_audit(
     naming the function, instead of silently re-compiling (and, in a
     benchmark, reporting bogus tok/s).  Growth is measured against a
     baseline taken at wrap time because jax shares a jit cache between
-    wrappers of the same underlying callable — e.g. every engine's
-    ``_release`` is ``jax.jit(model.reset_decode_rows, ...)``, so a
-    second engine over the same model starts with that cache warm; the
-    invariant is "this workload compiled each entry point at most
-    once", not an absolute cache size.  Yields a
+    wrappers of the same underlying callable — a re-used engine (or one
+    sharing a closure with a previous audit) may start with that cache
+    warm; the invariant is "this workload compiled each entry point at
+    most once", not an absolute cache size.  Yields a
     :class:`JitCacheReport`; originals are restored on exit.
     """
     report = JitCacheReport()

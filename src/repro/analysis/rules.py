@@ -161,7 +161,19 @@ class R002ImplicitHostSync(Rule):
                 "_step_n",
                 "_admit",
                 "_prefill_step",
+                "_release",
+                "_spill",
+                "_restore",
                 "_refill",
+                "_plan_admission",
+                "_try_preempt",
+                "_try_restore",
+                "_expire_queued",
+                "_apply_faults",
+                "_effective_pages",
+                "_req_key",
+                "_drop_row",
+                "cancel",
                 "_advance_mirror",
                 "_chunk_limit",
                 "_prompt_phase_rows",
@@ -181,6 +193,8 @@ class R002ImplicitHostSync(Rule):
                 "_snap_capture",
                 "restore_snapshots",
                 "reset_decode_rows",
+                "spill_rows",
+                "restore_rows",
             }
         ),
     }

@@ -414,6 +414,7 @@ def mamba_decode_block(
     cfg: ArchConfig, p: Params, x: jax.Array,
     ssm_state: jax.Array,      # (B, H, P, N)
     conv_state: jax.Array,     # (B, K-1, di)
+    valid: Optional[jax.Array] = None,   # (B, 1) bool; None = all rows live
 ):
     """Single-token decode — the C=1 case of ``mamba_prefill_block``.
 
@@ -421,9 +422,16 @@ def mamba_decode_block(
     chunked scan's degenerate case, not a second implementation kept in
     parity by hand (the dispatch layer may still pick a cheaper lowering
     for S=1 — specialization stays below this line).
+
+    ``valid`` is the per-row liveness mask: a False row carries both
+    recurrent states through untouched (the width-0 no-op documented on
+    ``mamba_prefill_block``).  The serving engine relies on this for
+    preempted/spilled rows, whose live state must survive in place while
+    the lane idles; ``None`` keeps the historical all-rows-live default.
     """
+    if valid is None:
+        valid = jnp.ones((x.shape[0], 1), bool)
     y, ssm_state, conv_state = mamba_prefill_block(
-        cfg, p, x[:, None], ssm_state, conv_state,
-        jnp.ones((x.shape[0], 1), bool),
+        cfg, p, x[:, None], ssm_state, conv_state, valid
     )
     return y[:, 0], ssm_state, conv_state

@@ -209,6 +209,7 @@ def init_decode_state(
     cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False,
     layout: str = "contiguous", page_size: int = 16,
     n_pages: Optional[int] = None, snapshots: bool = False,
+    host_spill: bool = False,
 ) -> Dict[str, jax.Array]:
     """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
     rows may sit at different sequence depths (continuous batching).
@@ -230,6 +231,16 @@ def init_decode_state(
     sharer restores the donor's state at the last shared page boundary
     instead of re-running the recurrence.  Attention-only families ignore
     the flag (they have no recurrent carry to snapshot).
+
+    ``host_spill=True`` (paged layout with KV pages only) adds the host
+    tier behind preemption: mirror pools (``hkp``/``hvp`` and, with
+    snapshots, ``hsnap_ssm``/``hsnap_conv``), per-row host tables, and a
+    second refcounted free list per space, all sized at the worst case
+    (``batch x max_blocks`` slots) so a spill can never find the host
+    free list dry.  ``spill_rows``/``restore_rows`` move a row between
+    tiers; families without KV pages (pure ssm, contiguous layouts)
+    ignore the flag — they have no page pool to relieve, so the engine
+    never preempts them.
     """
     if layout not in ("contiguous", "paged"):
         raise ValueError(f"unknown KV-cache layout {layout!r}")
@@ -254,7 +265,7 @@ def init_decode_state(
         max_blocks = -(-max_len // page_size)
         pages = batch * max_blocks if n_pages is None else n_pages
         ps = P.init_pager(pages)
-        return {
+        out = {
             "kp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
             "vp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
             "block_table": P.init_block_table(batch, max_blocks),
@@ -262,8 +273,26 @@ def init_decode_state(
             "page_top": ps.top,
             "page_rc": ps.rc,
         }
+        if host_spill:
+            # host tier: worst-case sizing (every row fully resident, all
+            # spilled at once) so spill pops can never run dry
+            n_hslots = batch * max_blocks
+            hs = P.init_pager(n_hslots)
+            out.update({
+                "hkp": jnp.zeros(
+                    (stacks, n_hslots, page_size, hkv, hd), dt
+                ),
+                "hvp": jnp.zeros(
+                    (stacks, n_hslots, page_size, hkv, hd), dt
+                ),
+                "host_table": P.init_block_table(batch, max_blocks),
+                "host_free": hs.free,
+                "host_top": hs.top,
+                "host_rc": hs.rc,
+            })
+        return out
 
-    def snap_store() -> Dict[str, jax.Array]:
+    def snap_store(host: bool = False) -> Dict[str, jax.Array]:
         # worst-case slot pool: every row can snapshot every boundary it
         # can ever reach, so — like the page reservation ledger — the
         # allocator can never run dry mid-request (slots a dead donor
@@ -273,7 +302,7 @@ def init_decode_state(
         n_bound = -(-max_len // page_size)
         n_slots = batch * n_bound
         ps = P.init_pager(n_slots)
-        return {
+        out = {
             "snap_ssm": jnp.zeros(
                 (n_slots, cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim,
                  cfg.ssm_state), jnp.float32,
@@ -286,6 +315,19 @@ def init_decode_state(
             "snap_top": ps.top,
             "snap_rc": ps.rc,
         }
+        if host:
+            # host snapshot tier (spillable families only): boundary space
+            # mirrors at the same worst case as the device slot pool
+            hs = P.init_pager(n_slots)
+            out.update({
+                "hsnap_ssm": jnp.zeros_like(out["snap_ssm"]),
+                "hsnap_conv": jnp.zeros_like(out["snap_conv"]),
+                "hsnap_table": P.init_block_table(batch, n_bound),
+                "hsnap_free": hs.free,
+                "hsnap_top": hs.top,
+                "hsnap_rc": hs.rc,
+            })
+        return out
 
     if cfg.family in ("dense", "moe"):
         if layout == "paged":
@@ -313,7 +355,7 @@ def init_decode_state(
             (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dt
         )
         if snapshots:
-            state.update(snap_store())
+            state.update(snap_store(host=host_spill and layout == "paged"))
         if layout == "paged":
             state.update(paged_kv(g))
             return state
@@ -502,6 +544,124 @@ def restore_snapshots(state, mask: jax.Array, src: jax.Array,
             "snap_top": sstate.top, "snap_rc": sstate.rc}
 
 
+def spill_rows(
+    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array,  # (B,) bool
+) -> Dict[str, jax.Array]:
+    """Preemption: move the masked rows' KV pages — and, with a snapshot
+    store, their boundary snapshot slots — to the host tier.
+
+    Bookkeeping runs through ``pager.spill_rows`` (host slot per mapped
+    block, then a device-side release; shared pages stay resident for
+    their peers while the victim gets a private host copy) and the data
+    moves through ``pager.copy_pages`` in the same jitted call.  The
+    row's *lane* state (``pos``, live ssm/conv carries) stays in place —
+    a spilled row keeps its slot and simply idles with ``active=False``;
+    only pool residency moves.  Requires
+    ``init_decode_state(host_spill=True)``.
+    """
+    from repro.serving import pager as PG
+
+    if "host_table" not in state:
+        raise ValueError(
+            "spill_rows needs init_decode_state(host_spill=True) paged state"
+        )
+    pstate = PG.PagerState(
+        state["page_free"], state["page_top"], state["page_rc"]
+    )
+    hstate = PG.PagerState(
+        state["host_free"], state["host_top"], state["host_rc"]
+    )
+    pstate, bt, hstate, ht, src, dst = PG.spill_rows(
+        pstate, state["block_table"], hstate, state["host_table"], mask
+    )
+    out = {**state,
+           "hkp": PG.copy_pages(state["hkp"], state["kp"], src, dst),
+           "hvp": PG.copy_pages(state["hvp"], state["vp"], src, dst),
+           "block_table": bt, "page_free": pstate.free,
+           "page_top": pstate.top, "page_rc": pstate.rc,
+           "host_table": ht, "host_free": hstate.free,
+           "host_top": hstate.top, "host_rc": hstate.rc}
+    if "hsnap_table" in state:
+        sstate = PG.PagerState(
+            state["snap_free"], state["snap_top"], state["snap_rc"]
+        )
+        hs = PG.PagerState(
+            state["hsnap_free"], state["hsnap_top"], state["hsnap_rc"]
+        )
+        sstate, stbl, hs, hstbl, ssrc, sdst = PG.spill_rows(
+            sstate, state["snap_table"], hs, state["hsnap_table"], mask
+        )
+        out.update({
+            "hsnap_ssm": PG.copy_pages(
+                state["hsnap_ssm"], state["snap_ssm"], ssrc, sdst, axis=0
+            ),
+            "hsnap_conv": PG.copy_pages(
+                state["hsnap_conv"], state["snap_conv"], ssrc, sdst, axis=0
+            ),
+            "snap_table": stbl, "snap_free": sstate.free,
+            "snap_top": sstate.top, "snap_rc": sstate.rc,
+            "hsnap_table": hstbl, "hsnap_free": hs.free,
+            "hsnap_top": hs.top, "hsnap_rc": hs.rc,
+        })
+    return out
+
+
+def restore_rows(
+    cfg: ArchConfig, state: Dict[str, jax.Array], mask: jax.Array,  # (B,) bool
+) -> Dict[str, jax.Array]:
+    """The exact mirror of ``spill_rows``: re-allocate device pages (and
+    snapshot slots) for the masked rows' host-table entries, copy the
+    content back, and release the host slots.  A restored row owns its
+    pages privately (rc == 1) even where it used to share — the caller's
+    reservation ledger must already cover the row's worst-case page
+    count so the device pops cannot run dry."""
+    from repro.serving import pager as PG
+
+    if "host_table" not in state:
+        raise ValueError(
+            "restore_rows needs init_decode_state(host_spill=True) paged state"
+        )
+    pstate = PG.PagerState(
+        state["page_free"], state["page_top"], state["page_rc"]
+    )
+    hstate = PG.PagerState(
+        state["host_free"], state["host_top"], state["host_rc"]
+    )
+    pstate, bt, hstate, ht, src, dst = PG.restore_rows(
+        pstate, state["block_table"], hstate, state["host_table"], mask
+    )
+    out = {**state,
+           "kp": PG.copy_pages(state["kp"], state["hkp"], src, dst),
+           "vp": PG.copy_pages(state["vp"], state["hvp"], src, dst),
+           "block_table": bt, "page_free": pstate.free,
+           "page_top": pstate.top, "page_rc": pstate.rc,
+           "host_table": ht, "host_free": hstate.free,
+           "host_top": hstate.top, "host_rc": hstate.rc}
+    if "hsnap_table" in state:
+        sstate = PG.PagerState(
+            state["snap_free"], state["snap_top"], state["snap_rc"]
+        )
+        hs = PG.PagerState(
+            state["hsnap_free"], state["hsnap_top"], state["hsnap_rc"]
+        )
+        sstate, stbl, hs, hstbl, ssrc, sdst = PG.restore_rows(
+            sstate, state["snap_table"], hs, state["hsnap_table"], mask
+        )
+        out.update({
+            "snap_ssm": PG.copy_pages(
+                state["snap_ssm"], state["hsnap_ssm"], ssrc, sdst, axis=0
+            ),
+            "snap_conv": PG.copy_pages(
+                state["snap_conv"], state["hsnap_conv"], ssrc, sdst, axis=0
+            ),
+            "snap_table": stbl, "snap_free": sstate.free,
+            "snap_top": sstate.top, "snap_rc": sstate.rc,
+            "hsnap_table": hstbl, "hsnap_free": hs.free,
+            "hsnap_top": hs.top, "hsnap_rc": hs.rc,
+        })
+    return out
+
+
 def decode_step(
     cfg: ArchConfig, params, state, token: jax.Array,  # (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
@@ -607,10 +767,15 @@ def decode_step(
         x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state[kk], state[vk]))
         state = {**state, kk: ks, vk: vs}
     elif fam == "ssm":
+        # inactive (idle or spilled) rows must carry their recurrent state
+        # through *untouched* — a spilled row's live ssm/conv is the part
+        # of its context that never leaves the lane
+        val = active[:, None] if active is not None else None
+
         def body(x, inp):
             p, s_ssm, s_conv = inp
             x, s_ssm, s_conv = C.mamba_decode_block(
-                cfg, p["mamba"], x, s_ssm, s_conv
+                cfg, p["mamba"], x, s_ssm, s_conv, valid=val
             )
             return x, (s_ssm, s_conv)
         x, (ssm, conv) = jax.lax.scan(
@@ -622,13 +787,16 @@ def decode_step(
         a = cfg.attn_every
         ssm_g = state["ssm"].reshape(g, a, *state["ssm"].shape[1:])
         conv_g = state["conv"].reshape(g, a, *state["conv"].shape[1:])
+        val = active[:, None] if active is not None else None
 
         def group(x, inp):
             gp, s_ssm, s_conv, ck, cv = inp
 
             def inner(x, i2):
                 p, s1, s2 = i2
-                x, s1, s2 = C.mamba_decode_block(cfg, p["mamba"], x, s1, s2)
+                x, s1, s2 = C.mamba_decode_block(
+                    cfg, p["mamba"], x, s1, s2, valid=val
+                )
                 return x, (s1, s2)
             x, (s_ssm, s_conv) = jax.lax.scan(inner, x, (gp, s_ssm, s_conv))
             x, ck, cv = attn_dec(params["shared_attn"], x, ck, cv)
@@ -902,7 +1070,12 @@ def reset_decode_rows(
                   "page_rc"}
     snap_keys = {"snap_ssm", "snap_conv", "snap_table", "snap_free",
                  "snap_top", "snap_rc"}
-    unknown = set(state) - known - paged_keys - snap_keys - {"pos"}
+    host_keys = {"hkp", "hvp", "host_table", "host_free", "host_top",
+                 "host_rc"}
+    hsnap_keys = {"hsnap_ssm", "hsnap_conv", "hsnap_table", "hsnap_free",
+                  "hsnap_top", "hsnap_rc"}
+    unknown = (set(state) - known - paged_keys - snap_keys - host_keys
+               - hsnap_keys - {"pos"})
     if unknown:
         # fail loudly: a silently-skipped cache key would leak the previous
         # request's state into the slot's next occupant
@@ -943,6 +1116,32 @@ def reset_decode_rows(
         out["snap_table"] = stbl
         out["snap_free"], out["snap_top"] = sstate.free, sstate.top
         out["snap_rc"] = sstate.rc
+    if "host_table" in state:
+        # a row cancelled *while spilled* drains through the same path:
+        # its host slots are released exactly like device pages (host
+        # copies are private — rc == 1 — so they always return to the
+        # host free list; the pools are never zeroed)
+        from repro.serving import pager as PG
+
+        hstate, ht = PG.release_rows(
+            PG.PagerState(state["host_free"], state["host_top"],
+                          state["host_rc"]),
+            state["host_table"], mask,
+        )
+        out["host_table"] = ht
+        out["host_free"], out["host_top"] = hstate.free, hstate.top
+        out["host_rc"] = hstate.rc
+    if "hsnap_table" in state:
+        from repro.serving import pager as PG
+
+        hs, hstbl = PG.release_rows(
+            PG.PagerState(state["hsnap_free"], state["hsnap_top"],
+                          state["hsnap_rc"]),
+            state["hsnap_table"], mask,
+        )
+        out["hsnap_table"] = hstbl
+        out["hsnap_free"], out["hsnap_top"] = hs.free, hs.top
+        out["hsnap_rc"] = hs.rc
     for key in known & set(state):
         v = state[key]
         # batch axis: (layers/groups, B, ...) except the VLM self-attn cache,

@@ -35,6 +35,11 @@ class Model:
     # (state, mask, src, nblk) -> state; None for families without a
     # recurrent-state snapshot store
     restore_snapshots: Callable[..., Dict[str, jax.Array]] = None
+    # preemption (two-tier pager, ``init_decode_state(host_spill=True)``):
+    # (state, mask) -> state moving the masked rows' KV pages + snapshot
+    # slots to/from the host tier; None for families without KV pages
+    spill_rows: Callable[..., Dict[str, jax.Array]] = None
+    restore_rows: Callable[..., Dict[str, jax.Array]] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -90,4 +95,6 @@ def build_model(cfg: ArchConfig) -> Model:
             lm.prefill_chunk(cfg, params, state, toks, width, **kw),
         restore_snapshots=lambda state, mask, src, nblk:
             lm.restore_snapshots(state, mask, src, nblk),
+        spill_rows=lambda state, mask: lm.spill_rows(cfg, state, mask),
+        restore_rows=lambda state, mask: lm.restore_rows(cfg, state, mask),
     )

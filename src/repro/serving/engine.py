@@ -54,6 +54,17 @@ row per decode step.  Here the whole control state lives on-device:
     token — the recurrence is *restored*, never skipped.  Shared depth is
     capped below the prompt's last token so the resume point is always a
     snapshotted boundary (recurrent sharing therefore never needs CoW).
+  * pressure — the engine survives a pool smaller than its working set:
+    when the queue head cannot reserve pages, the host-mirror scheduler
+    preempts victim rows (lowest priority, then least progress),
+    spilling their pages — and, for recurrent families, their snapshot
+    slots — to a host-side tier through a jitted ``_spill`` (two-tier
+    contract in ``repro.serving.pager``) and restoring them when pages
+    free up.  ``cancel()`` and per-request deadlines drain rows through
+    the same jitted release path at the next harvest, and
+    ``repro.serving.faults.FaultPlan`` scripts deterministic pressure
+    (pool exhaustion, cancels, deadline storms, poisoned rows) against
+    the harvest-cycle clock for the CI harness.
 
 Supported families: dense / moe / ssm / hybrid (everything whose decode
 state supports per-row positions; VLM cross-caches would additionally need
@@ -67,13 +78,14 @@ isolated decode holds when ``capacity_factor >= n_experts``.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Set
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.faults import FaultPlan
 from repro.serving.queue import Request, RequestQueue
 
 
@@ -268,6 +280,35 @@ class ServingEngine:
     alloc-on-write sync-free and never dry.  The snapshot-slot pool is
     sized to the same worst case at construction (every row can
     snapshot every boundary it can reach), so it needs no ledger at all.
+
+    Scheduler contract (preemption / deadlines / cancellation).
+    Admission orders the queue by (priority desc, deadline budget asc,
+    arrival asc).  When the head cannot reserve its worst-case pages
+    under the ledger, the scheduler spills victims — resident rows of
+    *strictly lower* priority, lowest priority first, then least
+    progress (least work lost), then oldest — through the jitted
+    ``_spill``: a spill moves the row's KV pages (and snapshot slots)
+    to the host tier, keeps its ``SlotState`` lane and live recurrent
+    state in place, and returns its reservation to the pool.  Victims
+    are committed only if they actually admit the head (no thrashing
+    spills).  Spilled rows restore (highest priority, then oldest,
+    first) as soon as their worst-case reservation fits again — the
+    reservation gate is what guarantees the jitted restore's device
+    pops never find the free list dry — deferring to a strictly-
+    higher-priority queue head that could itself fit.  ``cancel(
+    req_id)`` and deadline expiry (absolute time ``submit +
+    deadline_ms``) take effect at the next harvest: still-queued
+    requests leave the queue immediately; resident, mid-prefill, and
+    spilled rows drain through the jitted release path, surrendering
+    pages and slots in every tier with no payload recorded.
+    ``prefill_budget`` bounds chunked-prefill steps per cycle so a
+    long prompt cannot monopolize a harvest interval (TTFT
+    interference control); leftover prompt tokens continue next cycle
+    or token-by-token inside the fused decode call.  A ``FaultPlan``
+    (``fault_plan=`` or ``set_fault_plan``) scripts pool exhaustion,
+    cancels, deadline storms, and poisoned rows against the
+    harvest-cycle clock — injections ride the normal scheduler paths
+    above, never a parallel code path.
     """
 
     def __init__(
@@ -286,6 +327,9 @@ class ServingEngine:
         seed: int = 0,
         prefill_chunk: int = 1,
         prefix_sharing: bool = False,
+        prefill_budget: int = 0,
+        host_spill: Optional[bool] = None,
+        fault_plan: Optional[FaultPlan] = None,
     ) -> None:
         if model.cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise NotImplementedError(
@@ -319,12 +363,19 @@ class ServingEngine:
         self.prefix_sharing = bool(prefix_sharing)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        prefill_budget = int(prefill_budget)
+        if prefill_budget < 0:
+            raise ValueError("prefill_budget must be >= 0 (0 = unbounded)")
+        self.prefill_budget = prefill_budget
         self.queue = RequestQueue(max_len=max_len)
 
+        if host_spill is None:
+            # preemption only makes sense where there are pages to spill
+            host_spill = layout == "paged"
         self._mstate = model.init_decode_state(
             batch, max_len, per_row_pos=True,
             layout=layout, page_size=page_size, n_pages=n_pages,
-            snapshots=prefix_sharing,
+            snapshots=prefix_sharing, host_spill=host_spill,
         )
         # attention-free families have no pages regardless of the flag
         self._paged = "block_table" in self._mstate
@@ -346,6 +397,17 @@ class ServingEngine:
         self._pages_reserved = 0
         self.peak_pages_in_use = 0
         self.peak_snaps_in_use = 0
+        # two-tier pager (preemption): present exactly when the state has
+        # a host tier (paged layout + a family with KV pages)
+        self._spillable = "host_table" in self._mstate
+        # spill mirrors: a spilled row keeps its SlotState lane (tokens,
+        # progress, live recurrent state) — only pool residency and the
+        # reservation move; _spill_need remembers the worst-case pages to
+        # re-reserve at restore
+        self._row_spilled: List[bool] = [False] * batch
+        self._spill_need: List[int] = [0] * batch
+        self.preemptions = 0
+        self.restores = 0
         # every family shares: dense/moe through aliased KV pages, ssm
         # through restored state snapshots, hybrid through both
         self._share_eligible = self.prefix_sharing and (
@@ -379,10 +441,12 @@ class ServingEngine:
             )
 
         self._slots = init_slots(batch, max_len)
-        # per-request key *data* is drawn host-side (no device round-trip
-        # on the admission path); rows feed it to jax.random as a raw
-        # uint32 key only when sampling is on
-        self._host_rng = np.random.Generator(np.random.Philox(seed))
+        # per-request key *data* is derived host-side from (engine seed,
+        # req_id) — no device round-trip on the admission path, and the
+        # stream is a pure function of the request's identity, so
+        # admission *order* (which priorities and preemption reshuffle)
+        # cannot perturb any row's tokens
+        self._seed = int(seed)
         # host mirror: which request occupies each row (None = free)
         self._slot_req: List[Optional[Request]] = [None] * batch
         # host mirror of per-row progress: the step schedule (chunk widths,
@@ -397,6 +461,18 @@ class ServingEngine:
         self.prompt_tokens = 0  # prompt tokens ingested (host arithmetic)
         self.ttft: Dict[int, float] = {}        # req_id -> seconds
         self._t_submit: Dict[int, float] = {}
+        # SLO / cancellation ledgers (host mirror; enforcement happens at
+        # refill for queued requests and at harvest for resident rows)
+        self._deadline: Dict[int, float] = {}   # req_id -> absolute expiry
+        self._cancel_req: Set[int] = set()      # resident, pending drain
+        self._poison_req: Set[int] = set()
+        self.cancelled: Set[int] = set()        # records (never completed)
+        self.expired: Set[int] = set()
+        self.poisoned: Set[int] = set()
+        # fault-injection harness: harvest-cycle clock + hostage pages
+        self.fault_plan = fault_plan
+        self._cycle = 0
+        self._fault_hold_pages = 0
 
         # the CoW pass only exists in traces that can ever share a page
         # (static per engine): non-sharing paged engines keep the plain
@@ -409,16 +485,27 @@ class ServingEngine:
         snap_every = page_size if self._snap else 0
         self._snap_every = snap_every
 
-        def _step_n(params, mstate, slots):
+        def _step_n(params, mstate, slots, run):
+            # ``run`` freezes rows for this fused call without touching
+            # their lanes: a ``prefill_budget`` stop leaves rows mid-
+            # prompt, and advancing them token-by-token here would shift
+            # their remaining chunk boundaries off the unpressured
+            # schedule (chunk partitioning changes reduction order, so
+            # logits — and near-tie argmaxes — would drift).  Frozen rows
+            # resume chunked prefill next cycle on the exact baseline
+            # widths; ``run`` is data, so the trace stays at cache size 1.
             def body(_, carry):
                 ms, sl = carry
                 return engine_step(model, params, ms, sl,
                                    temperature=self.temperature,
                                    top_k=self.top_k, cow=cow,
                                    snap_every=snap_every)
-            return jax.lax.fori_loop(
-                0, steps_per_sync, body, (mstate, slots)
+            frozen = slots.active & ~run
+            mstate, out = jax.lax.fori_loop(
+                0, steps_per_sync, body,
+                (mstate, slots._replace(active=slots.active & run)),
             )
+            return mstate, out._replace(active=out.active | frozen)
 
         paged = self._paged
         snap = self._snap
@@ -458,10 +545,40 @@ class ServingEngine:
                 rng=jnp.where(mask[:, None], new_rng, slots.rng),
             )
 
+        def _release(mstate, slots, mask):
+            # harvest drain: scrub the rows' caches and release their
+            # pages/slots in *every* tier (device, host, snapshots), and
+            # deactivate the lanes — a cancelled or expired row may still
+            # be device-active; a finished one already is not
+            return model.reset_decode_rows(mstate, mask), slots._replace(
+                active=slots.active & ~mask
+            )
+
         self._step_n = jax.jit(_step_n, donate_argnums=(1, 2))
         self._admit = jax.jit(_admit, donate_argnums=(0, 1))
-        # harvest-time page release (and cache scrub) for finished rows
-        self._release = jax.jit(model.reset_decode_rows, donate_argnums=(0,))
+        self._release = jax.jit(_release, donate_argnums=(0, 1))
+
+        if self._spillable:
+            # preemption data plane: pool residency moves tiers; the row's
+            # SlotState lane and live recurrent state stay put (a spilled
+            # row is just an inactive lane to the decode step, which is
+            # why ``decode_step`` masks recurrent-state writes by
+            # ``active`` — see ``mamba_decode_block``'s ``valid``)
+            def _spill(mstate, slots, mask):
+                return model.spill_rows(mstate, mask), slots._replace(
+                    active=slots.active & ~mask
+                )
+
+            def _restore(mstate, slots, mask):
+                return model.restore_rows(mstate, mask), slots._replace(
+                    active=slots.active | mask
+                )
+
+            self._spill = jax.jit(_spill, donate_argnums=(0, 1))
+            self._restore = jax.jit(_restore, donate_argnums=(0, 1))
+        else:
+            self._spill = None
+            self._restore = None
 
         if prefill_chunk > 1:
             def _prefill_step(params, mstate, slots):
@@ -475,18 +592,90 @@ class ServingEngine:
 
     # -- request intake ------------------------------------------------------
 
-    def submit(self, tokens, max_new_tokens: int) -> int:
+    def submit(self, tokens, max_new_tokens: int, *, priority: int = 0,
+               deadline_ms: Optional[float] = None) -> int:
+        """Queue a request.  ``priority`` (larger = more important) and
+        ``deadline_ms`` (SLO budget from now; None = none) feed the
+        scheduler contract in the class docstring.  Rejections —
+        over-length, empty, pool-impossible, queue-full — always name the
+        request id they rejected."""
         if self._paged:
             need = self._pages_needed(len(tokens) + max_new_tokens)
             if need > self.n_pages:
-                # reject now: the FIFO would otherwise starve behind a
+                # reject now: the queue would otherwise starve behind a
                 # request that can never reserve enough pages
+                rid = self.queue.peek_next_id()
                 raise ValueError(
-                    f"request needs {need} pages > pool size {self.n_pages}"
+                    f"request {rid}: needs {need} pages > pool size "
+                    f"{self.n_pages} (prompt {len(tokens)} + "
+                    f"{max_new_tokens} new, page_size {self.page_size})"
                 )
-        rid = self.queue.submit(tokens, max_new_tokens)
-        self._t_submit[rid] = time.perf_counter()
+        rid = self.queue.submit(tokens, max_new_tokens, priority=priority,
+                                deadline_ms=deadline_ms)
+        now = time.perf_counter()
+        self._t_submit[rid] = now
+        if deadline_ms is not None:
+            self._deadline[rid] = now + deadline_ms / 1e3
         return rid
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request wherever it lives.  Still-queued: removed
+        immediately.  Resident — device-active, mid-prefill, or spilled
+        to the host tier: marked, then drained through the jitted release
+        path at the next harvest (pages and snapshot slots return to
+        their pools in every tier; no output is recorded).  Returns False
+        when the id is unknown or already finished."""
+        req = self.queue.cancel(req_id)
+        if req is not None:
+            self.cancelled.add(req_id)
+            self._deadline.pop(req_id, None)
+            self._t_submit.pop(req_id, None)
+            return True
+        for r in self._slot_req:
+            if r is not None and r.req_id == req_id:
+                self._cancel_req.add(req_id)
+                return True
+        return False
+
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> None:
+        """Arm a plan with the harvest-cycle clock rewound to 0 (benchmark
+        drivers arm after compile warm-up so event cycles land on a
+        schedule-stable clock)."""
+        self.fault_plan = plan
+        self._cycle = 0
+
+    def _apply_faults(self) -> None:
+        """Fire the armed plan's events for the current harvest cycle.
+        Every injection flows through the normal scheduler paths
+        (``repro.serving.faults`` documents the kinds)."""
+        if self.fault_plan is None:
+            return
+        for e in self.fault_plan.at(self._cycle):
+            if e.kind == "exhaust_pool":
+                self._fault_hold_pages = min(e.pages, self.n_pages)
+            elif e.kind == "release_pool":
+                self._fault_hold_pages = 0
+            elif e.kind == "cancel":
+                self.cancel(e.req_id)
+            elif e.kind == "deadline":
+                self._deadline[e.req_id] = (
+                    time.perf_counter() + e.deadline_ms / 1e3
+                )
+            elif e.kind == "poison":
+                self._poison_req.add(e.req_id)
+
+    def _effective_pages(self) -> int:
+        """Pool size the reservation ledger admits against — shrunk while
+        an ``exhaust_pool`` fault holds pages hostage."""
+        return self.n_pages - self._fault_hold_pages
+
+    def _req_key(self, req_id: int) -> np.ndarray:
+        """Per-request sampling key, a pure function of (engine seed,
+        req_id) — see the ``_seed`` comment in ``__init__``."""
+        gen = np.random.Generator(
+            np.random.Philox(np.random.SeedSequence((self._seed, req_id)))
+        )
+        return gen.integers(0, 2 ** 32, size=2, dtype=np.uint32)
 
     def _pages_needed(self, total_len: int) -> int:
         from repro.serving.pager import pages_needed
@@ -512,7 +701,8 @@ class ServingEngine:
             if ent is not None:
                 src, src_ep = ent
                 if (src_ep == self._slot_epoch[src]
-                        and self._slot_req[src] is not None):
+                        and self._slot_req[src] is not None
+                        and not self._row_spilled[src]):
                     # a live row already serves this chunk: keep it (a
                     # sharer overwriting its donor would take the entry
                     # to its own — likely earlier — grave, leaving the
@@ -539,9 +729,10 @@ class ServingEngine:
             # onward — without this, a shared prefix would go unmatchable
             # the moment its original donor finishes, even though the
             # pages live on (re-registration only fills gaps; entries that
-            # still point at live rows are kept)
+            # still point at live rows are kept).  Spilled rows don't
+            # donate — their pages are on the host tier.
             for s, req in enumerate(self._slot_req):
-                if req is not None:
+                if req is not None and not self._row_spilled[s]:
                     self._register_prefix(s, req.tokens)
 
     def _match_prefix(self, tokens: np.ndarray):
@@ -573,6 +764,7 @@ class ServingEngine:
             end = (i + 1) * s
             req = self._slot_req[src]
             if (ep != self._slot_epoch[src] or req is None
+                    or self._row_spilled[src]
                     or req.prompt_len < end
                     or self._row_progress[src] < end
                     or not np.array_equal(tokens[:end], req.tokens[:end])):
@@ -580,13 +772,162 @@ class ServingEngine:
             best = (src, i + 1)
         return best
 
+    def _plan_admission(self, req: Request):
+        """Host-side admission plan for one request: prefix match, shared
+        depth, CoW spare, worst-case page need — pure mirror arithmetic,
+        re-runnable after a preemption changes the donor set (the match,
+        and so the need, can only shrink)."""
+        src, nblk = self._match_prefix(req.tokens)
+        if self._recurrent:
+            # recurrent families resume *from a restored snapshot*, so
+            # the resume point must be a boundary strictly inside the
+            # prompt (the re-fed last token then always lands in an
+            # unshared page — recurrent sharing never CoWs)
+            nblk = min(nblk, (req.prompt_len - 1) // self.page_size)
+        shared = nblk * self.page_size
+        # always re-feed at least the last prompt token: its logits
+        # seed generation (a fully shared attention prompt re-feeds
+        # exactly one token, whose write CoWs the final shared page)
+        start = min(shared, req.prompt_len - 1)
+        cow = 1 if shared > start else 0
+        if self._paged:
+            need = self._pages_needed(req.total_len) + cow
+            if need > self.n_pages:
+                # the CoW spare would overflow the pool: serve unshared
+                src = nblk = start = cow = 0
+                need = self._pages_needed(req.total_len)
+        else:
+            need = 0
+        return src, nblk, start, cow, need
+
+    def _expire_queued(self, now: float) -> None:
+        """Deadline sweep over still-queued requests (resident rows expire
+        at harvest, where the device sync already happened)."""
+        if not self._deadline:
+            return
+        for rid in self.queue.pending_ids():
+            t = self._deadline.get(rid)
+            if t is not None and now >= t:
+                if self.queue.cancel(rid) is not None:
+                    self.expired.add(rid)
+                    self._deadline.pop(rid, None)
+                    self._t_submit.pop(rid, None)
+
+    def _try_preempt(self, req: Request, need: int, protected) -> bool:
+        """Spill strictly-lower-priority victims until ``req``'s
+        reservation fits; commit only if the chosen set actually admits
+        it (no thrashing spills).  Victim order: lowest priority first,
+        then least progress (least work lost), then oldest.
+        ``protected`` rows (this refill's pending admissions and their
+        prefix donors) are never victims — spilling a pending donor
+        would tear pages out from under the _admit mapping below."""
+        if self._spill is None:
+            return False
+        victims = [
+            b for b, r in enumerate(self._slot_req)
+            if r is not None and not self._row_spilled[b]
+            and r.priority < req.priority
+            and b not in protected
+            and r.req_id not in self._cancel_req
+            and r.req_id not in self._poison_req
+        ]
+        victims.sort(key=lambda b: (self._slot_req[b].priority,
+                                    self._row_progress[b],
+                                    self._slot_req[b].req_id))
+        chosen = []
+        freed = 0
+        for b in victims:
+            if (self._pages_reserved - freed + need
+                    <= self._effective_pages()):
+                break
+            chosen.append(b)
+            freed += self._row_pages[b]
+        if (not chosen
+                or self._pages_reserved - freed + need
+                > self._effective_pages()):
+            return False
+        mask = np.zeros((self.batch,), bool)
+        for b in chosen:
+            mask[b] = True
+            self._spill_need[b] = self._row_pages[b]
+            self._pages_reserved -= self._row_pages[b]
+            self._row_pages[b] = 0
+            self._row_spilled[b] = True
+            self.preemptions += 1
+            # a spilled row's pages leave the device: it stops donating
+            # (sharers keep already-mapped pages alive via refcounts;
+            # only *new* matches are ruled out)
+            self._evict_prefix(b)
+        self._mstate, self._slots = self._spill(
+            self._mstate, self._slots, jnp.asarray(mask)
+        )
+        return True
+
+    def _try_restore(self, now: float) -> int:
+        """Bring spilled rows back while their worst-case reservation fits
+        (the reservation gate is exactly what guarantees the jitted
+        restore's device-side pops never find the free list dry).
+        Highest priority first, then oldest; a spilled row defers to a
+        strictly-higher-priority queue head that could itself fit, and
+        doomed rows (pending cancel/poison, past deadline) stay spilled
+        — the harvest drains their host-tier slots directly."""
+        if self._restore is None:
+            return 0
+        spilled = [b for b in range(self.batch) if self._row_spilled[b]]
+        if not spilled:
+            return 0
+        head = self.queue.peek()
+        head_fits = (
+            head is not None
+            and self._pages_needed(head.total_len)
+            <= self._effective_pages()
+        )
+        spilled.sort(key=lambda b: (-self._slot_req[b].priority,
+                                    self._slot_req[b].req_id))
+        mask = np.zeros((self.batch,), bool)
+        n = 0
+        for b in spilled:
+            req = self._slot_req[b]
+            rid = req.req_id
+            if rid in self._cancel_req or rid in self._poison_req:
+                continue
+            t = self._deadline.get(rid)
+            if t is not None and now >= t:
+                continue
+            if head_fits and head.priority > req.priority:
+                continue
+            need = self._spill_need[b]
+            if self._pages_reserved + need > self._effective_pages():
+                continue
+            mask[b] = True
+            self._row_spilled[b] = False
+            self._row_pages[b] = need
+            self._spill_need[b] = 0
+            self._pages_reserved += need
+            self.restores += 1
+            n += 1
+        if n == 0:
+            return 0
+        self._mstate, self._slots = self._restore(
+            self._mstate, self._slots, jnp.asarray(mask)
+        )
+        if self._share_eligible:
+            # device-resident again: the row may donate its prefix anew
+            for b in spilled:
+                if mask[b]:
+                    self._register_prefix(b, self._slot_req[b].tokens)
+        return n
+
     def _refill(self) -> int:
         """Admit queued requests into free rows (one jitted masked write).
 
-        Paged layout: a request is admitted only if its worst-case page
-        count fits under the pool reservation; otherwise admission stops
-        (FIFO — no reordering past a starving request).  Contiguous
-        layout: slot availability alone gates admission, as before.
+        Scheduler order per cycle: expire queued deadlines, restore
+        spilled rows that fit, then admit the queue head while a free
+        row and (paged layout) a worst-case page reservation exist —
+        preempting strictly-lower-priority victims when the head cannot
+        reserve (class docstring has the full contract).  Admission
+        stops at the first unadmittable head — no reordering past a
+        starving request beyond what the priority queue itself encodes.
 
         Prefix sharing: each admitted prompt is matched against the
         host-side index; on a hit the donor's leading blocks are mapped
@@ -598,6 +939,9 @@ class ServingEngine:
         docstring); the sharing win is resident bytes and TTFT, not
         admission capacity.
         """
+        now = time.perf_counter()
+        self._expire_queued(now)
+        self._try_restore(now)
         free = [b for b, r in enumerate(self._slot_req) if r is None]
         if not free or not self.queue:
             return 0
@@ -610,34 +954,22 @@ class ServingEngine:
         share_src = np.zeros((self.batch,), np.int32)
         share_nblk = np.zeros((self.batch,), np.int32)
         registrations = []
+        pending: Set[int] = set()   # rows admitted in this refill
+        donors: Set[int] = set()    # their prefix donors
         n = 0
         for b in free:
             req = self.queue.peek()
             if req is None:
                 break
-            src, nblk = self._match_prefix(req.tokens)
-            if self._recurrent:
-                # recurrent families resume *from a restored snapshot*, so
-                # the resume point must be a boundary strictly inside the
-                # prompt (the re-fed last token then always lands in an
-                # unshared page — recurrent sharing never CoWs)
-                nblk = min(nblk, (req.prompt_len - 1) // self.page_size)
-            shared = nblk * self.page_size
-            # always re-feed at least the last prompt token: its logits
-            # seed generation (a fully shared attention prompt re-feeds
-            # exactly one token, whose write CoWs the final shared page)
-            start = min(shared, req.prompt_len - 1)
-            cow = 1 if shared > start else 0
-            if self._paged:
-                need = self._pages_needed(req.total_len) + cow
-                if need > self.n_pages:
-                    # the CoW spare would overflow the pool: serve unshared
-                    src = nblk = shared = start = cow = 0
-                    need = self._pages_needed(req.total_len)
-                if self._pages_reserved + need > self.n_pages:
+            src, nblk, start, cow, need = self._plan_admission(req)
+            if (self._paged
+                    and self._pages_reserved + need
+                    > self._effective_pages()):
+                if not self._try_preempt(req, need, pending | donors):
                     break
-            else:
-                need = 0
+                # victims left the donor set: re-plan (the match can only
+                # shrink, so the committed preemption still fits)
+                src, nblk, start, cow, need = self._plan_admission(req)
             self.queue.pop()
             self._slot_req[b] = req
             self._row_progress[b] = start
@@ -646,9 +978,7 @@ class ServingEngine:
             new_tokens[b, : req.prompt_len] = req.tokens
             new_plen[b] = req.prompt_len
             new_total[b] = req.total_len
-            new_rng[b] = self._host_rng.integers(
-                0, 2 ** 32, size=2, dtype=np.uint32
-            )
+            new_rng[b] = self._req_key(req.req_id)
             mask[b] = True
             new_start[b] = start
             share_src[b] = src
@@ -657,6 +987,9 @@ class ServingEngine:
             self.cow_pages += cow
             if self._share_eligible:
                 registrations.append((b, req.tokens))
+            pending.add(b)
+            if nblk > 0:
+                donors.add(src)
             n += 1
         if n == 0:
             return 0
@@ -690,7 +1023,8 @@ class ServingEngine:
         """
         crossed: List[int] = []
         for b, req in enumerate(self._slot_req):
-            if req is None:
+            if req is None or self._row_spilled[b]:
+                # a spilled row's lane is device-inactive: no progress
                 continue
             p = self._row_progress[b]
             if p >= req.total_len - 1:
@@ -720,16 +1054,22 @@ class ServingEngine:
         step (a single remaining prompt token is just a decode feed)."""
         return any(
             req is not None
+            and not self._row_spilled[b]
             and self._row_progress[b] < req.total_len - 1
             and req.prompt_len - self._row_progress[b] >= 2
             for b, req in enumerate(self._slot_req)
         )
 
     def step(self) -> int:
-        """One sync cycle: refill, chunked prefill until no row is mid-
-        prompt (when enabled), ``steps_per_sync`` fused decode steps, then
-        a single host readback to harvest finished rows.  Returns the
-        number of requests completed this cycle."""
+        """One sync cycle: apply scripted faults, refill (deadline sweep,
+        restores, admission with preemption), chunked prefill until no
+        row is mid-prompt (bounded by ``prefill_budget`` when set),
+        ``steps_per_sync`` fused decode steps, then a single host
+        readback to harvest finished — and drain cancelled / expired /
+        poisoned — rows.  Returns the number of requests completed this
+        cycle."""
+        self._apply_faults()
+        self._cycle += 1
         self._refill()
         if not any(r is not None for r in self._slot_req):
             return 0
@@ -738,7 +1078,14 @@ class ServingEngine:
             # prompt ingestion: chunked steps, back-to-back dispatches, no
             # host sync — the mirror knows each row's width without one.
             # Decode-phase rows ride along one token per chunk step.
-            while self._prompt_phase_rows():
+            # ``prefill_budget`` caps the chunk steps per cycle so a long
+            # prompt cannot starve resident decodes of a whole harvest
+            # interval; leftover prompt tokens continue next cycle or
+            # token-by-token inside the fused decode call below.
+            nchunks = 0
+            while self._prompt_phase_rows() and (
+                    not self.prefill_budget
+                    or nchunks < self.prefill_budget):
                 widths = [
                     max(1, min(self._chunk_limit(self._row_progress[b]),
                                req.prompt_len - self._row_progress[b]))
@@ -749,12 +1096,25 @@ class ServingEngine:
                     self.params, self._mstate, self._slots
                 )
                 self.prefill_steps += 1
+                nchunks += 1
                 crossed += self._advance_mirror(widths)
+        # rows a budget stop left mid-prompt are frozen for the fused
+        # decode call (see ``_step_n``): advancing them token-by-token
+        # would change their chunk partitioning, and with it the logits
+        run = np.ones((self.batch,), bool)
+        if self._prefill is not None:
+            for b, req in enumerate(self._slot_req):
+                if (req is not None and not self._row_spilled[b]
+                        and req.prompt_len - self._row_progress[b] >= 2):
+                    run[b] = False
         self._mstate, self._slots = self._step_n(
-            self.params, self._mstate, self._slots
+            self.params, self._mstate, self._slots, jnp.asarray(run)
         )
         self.steps += self.steps_per_sync
-        crossed += self._advance_mirror([self.steps_per_sync] * self.batch)
+        crossed += self._advance_mirror(
+            [self.steps_per_sync if run[b] else 0
+             for b in range(self.batch)]
+        )
         # the one host sync of the cycle (allocator tops ride along — no
         # extra round-trips)
         fetch = [self._slots.active, self._slots.tokens]
@@ -782,26 +1142,64 @@ class ServingEngine:
                 self.ttft.setdefault(rid, now - t0)
         finished = 0
         release = np.zeros((self.batch,), bool)
+        drained = False
         for b, req in enumerate(self._slot_req):
-            if req is None or active[b]:
+            if req is None:
                 continue
-            out = tokens[b, req.prompt_len : req.total_len].copy()
-            self.outputs[req.req_id] = out
-            self.generated += out.size
-            self._slot_req[b] = None
-            self._pages_reserved -= self._row_pages[b]
-            self._row_pages[b] = 0
-            # the slot's prompt leaves the prefix index; its *pages* live
-            # on while any sharer still references them (device refcounts)
-            self._evict_prefix(b)
+            rid = req.req_id
+            t = self._deadline.get(rid)
+            if rid in self._cancel_req:
+                self.cancelled.add(rid)
+            elif rid in self._poison_req:
+                self.poisoned.add(rid)
+            elif t is not None and now >= t:
+                self.expired.add(rid)
+            elif self._row_spilled[b] or active[b]:
+                continue    # still running (or parked on the host tier)
+            else:
+                # finished for real: the generated span is the payload
+                out = tokens[b, req.prompt_len : req.total_len].copy()
+                self.outputs[rid] = out
+                self.generated += out.size
+                self._drop_row(b)
+                release[b] = True
+                finished += 1
+                continue
+            # cancelled / poisoned / past-deadline: no payload; the row —
+            # device-active, mid-prefill, or spilled — drains through the
+            # same release path, surrendering pages and snapshot slots in
+            # every tier
+            self._drop_row(b)
             release[b] = True
-            finished += 1
-        if finished and (self._paged or self._snap):
-            # free-on-completion: the finished rows' pages — and snapshot
-            # slots (a pure-ssm engine has the latter only) — return to
-            # their pools now, not when the slot happens to be refilled
-            self._mstate = self._release(self._mstate, jnp.asarray(release))
+            drained = True
+        if np.any(release) and (self._paged or self._snap or drained):
+            # free-on-completion: the rows' pages and snapshot slots
+            # (device *and* host tiers) return to their pools now, not
+            # when the slot happens to be refilled; drained rows
+            # additionally need their lanes deactivated (a cancelled row
+            # may still be device-active)
+            self._mstate, self._slots = self._release(
+                self._mstate, self._slots, jnp.asarray(release)
+            )
         return finished
+
+    def _drop_row(self, b: int) -> None:
+        """Host-mirror bookkeeping for a row leaving the batch (finished
+        or drained): reservation, spill mirrors, prefix entries, SLO
+        ledgers."""
+        rid = self._slot_req[b].req_id
+        self._slot_req[b] = None
+        self._pages_reserved -= self._row_pages[b]
+        self._row_pages[b] = 0
+        self._spill_need[b] = 0
+        self._row_spilled[b] = False
+        # the slot's prompt leaves the prefix index; its *pages* live
+        # on while any sharer still references them (device refcounts)
+        self._evict_prefix(b)
+        self._cancel_req.discard(rid)
+        self._poison_req.discard(rid)
+        self._deadline.pop(rid, None)
+        self._t_submit.pop(rid, None)
 
     def run(self) -> Dict[int, np.ndarray]:
         """Serve until queue and slots drain; returns {req_id: generated}."""
@@ -821,6 +1219,10 @@ class ServingEngine:
         self.generated = self.prompt_tokens = 0
         self.peak_pages_in_use = self.peak_snaps_in_use = 0
         self.shared_prompt_tokens = self.cow_pages = 0
+        self.preemptions = self.restores = 0
+        self.cancelled.clear()
+        self.expired.clear()
+        self.poisoned.clear()
 
     def kv_bytes_per_page(self) -> int:
         """Bytes one page occupies across all layer slabs (K and V) —
@@ -860,6 +1262,11 @@ class ServingEngine:
         if self.prefix_sharing:
             out["shared_prompt_tokens"] = float(self.shared_prompt_tokens)
             out["cow_pages"] = float(self.cow_pages)
+        if self._spillable:
+            out["preemptions"] = float(self.preemptions)
+            out["restores"] = float(self.restores)
+        out["cancelled"] = float(len(self.cancelled))
+        out["expired"] = float(len(self.expired))
         return out
 
 

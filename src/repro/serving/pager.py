@@ -112,6 +112,50 @@ block table's (``lm.init_decode_state(snapshots=True)`` builds it):
     (``batch x ceil(max_len / page_size)``) so — like the engine's page
     reservation ledger — capture can never find the free list dry.
 
+Two-tier paging — host spill / restore (the memory-pressure escape
+valve): the engine's preemption path moves a victim row's pages out of
+the device pool instead of dropping the request.  The host tier is a
+*second* (pool, table, free list, refcount) quadruple managed by the
+same allocator primitives, so the conservation invariant generalizes
+instead of forking:
+
+  * ``spill_rows`` pops one host slot per mapped block of each victim
+    row, records it in the row's host table, and *releases* the device
+    pages (``release_rows`` — a page still referenced by a
+    prefix-sharing peer stays resident; the victim gets a private host
+    copy either way).  The returned ``(src, dst)`` id vectors drive the
+    data move (``copy_pages``) device-pool → host-pool inside the same
+    jitted call — release never zeroes pool data, so copying after the
+    bookkeeping is safe.
+  * ``restore_rows`` is the exact mirror: pop fresh device pages for
+    every host-table entry, copy host-pool → device-pool, release the
+    host slots.  A restored row owns its pages privately (rc == 1) even
+    where it used to share — sharing is re-established only through
+    future admissions, never assumed across a spill.
+  * sizing & dryness: the host pool is built at the worst case
+    (``batch x max_blocks`` slots — every row fully resident, all
+    spilled), so a spill can never find the host free list dry; restore
+    pops are gated by the engine's reservation ledger (the row's
+    worst-case page count re-enters the ledger before ``restore_rows``
+    runs), so they can never find the *device* free list dry.  Both are
+    the same "reservation prevents this" convention as ``alloc_on_write``
+    — a dry pop degrades to a skipped block, never to corruption.
+  * conservation (the generalized property in ``tests/test_pager.py``):
+    within each tier, the free-list prefix and the pages referenced by
+    that tier's tables partition ``0..n-1`` and rc equals reference
+    multiplicity — "free + device-resident" and "free + host-resident"
+    each partition their pool, with host rc always 1 (host copies are
+    private by construction).
+  * snapshot slots ride the same functions: for recurrent families the
+    engine spills the victim's snapshot table through ``spill_rows`` on
+    boundary space against a host snapshot pool (``copy_pages`` with
+    ``axis=0`` — snapshot pools are slot-major), so shared boundary
+    state survives the victim's eviction exactly like shared KV pages.
+  * placement note: in this repro the host pools are ordinary arrays —
+    the two-tier *accounting* is the contract.  On a real TPU they would
+    be pinned-host buffers (``memory_kind="pinned_host"``); nothing in
+    the bookkeeping changes.
+
 Multi-page-per-step allocation (chunked prefill): a step that writes a
 *range* of positions ``start..end`` may straddle several blocks, so
 ``alloc_range`` maps every block covering the range in one jitted call —
@@ -275,6 +319,116 @@ def release_rows(
     free, top = _push_freed(pager.free, pager.top, freed)
     block_table = jnp.where(mask[:, None], -1, block_table)
     return PagerState(free, top, rc), block_table
+
+
+def spill_rows(
+    pager: PagerState,
+    table: jax.Array,         # (B, max_blocks) int32: device-tier table
+    hpager: PagerState,       # host-tier allocator (n_slots entries)
+    htable: jax.Array,        # (B, max_blocks) int32: host-tier table
+    mask: jax.Array,          # (B,) bool: victim rows
+) -> Tuple[PagerState, jax.Array, PagerState, jax.Array, jax.Array, jax.Array]:
+    """Move the masked rows' mapped blocks from the device tier to the
+    host tier (preemption).
+
+    For every mapped block of a victim row: pop a host slot (rows and
+    blocks ranked in flattened row-major order — the same deterministic
+    pop discipline as ``alloc_on_write``), record it in the host table,
+    then release the device pages (``release_rows`` — a page a
+    prefix-sharing peer still references stays resident; the victim gets
+    a private host copy regardless, so restore never depends on the peer
+    outliving the spill).
+
+    Returns ``(pager, table, hpager, htable, src, dst)``.  ``src`` /
+    ``dst`` are flattened ``(B * max_blocks,)`` id vectors — device page
+    to read, host slot to fill — with out-of-bounds sentinels for
+    blocks that did not move; feed them to ``copy_pages`` *in the same
+    jitted call* (release touches only bookkeeping, never pool data, so
+    copying after the release is safe).  Host-pool dryness is prevented
+    by worst-case sizing (see the module docstring); a dry pop skips the
+    block, never corrupts."""
+    b, max_blocks = table.shape
+    n_pages = pager.free.shape[0]
+    n_slots = hpager.free.shape[0]
+    give = mask[:, None] & (table >= 0) & (htable < 0)
+    flat = give.reshape(-1)
+    rank = jnp.cumsum(flat) - 1
+    grant = flat & (rank < hpager.top)
+    sidx = jnp.clip(hpager.top - 1 - rank, 0, n_slots - 1)
+    slot = jnp.where(grant, hpager.free[sidx], n_slots)
+    h_top = hpager.top - jnp.sum(grant, dtype=jnp.int32)
+    h_rc = hpager.rc.at[slot].set(1, mode="drop")   # host copies are private
+    htable = jnp.where(
+        grant.reshape(b, max_blocks), slot.reshape(b, max_blocks), htable
+    )
+    src = jnp.where(grant, table.reshape(-1), n_pages)
+    dst = slot
+    pager, table = release_rows(pager, table, mask)
+    return pager, table, PagerState(hpager.free, h_top, h_rc), htable, src, dst
+
+
+def restore_rows(
+    pager: PagerState,
+    table: jax.Array,         # (B, max_blocks) int32: device-tier table
+    hpager: PagerState,       # host-tier allocator (n_slots entries)
+    htable: jax.Array,        # (B, max_blocks) int32: host-tier table
+    mask: jax.Array,          # (B,) bool: rows to bring back on device
+) -> Tuple[PagerState, jax.Array, PagerState, jax.Array, jax.Array, jax.Array]:
+    """The exact mirror of ``spill_rows``: re-allocate device pages for
+    every host-table entry of the masked rows, then release the host
+    slots (always rc == 1 — host copies are private by construction).
+
+    A restored row owns its pages privately (rc == 1) even where it used
+    to share.  Returns ``(pager, table, hpager, htable, src, dst)`` with
+    ``src`` = host slots to read, ``dst`` = fresh device pages to fill
+    (flattened, sentinel = skip) for ``copy_pages``.  Device-pool
+    dryness is prevented by the engine's reservation ledger (the row's
+    worst-case page count re-enters the ledger before this runs)."""
+    b, max_blocks = table.shape
+    n_pages = pager.free.shape[0]
+    n_slots = hpager.free.shape[0]
+    take = mask[:, None] & (htable >= 0) & (table < 0)
+    flat = take.reshape(-1)
+    rank = jnp.cumsum(flat) - 1
+    grant = flat & (rank < pager.top)
+    pidx = jnp.clip(pager.top - 1 - rank, 0, n_pages - 1)
+    page = jnp.where(grant, pager.free[pidx], n_pages)
+    top = pager.top - jnp.sum(grant, dtype=jnp.int32)
+    rc = pager.rc.at[page].set(1, mode="drop")
+    table = jnp.where(
+        grant.reshape(b, max_blocks), page.reshape(b, max_blocks), table
+    )
+    src = jnp.where(grant, htable.reshape(-1), n_slots)
+    dst = page
+    hpager, htable = release_rows(hpager, htable, mask)
+    return PagerState(pager.free, top, rc), table, hpager, htable, src, dst
+
+
+def copy_pages(
+    dst_pool: jax.Array,
+    src_pool: jax.Array,
+    src: jax.Array,     # (M,) int32 ids into src_pool's page axis
+    dst: jax.Array,     # (M,) int32 ids into dst_pool's page axis
+    *,
+    axis: int = 1,
+) -> jax.Array:
+    """Bulk whole-page move between pools (the spill/restore data plane).
+
+    Gathers page ``src[i]`` from ``src_pool`` and scatters it to page
+    ``dst[i]`` of ``dst_pool``; out-of-bounds sentinels drop.  ``axis``
+    selects the page axis: 1 for KV pools (``(stacks, n_pages, ...)``),
+    0 for snapshot pools (slot-major ``(n_slots, ...)``).  Whole pages
+    are copied — slots beyond the written prefix carry garbage on both
+    sides of the move, which the sequential-write contract already makes
+    unobservable."""
+    n_src = src_pool.shape[axis]
+    content = jnp.take(src_pool, jnp.clip(src, 0, n_src - 1), axis=axis)
+    content = content.astype(dst_pool.dtype)
+    if axis == 0:
+        return dst_pool.at[dst].set(content, mode="drop")
+    if axis == 1:
+        return dst_pool.at[:, dst].set(content, mode="drop")
+    raise ValueError(f"copy_pages: unsupported page axis {axis}")
 
 
 def share_prefix(

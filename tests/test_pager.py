@@ -1,16 +1,21 @@
 """Property tests for the device-side page allocator (`repro.serving.pager`).
 
-The layout contract's conservation law, refcount form: at every moment
-the free-list prefix and the pages referenced by block tables *partition*
-the page set, and each referenced page's refcount equals the number of
-block-table entries pointing at it — no page is simultaneously free and
-mapped, lost, or miscounted.  Interleaved alloc-on-write / release /
-share-prefix / copy-on-write sequences exercise it (the share step
-replays the engine's admission order: release the admitted rows, map the
-donor's leading blocks, resume one position before the shared frontier so
-the next write lands in a shared page and CoWs): hypothesis generates
-them when installed; a seeded fallback sweep always runs, so the
-invariant is covered even where dev deps are absent.  The recurrent-state
+The layout contract's conservation law, refcount form, generalized to
+the two-tier (device + host) pager: at every moment each tier's
+free-list prefix and the pages its block tables reference *partition*
+that tier's pool — free + device-resident + host-resident account for
+every page and slot — each referenced page's refcount equals the number
+of block-table entries pointing at it, and no (row, block) is mapped in
+both tiers at once.  Interleaved alloc-on-write / release /
+share-prefix / copy-on-write / spill / restore sequences exercise it
+(the share step replays the engine's admission order: release the
+admitted rows, map the donor's leading blocks, resume one position
+before the shared frontier so the next write lands in a shared page and
+CoWs; the spill/restore steps replay preemption: victims move to
+private host copies and later back, gated — like the engine's
+reservation ledger — on the device pool having room): hypothesis
+generates them when installed; a seeded fallback sweep always runs, so
+the invariant is covered even where dev deps are absent.  The recurrent-state
 snapshot store reuses these primitives over boundary space (page_size 1),
 so the same walk pinned to page_size 1 is its conservation property:
 snapshots partition with their pages, release frees slots only at rc==0.
@@ -57,21 +62,39 @@ def _check_partition(ps: pager.PagerState, bt) -> None:
 def _run_sequence(n_pages, batch, max_blocks, page_size, ops):
     """ops: [(kind, row_bits, src)] — kind 0: the masked rows CoW-then-
     alloc at their position and advance (the decode-step write path);
-    kind 1: release the masked rows; kind 2: admit the masked rows as
-    sharers of row ``src % batch``'s leading blocks (release first, the
-    engine's reset-then-share admission), resuming one position short of
-    the shared frontier so the next write exercises CoW."""
+    kind 1: release the masked rows in *both* tiers (the engine's drain
+    path frees a cancelled spilled row's host slots too); kind 2: admit
+    the masked rows as sharers of row ``src % batch``'s leading blocks
+    (release first, the engine's reset-then-share admission), resuming
+    one position short of the shared frontier so the next write
+    exercises CoW; kind 3: spill the masked rows to private host copies
+    (preemption — spilled rows stop writing, donating, and sharing until
+    restored, as the engine's freeze/prefix-eviction guarantees); kind
+    4: restore the masked spilled rows, gated on the device pool having
+    room for every host-mapped block (the engine's reservation ledger).
+
+    After every op, each tier's partition law must hold and no
+    (row, block) may be mapped on the device and the host at once."""
     ps = pager.init_pager(n_pages)
     bt = pager.init_block_table(batch, max_blocks)
+    # host tier worst-case sized, like the engine: spill can never go dry
+    hs = pager.init_pager(batch * max_blocks)
+    ht = pager.init_block_table(batch, max_blocks)
     pos = np.zeros((batch,), np.int32)
+    spilled = np.zeros((batch,), bool)
     for kind, bits, src in ops:
         mask = np.array([(bits >> b) & 1 == 1 for b in range(batch)])
         if kind == 1:
             ps, bt = pager.release_rows(ps, bt, jnp.asarray(mask))
+            hs, ht = pager.release_rows(hs, ht, jnp.asarray(mask))
             pos[mask] = 0
+            spilled[mask] = False
         elif kind == 2:
             src = src % batch
             mask[src] = False            # the engine never self-donates
+            mask &= ~spilled             # spilled rows neither join...
+            if spilled[src]:             # ...nor donate (prefix-evicted)
+                mask[:] = False
             if mask.any():
                 ps, bt = pager.release_rows(ps, bt, jnp.asarray(mask))
                 row = np.asarray(bt)[src]
@@ -83,7 +106,23 @@ def _run_sequence(n_pages, batch, max_blocks, page_size, ops):
                     jnp.full((batch,), nblk, jnp.int32), jnp.asarray(mask),
                 )
                 pos[mask] = max(nblk * page_size - 1, 0)
+        elif kind == 3:
+            mask &= ~spilled
+            if mask.any():
+                ps, bt, hs, ht, _, _ = pager.spill_rows(
+                    ps, bt, hs, ht, jnp.asarray(mask)
+                )
+                spilled[mask] = True
+        elif kind == 4:
+            mask &= spilled
+            need = int((np.asarray(ht)[mask] >= 0).sum())
+            if mask.any() and need <= int(ps.top):
+                ps, bt, hs, ht, _, _ = pager.restore_rows(
+                    ps, bt, hs, ht, jnp.asarray(mask)
+                )
+                spilled[mask] = False
         else:
+            mask &= ~spilled
             ps, bt, cow_src, cow_dst, _, moved = pager.cow_on_write(
                 ps, bt, jnp.asarray(pos), jnp.asarray(mask),
                 page_size=page_size,
@@ -97,6 +136,9 @@ def _run_sequence(n_pages, batch, max_blocks, page_size, ops):
             )
             pos[mask] += 1
         _check_partition(ps, bt)
+        _check_partition(hs, ht)
+        both = (np.asarray(bt) >= 0) & (np.asarray(ht) >= 0)
+        assert not both.any(), "a block is mapped in both tiers"
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -107,8 +149,8 @@ def test_alloc_release_conserves_pages_seeded(seed):
     max_blocks = int(rng.integers(1, 4))
     page_size = int(rng.integers(1, 5))
     ops = [
-        (int(rng.choice([0, 0, 1, 2])), int(rng.integers(0, 2 ** batch)),
-         int(rng.integers(0, batch)))
+        (int(rng.choice([0, 0, 0, 1, 2, 3, 3, 4])),
+         int(rng.integers(0, 2 ** batch)), int(rng.integers(0, batch)))
         for _ in range(int(rng.integers(4, 25)))
     ]
     _run_sequence(n_pages, batch, max_blocks, page_size, ops)
@@ -116,7 +158,7 @@ def test_alloc_release_conserves_pages_seeded(seed):
 
 if HAVE_HYPOTHESIS:
     _ops = st.lists(
-        st.tuples(st.integers(min_value=0, max_value=2),
+        st.tuples(st.integers(min_value=0, max_value=4),
                   st.integers(min_value=0, max_value=15),
                   st.integers(min_value=0, max_value=3)),
         min_size=1, max_size=24,
@@ -153,8 +195,8 @@ def test_snapshot_slots_conserve_seeded(seed):
     batch = int(rng.integers(1, 5))
     n_bound = int(rng.integers(1, 5))
     ops = [
-        (int(rng.choice([0, 0, 1, 2])), int(rng.integers(0, 2 ** batch)),
-         int(rng.integers(0, batch)))
+        (int(rng.choice([0, 0, 0, 1, 2, 3, 3, 4])),
+         int(rng.integers(0, 2 ** batch)), int(rng.integers(0, batch)))
         for _ in range(int(rng.integers(4, 25)))
     ]
     _run_sequence(n_slots, batch, n_bound, 1, ops)
@@ -358,6 +400,97 @@ def test_cow_noop_without_sharing():
     assert int(ps.top) == before[1]
     np.testing.assert_array_equal(np.asarray(ps.rc), before[2])
     np.testing.assert_array_equal(np.asarray(bt), before[3])
+
+
+def test_spill_restore_round_trips_pages_and_content():
+    """Spill then restore: the row's mapping moves to private host slots
+    and back to (fresh) private device pages, page *content* survives the
+    round trip bit-exactly through ``copy_pages``, and both pools end
+    whole."""
+    ps = pager.init_pager(4)
+    bt = pager.init_block_table(2, 2)
+    hs = pager.init_pager(4)
+    ht = pager.init_block_table(2, 2)
+    for p in range(4):            # both rows write two blocks each
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.full((2,), p, jnp.int32), page_size=2
+        )
+    pool = jnp.arange(1 * 4 * 2 * 1 * 2, dtype=jnp.float32)
+    pool = pool.reshape(1, 4, 2, 1, 2)
+    hpool = jnp.zeros_like(pool)
+    victim = jnp.asarray([True, False])
+    row0 = np.asarray(bt)[0].copy()
+    want = np.asarray(pool)[0, row0]
+
+    ps, bt, hs, ht, src, dst = pager.spill_rows(ps, bt, hs, ht, victim)
+    hpool = pager.copy_pages(hpool, pool, src, dst)
+    _check_partition(ps, bt)
+    _check_partition(hs, ht)
+    assert (np.asarray(bt)[0] == -1).all()          # off-device
+    hrow = np.asarray(ht)[0]
+    assert (hrow >= 0).all()
+    assert (np.asarray(hs.rc)[hrow] == 1).all()     # host copy is private
+    assert int(ps.top) == 2                         # victim's pages freed
+    np.testing.assert_array_equal(np.asarray(hpool)[0, hrow], want)
+
+    ps, bt, hs, ht, src, dst = pager.restore_rows(ps, bt, hs, ht, victim)
+    pool = pager.copy_pages(pool, hpool, src, dst)
+    _check_partition(ps, bt)
+    _check_partition(hs, ht)
+    drow = np.asarray(bt)[0]
+    assert (drow >= 0).all() and (np.asarray(ht)[0] == -1).all()
+    assert (np.asarray(ps.rc)[drow] == 1).all()     # restored rows private
+    assert int(hs.top) == 4                         # host slots returned
+    np.testing.assert_array_equal(np.asarray(pool)[0, drow], want)
+
+
+def test_spill_of_shared_row_keeps_peer_pages_resident():
+    """Spilling a donor whose pages a sharer still references: the victim
+    gets a *private* host copy, the shared device pages stay resident for
+    the peer (rc drops by one, no free), and restoring re-allocates
+    private pages — restore never depends on the peer outliving the
+    spill."""
+    ps = pager.init_pager(4)
+    bt = pager.init_block_table(2, 2)
+    hs = pager.init_pager(4)
+    ht = pager.init_block_table(2, 2)
+    donor_only = jnp.asarray([True, False])
+    for p in range(4):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray([p, 0], jnp.int32), donor_only, page_size=2,
+        )
+    ps, bt = pager.share_prefix(
+        ps, bt, jnp.zeros((2,), jnp.int32), jnp.full((2,), 2, jnp.int32),
+        jnp.asarray([False, True]),
+    )
+    shared = np.asarray(bt)[0].copy()
+    ps, bt, hs, ht, _, _ = pager.spill_rows(ps, bt, hs, ht, donor_only)
+    _check_partition(ps, bt)
+    _check_partition(hs, ht)
+    assert int(ps.top) == 2                          # nothing freed: peer holds
+    assert (np.asarray(ps.rc)[shared] == 1).all()    # donor's refs dropped
+    np.testing.assert_array_equal(np.asarray(bt)[1], shared)
+    assert (np.asarray(ht)[0] >= 0).all()            # private host copy
+    ps, bt, hs, ht, _, _ = pager.restore_rows(ps, bt, hs, ht, donor_only)
+    _check_partition(ps, bt)
+    _check_partition(hs, ht)
+    restored = np.asarray(bt)[0]
+    assert (restored >= 0).all()
+    assert not set(restored.tolist()) & set(shared.tolist())  # fresh pages
+    assert (np.asarray(ps.rc)[restored] == 1).all()
+
+
+def test_copy_pages_snapshot_axis_round_trip():
+    """``copy_pages`` with ``axis=0`` (slot-major snapshot pools) moves
+    whole slots and drops out-of-range sentinels — the hsnap spill path."""
+    pool = jnp.arange(4 * 3, dtype=jnp.float32).reshape(4, 3)
+    hpool = jnp.zeros((5, 3), jnp.float32)
+    src = jnp.asarray([2, 0, 4], jnp.int32)     # 4 = sentinel (n_src == 4)
+    dst = jnp.asarray([1, 3, 5], jnp.int32)     # 5 = sentinel (drop)
+    out = np.asarray(pager.copy_pages(hpool, pool, src, dst, axis=0))
+    np.testing.assert_array_equal(out[1], np.asarray(pool)[2])
+    np.testing.assert_array_equal(out[3], np.asarray(pool)[0])
+    assert (out[[0, 2, 4]] == 0).all()
 
 
 def test_pages_needed_matches_write_pattern():

@@ -1,0 +1,384 @@
+"""Pressure tests — serving survives preemption, cancellation, deadlines
+and injected faults.
+
+The scheduler contract under test (engine class docstring): when the
+head of the queue cannot reserve pages, strictly-lower-priority resident
+rows are preempted — their pages (and, for recurrent families, their
+page-boundary snapshot slots) *spill* to a private host-tier copy and
+later *restore* — and every doomed request (cancelled, past-deadline,
+poisoned) drains through the same jitted release path whether it is
+queued, mid-prefill, device-active, spilled, or donating a shared
+prefix.  The bars, everywhere: survivors' token streams are
+bit-identical to an unpressured run of the same requests, no page or
+snapshot slot leaks in either tier post-drain, and the jitted entry
+points (``_spill``/``_restore`` included) never retrace.
+
+Token-identity across schedules leans on two engine guarantees worth
+naming because these tests would catch their regression first: a
+request's chunked-prefill partitioning is schedule-invariant (a budget
+or preemption stop always leaves progress chunk-aligned, and frozen
+rows skip the fused decode call), and sampling keys are a pure function
+of (engine seed, req_id), so admission reshuffling cannot perturb any
+row's stream.
+"""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.audit import jit_cache_audit, no_transfer_audit
+from repro.configs.registry import get_arch
+from repro.core import use_backend
+from repro.models.model import build_model
+from repro.serving import (
+    FaultEvent,
+    FaultPlan,
+    QueueEmpty,
+    QueueFullError,
+    RequestQueue,
+    ServingEngine,
+)
+
+BACKENDS = ["reference", "pallas"]
+#: paged KV pages to spill — dense and hybrid (hybrid also spills
+#: snapshot slots when sharing is on); pure ssm has no KV pool
+SPILL_ARCHS = ["qwen2.5-3b", "zamba2-2.7b"]
+ALL_ARCHS = ["qwen2.5-3b", "mamba2-2.7b", "zamba2-2.7b"]
+LAYOUTS = ["contiguous", "paged"]
+
+
+def _cfg(arch):
+    return dataclasses.replace(get_arch(arch).reduced(), dtype="float32")
+
+
+@functools.lru_cache(maxsize=None)
+def _model_params(arch):
+    cfg = _cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk(model, params, *, batch=2, max_len=32, layout="paged", n_pages=16,
+        **kw):
+    kwargs = dict(batch=batch, max_len=max_len, steps_per_sync=2,
+                  prefill_chunk=4, layout=layout)
+    if layout == "paged":
+        kwargs.update(page_size=4, n_pages=n_pages)
+    kwargs.update(kw)
+    return ServingEngine(model, params, **kwargs)
+
+
+def _assert_conserved(eng):
+    """Zero leaked pages / snapshot slots in any tier after a drain."""
+    st = eng._mstate
+    for top, free, table in (
+        ("page_top", "page_free", "block_table"),
+        ("host_top", "host_free", "host_table"),
+        ("snap_top", "snap_free", "snap_table"),
+        ("hsnap_top", "hsnap_free", "hsnap_table"),
+    ):
+        if top not in st:
+            continue
+        assert int(st[top]) == st[free].shape[0], f"{top}: slots leaked"
+        assert (np.asarray(st[table]) == -1).all(), f"{table}: stale maps"
+
+
+# -- preemption: host spill + restore ---------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("arch", SPILL_ARCHS)
+def test_preemption_restore_token_identity(arch, backend):
+    """A high-priority arrival that cannot reserve pages must spill the
+    resident low-priority row to the host tier and restore it after —
+    with every stream bit-identical to the uncontended run, both tiers
+    conserved, and no jitted entry point (spill/restore included)
+    retracing; the whole pressured run holds under the transfer guard."""
+    cfg, model, params = _model_params(arch)
+    sharing = dict(prefix_sharing=True)
+
+    base = _mk(model, params, n_pages=16, **sharing)
+    base.submit(list(range(1, 9)), 10, priority=0)
+    base.submit(list(range(21, 27)), 8, priority=1)
+    with use_backend(backend):
+        bouts = base.run()
+
+    # pool of 6: the resident request reserves 5 pages, the high-priority
+    # one needs 4 — impossible without preemption
+    pres = _mk(model, params, n_pages=6, **sharing)
+    with use_backend(backend):
+        with jit_cache_audit(pres) as report:
+            pres.submit(list(range(1, 9)), 10, priority=0)
+            pres.step()
+            pres.submit(list(range(21, 27)), 8, priority=1)
+            with no_transfer_audit():
+                pouts = pres.run()
+    assert pres.preemptions >= 1 and pres.restores >= 1
+    for rid in bouts:
+        np.testing.assert_array_equal(bouts[rid], pouts[rid])
+    _assert_conserved(pres)
+    if pres._spillable:
+        assert report.growth("_spill") <= 1
+        assert report.growth("_restore") <= 1
+
+
+@pytest.mark.parametrize("arch", SPILL_ARCHS)
+def test_mid_prefill_preemption_token_identity(arch):
+    """Preempting a row that is still *ingesting its prompt* must not
+    perturb its tokens: the spilled row's progress stays chunk-aligned
+    and it resumes the exact chunk schedule after restore (chunked
+    prefill logits depend on the chunk partitioning, not just on
+    positions — the engine freezes mid-prompt rows rather than advancing
+    them token-by-token)."""
+    cfg, model, params = _model_params(arch)
+
+    def mk(n_pages, budget=0):
+        return _mk(model, params, max_len=40, n_pages=n_pages,
+                   steps_per_sync=1, prefill_budget=budget)
+
+    prompt = list(range(1, 25))
+    base = mk(20)
+    base.submit(prompt, 8, priority=0)
+    base.submit(list(range(31, 37)), 6, priority=1)
+    bouts = base.run()
+
+    pres = mk(8, budget=1)
+    pres.submit(prompt, 8, priority=0)
+    pres.step()                   # one chunk in: mid-prefill
+    pres.submit(list(range(31, 37)), 6, priority=1)
+    pouts = pres.run()
+    assert pres.preemptions >= 1 and pres.restores >= 1
+    for rid in bouts:
+        np.testing.assert_array_equal(bouts[rid], pouts[rid])
+    _assert_conserved(pres)
+
+
+# -- cancellation through the release path ----------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_cancel_queued_request(layout):
+    """Cancel of a still-queued request removes it before it ever touches
+    a device slot; the resident survivor's stream is untouched."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    solo = _mk(model, params, batch=1, layout=layout)
+    ra = solo.submit(list(range(1, 7)), 8)
+    souts = solo.run()
+
+    eng = _mk(model, params, batch=1, layout=layout)
+    ra = eng.submit(list(range(1, 7)), 8)
+    rb = eng.submit(list(range(11, 17)), 8)   # queued behind ra (batch=1)
+    eng.step()
+    assert eng.cancel(rb) is True
+    assert eng.cancel(rb) is False            # already gone
+    assert eng.cancel(10**6) is False         # unknown id
+    outs = eng.run()
+    assert sorted(outs) == [ra]
+    assert rb in eng.cancelled
+    np.testing.assert_array_equal(outs[ra], souts[ra])
+    _assert_conserved(eng)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_cancel_mid_prefill_row(arch, layout):
+    """Cancel of a row still ingesting its prompt drains it at the next
+    harvest — recurrent lanes (ssm/hybrid) included — and the other
+    row's stream survives bit-identically."""
+    cfg, model, params = _model_params(arch)
+
+    def mk():
+        return _mk(model, params, max_len=40, layout=layout, n_pages=20,
+                   prefill_budget=1)
+
+    solo = mk()
+    rs = solo.submit(list(range(31, 37)), 6)
+    souts = solo.run()
+
+    eng = mk()
+    ra = eng.submit(list(range(1, 25)), 8)    # long prompt: several chunks
+    eng.step()                                # mid-prefill under budget=1
+    rb = eng.submit(list(range(31, 37)), 6)
+    assert eng.cancel(ra) is True
+    outs = eng.run()
+    assert sorted(outs) == [rb]
+    assert ra in eng.cancelled and ra not in outs
+    np.testing.assert_array_equal(outs[rb], souts[rs])
+    _assert_conserved(eng)
+
+
+@pytest.mark.parametrize("arch", SPILL_ARCHS)
+def test_cancel_spilled_row(arch):
+    """Cancel of a row parked on the host tier: it is never restored —
+    the harvest drains its host-tier pages/slots directly — and the
+    preemptor's stream is bit-identical to an uncontended run."""
+    cfg, model, params = _model_params(arch)
+
+    base = _mk(model, params, n_pages=16)
+    base.submit(list(range(1, 9)), 10, priority=0)
+    rb = base.submit(list(range(21, 27)), 8, priority=1)
+    bouts = base.run()
+
+    eng = _mk(model, params, n_pages=6)
+    ra = eng.submit(list(range(1, 9)), 10, priority=0)
+    eng.step()
+    rb = eng.submit(list(range(21, 27)), 8, priority=1)
+    eng.step()                                # ra spilled, rb admitted
+    assert eng.preemptions == 1
+    assert eng.cancel(ra) is True             # cancel *while spilled*
+    outs = eng.run()
+    assert sorted(outs) == [rb]
+    assert ra in eng.cancelled
+    assert eng.restores == 0                  # doomed rows never restore
+    np.testing.assert_array_equal(outs[rb], bouts[rb])
+    _assert_conserved(eng)
+
+
+@pytest.mark.parametrize("arch", SPILL_ARCHS)
+def test_cancel_prefix_donor_with_live_sharers(arch):
+    """Cancel of a prefix donor whose pages (or snapshot slots) live
+    sharers still reference: refcounts keep the shared data resident, the
+    sharers finish with the same tokens as an unshared run, and the last
+    release returns every page in every tier."""
+    cfg, model, params = _model_params(arch)
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+
+    def serve(sharing, cancel_donor):
+        eng = ServingEngine(model, params, batch=4, max_len=26,
+                            steps_per_sync=2, prefill_chunk=4,
+                            layout="paged", page_size=4, n_pages=24,
+                            prefix_sharing=sharing)
+        rd = eng.submit(prefix + [7, 9], 14)
+        for _ in range(3):
+            eng.step()                        # donor's prefix is resident
+        rids = [eng.submit(prefix + [3], 5), eng.submit(list(prefix), 5)]
+        if cancel_donor:
+            assert eng.cancel(rd) is True
+        outs = eng.run()
+        return eng, rd, rids, outs
+
+    ref, rd, rids, router = serve(sharing=False, cancel_donor=True)
+    eng, rd2, rids2, outs = serve(sharing=True, cancel_donor=True)
+    if eng.prefix_sharing:
+        assert eng.shared_prompt_tokens > 0, "sharing never engaged"
+    assert rd2 in eng.cancelled and rd2 not in outs
+    for a, b in zip(rids, rids2):
+        np.testing.assert_array_equal(outs[b], router[a])
+    _assert_conserved(eng)
+
+
+# -- deadlines and scripted faults ------------------------------------------
+
+def test_deadline_expires_queued_and_resident():
+    """Per-request deadlines drain both a queued and a resident request
+    through the release path (recorded as expired, no output), leaving
+    the survivor's stream bit-identical."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+
+    solo = _mk(model, params, batch=2)
+    rs = solo.submit(list(range(1, 7)), 10)
+    souts = solo.run()
+
+    eng = _mk(model, params, batch=2)
+    rs = eng.submit(list(range(1, 7)), 10)
+    ra = eng.submit(list(range(11, 17)), 10)                # resident victim
+    rq = eng.submit(list(range(21, 27)), 10, priority=-1)   # queued victim
+    plan = FaultPlan(events=(
+        FaultEvent(cycle=2, kind="deadline", req_id=ra, deadline_ms=0.0),
+        FaultEvent(cycle=2, kind="deadline", req_id=rq, deadline_ms=0.0),
+    ))
+    eng.set_fault_plan(plan)
+    outs = eng.run()
+    assert sorted(outs) == [rs]
+    assert {ra, rq} <= eng.expired
+    np.testing.assert_array_equal(outs[rs], souts[rs])
+    _assert_conserved(eng)
+
+
+def test_fault_exhaust_window_and_poison():
+    """A pool-exhaustion window stalls admission until released, and a
+    poisoned resident row drains with no output — the survivor stream
+    rides through both untouched."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+
+    solo = _mk(model, params, batch=2, n_pages=8)
+    rs = solo.submit(list(range(1, 7)), 8)
+    souts = solo.run()
+
+    eng = _mk(model, params, batch=2, n_pages=8)
+    rs = eng.submit(list(range(1, 7)), 8)      # needs 4 pages
+    rp = eng.submit(list(range(11, 17)), 8)    # needs 4 pages
+    plan = FaultPlan(events=(
+        # hold 5 of 8 pages: rs (already resident after cycle 0) keeps its
+        # 4, rp cannot reserve until the window closes
+        FaultEvent(cycle=1, kind="exhaust_pool", pages=5),
+        FaultEvent(cycle=3, kind="poison", req_id=rp),
+        FaultEvent(cycle=5, kind="release_pool"),
+    ))
+    eng.set_fault_plan(plan)
+    outs = eng.run()
+    assert sorted(outs) == [rs]
+    assert rp in eng.poisoned and rp not in outs
+    np.testing.assert_array_equal(outs[rs], souts[rs])
+    _assert_conserved(eng)
+
+
+def test_ssm_engine_is_not_spillable_but_cancels_cleanly():
+    """Pure-ssm has no KV pool to spill (``_spillable`` is False, no
+    ``_spill``/``_restore`` closures) yet cancellation and deadlines must
+    still drain recurrent lanes through the release path."""
+    cfg, model, params = _model_params("mamba2-2.7b")
+    eng = _mk(model, params, batch=2, layout="contiguous")
+    assert not eng._spillable
+    assert eng._spill is None and eng._restore is None
+    rs = eng.submit(list(range(1, 7)), 8)
+    rc = eng.submit(list(range(11, 17)), 8)
+    eng.step()
+    assert eng.cancel(rc) is True
+    outs = eng.run()
+    assert sorted(outs) == [rs] and rc in eng.cancelled
+    assert "preemptions" not in eng.stats()
+    _assert_conserved(eng)
+
+
+# -- queue semantics ---------------------------------------------------------
+
+def test_request_queue_orders_and_cancels():
+    """(priority desc, deadline budget asc, arrival asc) ordering; typed
+    empty-pop; locked cancel; queue-full backpressure naming the id."""
+    q = RequestQueue(max_len=64, max_pending=4)
+    r0 = q.submit([1, 2], 4)                              # prio 0, no SLO
+    r1 = q.submit([1, 2], 4, priority=1)                  # highest
+    r2 = q.submit([1, 2], 4, deadline_ms=50.0)            # tight budget
+    r3 = q.submit([1, 2], 4, deadline_ms=500.0)
+    assert len(q) == 4 and bool(q)
+    with pytest.raises(QueueFullError, match="request 4"):
+        q.submit([1, 2], 4)
+    assert q.peek().req_id == r1
+    assert q.cancel(r2).req_id == r2
+    assert q.cancel(r2) is None                           # already gone
+    assert [q.pop().req_id for _ in range(3)] == [r1, r3, r0]
+    assert not q and len(q) == 0
+    with pytest.raises(QueueEmpty):
+        q.pop()
+    # rejections never consume ids: the full-queue rejection above did not
+    # advance the counter, so this names the same would-be id
+    with pytest.raises(ValueError, match="request 4"):
+        q.submit([1] * 100, 4)                            # over max_len
+
+
+def test_engine_submit_rejections_name_request():
+    """Engine-level rejections carry the request id: over-length against
+    max_len and pool-impossible against the page pool."""
+    cfg, model, params = _model_params("qwen2.5-3b")
+    eng = _mk(model, params, batch=1, max_len=16, n_pages=4)
+    with pytest.raises(ValueError, match="request 0"):
+        eng.submit(list(range(40)), 8)         # pool-impossible
+    with pytest.raises(ValueError, match="request 0"):
+        eng.submit(list(range(10)), 10)        # over max_len
+    rid = eng.submit([1, 2, 3], 4)             # still admits fine after
+    outs = eng.run()
+    assert rid in outs
+    _assert_conserved(eng)
