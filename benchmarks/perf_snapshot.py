@@ -18,7 +18,10 @@ Each ``benchmarks/trajectory/BENCH_%04d.json`` carries:
   ``preemptions`` / ``restores`` / ``pressure_survivors``, the
   host-spill scheduler's counters under the scripted FaultPlan (exact,
   deterministic: the cell's submission sequence and fault cycles are
-  fixed, so a drift here is a scheduler behavior change, not noise).
+  fixed, so a drift here is a scheduler behavior change, not noise), and
+  — from the speculative-decoding ablation — ``spec_tok_s`` (timing
+  band) plus ``spec_accepted`` / ``spec_emitted`` (exact: seeded
+  workload, greedy acceptance, deterministic drafter).
 * ``ops`` — for every autotuned shape case (``repro.tuning.autotune``
   drives the same cells the sweep used): wall ms with the committed
   tuning table vs the hand-set call-site defaults, the resulting
@@ -99,6 +102,16 @@ def _serving_metrics(doc: Dict[str, Any]) -> Dict[str, float]:
         out.update(preemptions=cell["preemptions"],
                    restores=cell["restores"],
                    pressure_survivors=cell["survivors"])
+    spec = doc.get("spec") or {}
+    live = {k: v for k, v in spec.items() if not k.endswith(":k0")}
+    for pick in ("paged", "contiguous"):
+        row = next((v for k, v in sorted(live.items())
+                    if k.startswith(pick + ":")), None)
+        if row is not None:
+            out.update(spec_tok_s=row["tok_s"],
+                       spec_accepted=row["spec_accepted"],
+                       spec_emitted=row["spec_emitted"])
+            break
     return out
 
 
@@ -111,7 +124,7 @@ def run_serving(log=_log) -> Dict[str, Dict[str, float]]:
         log(f"  serving cell {name!r} ...")
         with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
             argv = ["--smoke", "--prefill-chunk", "8", "--audit",
-                    "--faults", "--json", tmp.name] + extra
+                    "--faults", "--spec-k", "4", "--json", tmp.name] + extra
             with use_backend("pallas"):
                 serve_engine.main(argv)
             doc = json.loads(Path(tmp.name).read_text())
@@ -291,7 +304,8 @@ def compare(
 
     for cell in sorted(set(old.get("serving", {})) & set(new.get("serving", {}))):
         o, n = old["serving"][cell], new["serving"][cell]
-        for metric in ("tok_s", "prefill_tok_s", "ttft_ms", "ttft_ms_p99"):
+        for metric in ("tok_s", "prefill_tok_s", "ttft_ms", "ttft_ms_p99",
+                       "spec_tok_s"):
             if metric in o and metric in n:
                 timing(f"serving.{cell}", metric, o[metric], n[metric])
         if o.get("kv_bytes") != n.get("kv_bytes"):
@@ -306,6 +320,13 @@ def compare(
                     f"serving.{cell}.{metric}: {n[metric]} vs committed "
                     f"{o[metric]} (the pressure cell is deterministic — "
                     "the scheduler's behavior under faults changed)"
+                )
+        for metric in ("spec_accepted", "spec_emitted"):
+            if metric in o and metric in n and o[metric] != n[metric]:
+                regressions.append(
+                    f"serving.{cell}.{metric}: {n[metric]} vs committed "
+                    f"{o[metric]} (seeded workload + greedy acceptance are "
+                    "deterministic — the drafter or verifier changed)"
                 )
 
     for cell in sorted(set(old.get("ops", {})) & set(new.get("ops", {}))):

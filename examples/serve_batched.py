@@ -18,7 +18,7 @@ import jax
 
 from repro.configs.registry import get_arch
 from repro.models.model import build_model
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, configs_from_flags
 
 
 def make_requests(rng, n, vocab_size, gen):
@@ -54,6 +54,13 @@ def main():
                          "paged): attention families alias pages with "
                          "copy-on-write; recurrent families (ssm/hybrid) "
                          "restore page-boundary state snapshots")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft K tokens per row per "
+                         "step, verified through the chunked prefill path "
+                         "(0 = off; needs --prefill-chunk >= 2)")
+    ap.add_argument("--spec-drafter", default="prompt_lookup",
+                    choices=["prompt_lookup", "hybrid_ssm"])
+    ap.add_argument("--spec-ngram", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -63,12 +70,9 @@ def main():
                          cfg.vocab_size, args.gen)
 
     max_len = 12 + args.gen + 1
+    cache, config = configs_from_flags(args)
     eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
-                        steps_per_sync=args.steps_per_sync,
-                        layout=args.layout, page_size=args.page_size,
-                        n_pages=args.n_pages,
-                        prefill_chunk=args.prefill_chunk,
-                        prefix_sharing=args.prefix_sharing)
+                        cache=cache, config=config)
     rids = [eng.submit(toks, gen) for toks, gen in reqs]
 
     t0 = time.time()
@@ -91,6 +95,10 @@ def main():
         print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
               f"tokens served from shared pages/snapshots "
               f"({int(s['cow_pages'])} CoW copies)")
+    if "spec_accept_rate" in s:
+        print(f"speculation: {int(s['spec_accepted'])}/"
+              f"{int(s['spec_proposed'])} drafts accepted "
+              f"({s['spec_accept_rate']:.0%})")
     for i, rid in enumerate(rids[:3]):
         prompt = reqs[i][0]
         print(f"req {rid}: prompt[:4]={prompt[:4]} "

@@ -14,7 +14,7 @@
 #                                     both (default)
 #   ./scripts/ci.sh --matrix          the full smoke matrix locally:
 #                                     {reference,pallas} x {contiguous,paged}
-#   ./scripts/ci.sh --lint            invariant linter (R001-R005) + op
+#   ./scripts/ci.sh --lint            invariant linter (R001-R006) + op
 #                                     coverage lint (repro.analysis,
 #                                     incl. C104/C105 tuning-table
 #                                     staleness); fails on any finding
@@ -54,17 +54,22 @@ python -m pip install -q -r requirements-dev.txt ||
 # each pass: a small pool plus a scripted FaultPlan (preemption/host
 # spill, cancel, deadline storm) with survivor token-identity and
 # pool-conservation asserts — under the paged layout the jitted
-# _spill/_restore pair is audited too.
+# _spill/_restore pair is audited too.  --spec-k 4 adds the speculative-
+# decoding ablation (draft + chunked-verify + per-row acceptance, K=0
+# baseline token-identity asserted); the hybrid pass drafts with the
+# family's own Mamba layers (drafter=hybrid_ssm) so both drafter
+# implementations stay exercised.
 smoke() {
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1" --audit --faults
+            --layout "$1" --audit --faults --spec-k 4
     echo "== smoke (recurrent): family=hybrid layout=$1 =="
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
-            --layout "$1" --family hybrid --audit --faults
+            --layout "$1" --family hybrid --audit --faults \
+            --spec-k 4 --spec-drafter hybrid_ssm
 }
 
 case "${1:-}" in

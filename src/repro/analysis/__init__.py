@@ -49,6 +49,15 @@ R005  ssd-state-stays-f32
     Fix: keep the cast as ``jnp.float32`` (the kernel's out_shape already
     declares f32) or rename the value if it is genuinely not scan state.
 
+R006  no-raw-layout-kwargs
+    Serving library code (``serving/*.py``) must not re-introduce the
+    raw layout kwarg pile that ``repro.serving.config.CacheConfig``
+    replaced: a function parameter named ``layout``, or two or more of
+    ``page_size``/``n_pages``/``snapshots``/``host_spill`` on one
+    signature, is flagged.  ``config.py`` (defines the fields) and
+    ``pager.py`` (implements the paged layout) are out of scope.  Fix:
+    accept ``cache: CacheConfig`` and read the fields from it.
+
 Coverage lint (C101–C105, run by the same entry points)
 =======================================================
 
@@ -82,8 +91,8 @@ Runtime auditors (``repro.analysis.audit``)
 ===========================================
 
 ``jit_cache_audit(engine)`` wraps the engine's jitted entry points
-(``_step_n``/``_admit``/``_prefill``/``_release``/``_spill``/``_restore``
-— absent or ``None`` attributes are skipped) and raises
+(``_step_n``/``_spec_n``/``_admit``/``_prefill``/``_release``/``_spill``/
+``_restore`` — absent or ``None`` attributes are skipped) and raises
 ``JitCacheRetrace`` the moment any of them retraces (cache size > 1) —
 run it over a mixed prefill/decode/admission workload to prove the
 cache-size-1 standing note.  ``no_transfer_audit()`` arms

@@ -20,8 +20,9 @@ class JitCacheRetrace(AssertionError):
 
 #: Engine attributes wrapped by default — every jitted entry point
 #: (``_prefill`` only exists with chunked prefill; ``_spill``/``_restore``
-#: only on two-tier-pager engines — absent/None attributes are skipped).
-ENGINE_JIT_FNS = ("_step_n", "_admit", "_prefill", "_release",
+#: only on two-tier-pager engines; ``_spec_n`` only with speculative
+#: decoding — absent/None attributes are skipped).
+ENGINE_JIT_FNS = ("_step_n", "_spec_n", "_admit", "_prefill", "_release",
                   "_spill", "_restore")
 
 

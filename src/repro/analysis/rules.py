@@ -159,6 +159,8 @@ class R002ImplicitHostSync(Rule):
                 "engine_step",
                 "_sample",
                 "_step_n",
+                "_spec_step",
+                "_spec_n",
                 "_admit",
                 "_prefill_step",
                 "_release",
@@ -179,6 +181,14 @@ class R002ImplicitHostSync(Rule):
                 "_prompt_phase_rows",
                 "_match_prefix",
                 "step",
+            }
+        ),
+        "repro/serving/drafter.py": frozenset(
+            {
+                "propose",
+                "ingest",
+                "init_state",
+                "_layers",
             }
         ),
         "repro/models/lm.py": frozenset(
@@ -361,10 +371,68 @@ class R005SsdStateStaysF32(Rule):
                 )
 
 
+class R006NoRawLayoutKwargs(Rule):
+    """Serving library code must take ``CacheConfig``, not raw layout
+    kwargs."""
+
+    rule_id = "R006"
+    title = "no-raw-layout-kwargs"
+    hint = (
+        "accept cache: CacheConfig (repro.serving.config) instead of "
+        "re-introducing layout/page_size/n_pages/snapshots/host_spill "
+        "parameters — the typed config is the one construction surface; "
+        "pager.py (the layout implementation) and config.py itself are "
+        "out of scope"
+    )
+
+    # config.py defines the fields; pager.py implements the paged layout
+    # (its functions legitimately take page_size etc.)
+    EXEMPT = ("repro/serving/config.py", "repro/serving/pager.py")
+    #: a bare ``layout=`` parameter is damning on its own; the sizing
+    #: knobs only flag in combination (a lone ``page_size`` argument on
+    #: a helper is legitimate — a pile of them is a config bypass)
+    PILE = frozenset({"page_size", "n_pages", "snapshots", "host_spill"})
+
+    def applies(self, path: str) -> bool:
+        p = _norm(path)
+        return (
+            "repro/serving/" in p
+            and p.endswith(".py")
+            and not _endswith(p, self.EXEMPT)
+        )
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            args = node.args
+            names = {
+                a.arg
+                for a in (args.posonlyargs + args.args + args.kwonlyargs)
+            }
+            if "layout" in names:
+                yield self.finding(
+                    path,
+                    node,
+                    f"function {node.name}() takes a raw layout= parameter "
+                    "(bypasses CacheConfig)",
+                )
+                continue
+            pile = sorted(names & self.PILE)
+            if len(pile) >= 2:
+                yield self.finding(
+                    path,
+                    node,
+                    f"function {node.name}() re-grows the layout kwarg "
+                    f"pile {pile} (bypasses CacheConfig)",
+                )
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     R001DirectTpuImport(),
     R002ImplicitHostSync(),
     R003JitMustDonate(),
     R004NoProcessWideBackend(),
     R005SsdStateStaysF32(),
+    R006NoRawLayoutKwargs(),
 )

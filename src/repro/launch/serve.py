@@ -21,20 +21,17 @@ import jax.numpy as jnp
 from repro.configs.registry import get_arch
 from repro.models import lm as LM
 from repro.models.model import build_model
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, configs_from_flags
 from repro.serving.checks import assert_decode_matches_teacher_forced
 
 
 def _serve_engine(model, params, prompt, args) -> int:
     """Continuous-batching path: every request enters through the queue."""
     max_len = args.prompt_len + args.gen + 1
+    cache, config = configs_from_flags(args)
     eng = ServingEngine(
         model, params, batch=args.batch, max_len=max_len,
-        steps_per_sync=args.steps_per_sync,
-        layout=args.layout, page_size=args.page_size, n_pages=args.n_pages,
-        temperature=args.temperature, top_k=args.top_k,
-        prefill_chunk=args.prefill_chunk,
-        prefix_sharing=args.prefix_sharing,
+        cache=cache, config=config,
     )
     rids = [
         eng.submit(prompt[b].tolist(), args.gen) for b in range(args.batch)
@@ -61,6 +58,11 @@ def _serve_engine(model, params, prompt, args) -> int:
         print(f"prefix sharing: {int(s['shared_prompt_tokens'])} prompt "
               f"tokens served from shared pages/snapshots "
               f"({int(s['cow_pages'])} CoW copies)")
+    if "spec_accept_rate" in s:
+        print(f"speculation: {int(s['spec_accepted'])}/"
+              f"{int(s['spec_proposed'])} drafts accepted "
+              f"({s['spec_accept_rate']:.0%}), "
+              f"{int(s['spec_emitted'])} tokens via verify steps")
     print("sample:", outs[rids[0]][:16].tolist())
     return 0
 
@@ -119,6 +121,17 @@ def main(argv=None) -> int:
                          "paged): attention families alias pages with "
                          "copy-on-write; recurrent families (ssm/hybrid) "
                          "restore page-boundary state snapshots")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft K tokens per row per "
+                         "step and verify them through the chunked prefill "
+                         "path (0 = off; needs --prefill-chunk >= 2, "
+                         "greedy only)")
+    ap.add_argument("--spec-drafter", default="prompt_lookup",
+                    choices=["prompt_lookup", "hybrid_ssm"],
+                    help="draft source: n-gram prompt lookup (any family) "
+                         "or the hybrid family's own Mamba layers")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="prompt-lookup n-gram match length")
     ap.add_argument("--check", action="store_true",
                     help="verify decode path against teacher-forced forward")
     args = ap.parse_args(argv)
@@ -134,11 +147,11 @@ def main(argv=None) -> int:
         rc = _serve_engine(model, params, prompt, args)
     else:
         if (args.layout != "contiguous" or args.temperature > 0 or args.top_k
-                or args.prefix_sharing):
-            print(f"warning: --layout/--temperature/--top-k/--prefix-sharing "
-                  f"are engine features; the {cfg.family} fallback loop is "
-                  f"lockstep greedy over the contiguous cache and ignores "
-                  f"them")
+                or args.prefix_sharing or args.spec_k):
+            print(f"warning: --layout/--temperature/--top-k/--prefix-sharing/"
+                  f"--spec-k are engine features; the {cfg.family} fallback "
+                  f"loop is lockstep greedy over the contiguous cache and "
+                  f"ignores them")
         rc = _serve_lockstep(model, params, prompt, args, cfg)
 
     if args.check and cfg.family in ("dense", "moe", "ssm", "hybrid"):

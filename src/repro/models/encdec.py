@@ -91,14 +91,24 @@ def train_loss(cfg: ArchConfig, params, batch: Dict[str, jax.Array]):
 # -- serving ---------------------------------------------------------------
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
-                      *, per_row_pos: bool = False, snapshots: bool = False):
+                      *, per_row_pos: bool = False, snapshots: bool = False,
+                      cache=None):
     """Decode state.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector —
     signature parity with ``lm.init_decode_state`` so the serving engine's
     slot-refill path (per-row depths, masked cache writes) is not
     attention-LM-only by accident.  ``snapshots`` is accepted for the same
     parity and ignored: encdec carries no recurrent decode state (the lm
-    dense-family semantics)."""
+    dense-family semantics).  ``cache=`` accepts a
+    ``repro.serving.config.CacheConfig`` (duck-typed — models never import
+    serving) for config-object parity with ``lm``; encdec implements only
+    the contiguous slab, so a paged layout is rejected here rather than
+    silently ignored."""
     del snapshots
+    if cache is not None and cache.layout != "contiguous":
+        raise NotImplementedError(
+            "encdec decode state is contiguous-only — "
+            f"cache.layout {cache.layout!r} is not supported"
+        )
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     L = cfg.n_layers

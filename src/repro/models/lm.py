@@ -209,10 +209,14 @@ def init_decode_state(
     cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False,
     layout: str = "contiguous", page_size: int = 16,
     n_pages: Optional[int] = None, snapshots: bool = False,
-    host_spill: bool = False,
+    host_spill: bool = False, cache=None,
 ) -> Dict[str, jax.Array]:
     """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
     rows may sit at different sequence depths (continuous batching).
+
+    ``cache=`` accepts a ``repro.serving.config.CacheConfig`` (duck-typed
+    — models never import serving) and overrides the individual layout
+    kwargs, which remain for legacy call sites.
 
     ``layout`` picks the KV-cache representation (``KVCacheLayout``):
     ``"contiguous"`` is the dense ``(layers, B, max_len, Hkv, hd)`` slab;
@@ -242,6 +246,12 @@ def init_decode_state(
     ignore the flag — they have no page pool to relieve, so the engine
     never preempts them.
     """
+    if cache is not None:
+        layout = cache.layout
+        page_size = cache.page_size
+        n_pages = cache.n_pages
+        snapshots = cache.snapshots
+        host_spill = bool(cache.host_spill)
     if layout not in ("contiguous", "paged"):
         raise ValueError(f"unknown KV-cache layout {layout!r}")
     dt = cfg.dtype_()
@@ -861,7 +871,7 @@ def prefill_chunk(
     cfg: ArchConfig, params, state, toks: jax.Array,   # (B, C) int32
     width: jax.Array,                                  # () or (B,) int32
     *, active: Optional[jax.Array] = None,             # (B,) bool
-    cow: bool = False, snap_every: int = 0,
+    cow: bool = False, snap_every: int = 0, logits_all: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Ingest up to C prompt tokens per row in one step.
 
@@ -889,6 +899,12 @@ def prefill_chunk(
     a boundary without ending there records nothing for it — callers that
     need full boundary coverage (the prefix-sharing engine) clip chunk
     widths to end at boundaries.
+
+    ``logits_all=True`` (trace-time constant; the speculative-decoding
+    verifier) returns logits at *every* chunk position — ``(B, C, V)``
+    instead of ``(B, V)`` at the last real position.  In-chunk causality
+    makes slot ``j``'s logits exact whenever slots ``0..j`` hold true
+    tokens, which is precisely the prefix the greedy accept rule keeps.
 
     Requires ``per_row_pos`` decode state.  Sliding-window archs need the
     paged layout: the contiguous ring cache recycles slots the in-chunk
@@ -1025,10 +1041,18 @@ def prefill_chunk(
 
     # logits at each row's last real position (gather-then-norm: the final
     # norm and head are position-wise, so this equals the decode_step there)
-    last = jnp.take_along_axis(x, (width - 1)[:, None, None], axis=1)[:, 0]
-    h = C.norm(cfg, params["ln_f"], last)
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = C.dense(h, w)
+    if logits_all:
+        # verifier path: every chunk position's logits (B, C, V); padding
+        # positions carry garbage the caller masks by width
+        h = C.norm(cfg, params["ln_f"], x)
+        logits = C.dense(h, w)
+    else:
+        last = jnp.take_along_axis(
+            x, (width - 1)[:, None, None], axis=1
+        )[:, 0]
+        h = C.norm(cfg, params["ln_f"], last)
+        logits = C.dense(h, w)
     state = {**state, "pos": pos + jnp.where(active, width, 0)}
     if snap_every and "snap_table" in state:
         state = _snap_capture(state, state["pos"], active, snap_every)
@@ -1065,7 +1089,9 @@ def reset_decode_rows(
         raise ValueError(
             "reset_decode_rows needs per_row_pos=True decode state"
         )
-    known = {"k", "v", "ssm", "conv", "xk", "xv"}
+    # drf_* is the hybrid_ssm drafter's private recurrent state
+    # (repro.serving.drafter): batch axis 1, zeroed like ssm/conv
+    known = {"k", "v", "ssm", "conv", "xk", "xv", "drf_ssm", "drf_conv"}
     paged_keys = {"kp", "vp", "block_table", "page_free", "page_top",
                   "page_rc"}
     snap_keys = {"snap_ssm", "snap_conv", "snap_table", "snap_free",
@@ -1075,7 +1101,7 @@ def reset_decode_rows(
     hsnap_keys = {"hsnap_ssm", "hsnap_conv", "hsnap_table", "hsnap_free",
                   "hsnap_top", "hsnap_rc"}
     unknown = (set(state) - known - paged_keys - snap_keys - host_keys
-               - hsnap_keys - {"pos"})
+               - hsnap_keys - {"pos", "drf_pos"})
     if unknown:
         # fail loudly: a silently-skipped cache key would leak the previous
         # request's state into the slot's next occupant
@@ -1085,6 +1111,11 @@ def reset_decode_rows(
         )
     out = dict(state)
     out["pos"] = jnp.where(mask, jnp.asarray(start, jnp.int32), state["pos"])
+    if "drf_pos" in state:
+        # the drafter's ingestion clock resets with the row's decode clock
+        out["drf_pos"] = jnp.where(
+            mask, jnp.asarray(start, jnp.int32), state["drf_pos"]
+        )
     if "block_table" in state:
         # paged layout: a reset row *releases* its pages (the pool is global
         # and is never zeroed — a recycled page is fully overwritten by its

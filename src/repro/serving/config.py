@@ -1,0 +1,251 @@
+"""Typed serving configuration: the engine surface as frozen dataclasses.
+
+Eight PRs of feature growth left ``lm.init_decode_state``,
+``ServingEngine.__init__`` and the CLI drivers with overlapping kwarg
+piles (``layout``, ``page_size``, ``n_pages``, ``snapshots``,
+``host_spill``, ``prefill_chunk``, ``prefix_sharing``, …) copied at
+every construction site.  This module replaces the pile with two typed,
+frozen objects — split along the line the engine already drew:
+
+  * :class:`CacheConfig` — *state shape*: everything
+    ``init_decode_state`` needs to allocate the decode caches (KV
+    layout, page pool size, snapshot store, host spill tier).  Models
+    consume it duck-typed (``lm``/``encdec`` take ``cache=`` without
+    importing this module, so ``repro.models`` keeps zero dependency on
+    ``repro.serving``).
+  * :class:`EngineConfig` — *loop behavior*: scheduling
+    (``steps_per_sync``, ``prefill_chunk``, ``prefill_budget``,
+    ``prefix_sharing``), sampling (``seed``/``temperature``/``top_k``)
+    and speculative decoding (``spec:`` :class:`SpecConfig`).
+
+Validation lives with the data: each config raises on construction with
+the *same messages* the kwarg-era code raised at first use, so tests
+asserting on error text pass unchanged; combos spanning both objects
+(``prefix_sharing`` needs the paged layout; spec decoding needs a
+chunked verifier) are checked by :func:`validate_configs`, which the
+engine calls once at construction.
+
+Legacy kwargs keep working through one adapter — :func:`from_kwargs`
+emits a ``DeprecationWarning`` (once per call site under the default
+filters) and returns the equivalent ``(CacheConfig, EngineConfig)``
+pair.  CLI drivers share :func:`configs_from_flags` so flag→config
+translation exists exactly once instead of per driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding: draft K tokens, verify through the chunked
+    prefill path, advance each row by its accepted length.
+
+    ``drafter`` picks the proposal source (``repro.serving.drafter``):
+
+    * ``"prompt_lookup"`` — n-gram prompt lookup: the last ``ngram``
+      generated/prompt tokens are matched against the row's own earlier
+      tokens and the continuation after the most recent match is
+      proposed.  Stateless, works for every family, free.
+    * ``"hybrid_ssm"`` — the hybrid family's own Mamba layers (shared
+      weights, private recurrent drafter state) run as a K-step draft
+      model; attention layers are skipped, which is what makes drafting
+      cheap.  Hybrid family only.
+
+    Acceptance is greedy-only for now (token-identical to plain decode
+    by construction — every emitted token is the verifier's own argmax);
+    spec-sampling and tree drafts are ROADMAP follow-ons.
+    """
+
+    k: int = 4                       # drafted tokens per verify step
+    drafter: str = "prompt_lookup"   # "prompt_lookup" | "hybrid_ssm"
+    ngram: int = 2                   # prompt-lookup match length
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError("spec.k must be >= 1")
+        if self.drafter not in ("prompt_lookup", "hybrid_ssm"):
+            raise ValueError(
+                f"unknown drafter {self.drafter!r} "
+                "(expected 'prompt_lookup' or 'hybrid_ssm')"
+            )
+        if self.ngram < 1:
+            raise ValueError("spec.ngram must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Decode-cache shape: what ``init_decode_state`` allocates.
+
+    ``layout`` picks the KV representation (``"contiguous"`` slab or
+    ``"paged"`` pool + block tables — ``repro.serving.pager`` has the
+    contract); ``page_size``/``n_pages`` size the pool; ``snapshots``
+    adds the page-boundary recurrent-state store (recurrent families);
+    ``host_spill`` adds the host tier behind preemption (``None`` lets
+    the engine default it to "paged layout only").
+    """
+
+    layout: str = "contiguous"
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    snapshots: bool = False
+    host_spill: Optional[bool] = None
+
+    def __post_init__(self) -> None:
+        if self.layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown KV-cache layout {self.layout!r}")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.n_pages is not None and self.n_pages < 1:
+            raise ValueError("n_pages must be >= 1 (None = worst case)")
+        if self.snapshots and self.layout != "paged":
+            raise ValueError(
+                "recurrent-state snapshots use page-boundary granularity — "
+                "layout='paged' required"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving-loop behavior: scheduling, sampling, speculation.
+
+    Field semantics match the engine docstring they replaced:
+    ``steps_per_sync`` fused decode steps per harvest sync;
+    ``prefill_chunk=C`` chunked prompt ingestion (1 = token-by-token);
+    ``prefix_sharing`` page-level prompt sharing (paged layout only —
+    cross-checked in :func:`validate_configs`); ``prefill_budget``
+    bounds chunk steps per cycle (0 = unbounded); ``seed`` /
+    ``temperature`` / ``top_k`` drive per-request sampling (0.0 =
+    greedy); ``spec`` enables draft-and-verify decoding.
+    """
+
+    steps_per_sync: int = 8
+    prefill_chunk: int = 1
+    prefix_sharing: bool = False
+    prefill_budget: int = 0
+    seed: int = 0
+    temperature: float = 0.0
+    top_k: int = 0
+    spec: Optional[SpecConfig] = None
+
+    def __post_init__(self) -> None:
+        if self.steps_per_sync < 1:
+            raise ValueError("steps_per_sync must be >= 1")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.prefill_budget < 0:
+            raise ValueError("prefill_budget must be >= 0 (0 = unbounded)")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 = full vocab)")
+
+
+def validate_configs(cache: CacheConfig, config: EngineConfig) -> None:
+    """Cross-object invariants (each config validates itself on
+    construction; combos spanning both are checked here, with the same
+    messages the kwarg-era engine raised)."""
+    if config.prefix_sharing and cache.layout != "paged":
+        raise ValueError(
+            "prefix sharing needs layout='paged' — pages are the "
+            "sharing unit (the contiguous slab has per-row storage)"
+        )
+    spec = config.spec
+    if spec is None:
+        return
+    if config.prefill_chunk < 2:
+        raise ValueError(
+            "speculative decoding verifies drafts through the chunked "
+            "prefill path — prefill_chunk must be >= 2"
+        )
+    if config.temperature > 0.0:
+        raise ValueError(
+            "speculative decoding is greedy-only for now — temperature "
+            "must be 0 (spec-sampling is a ROADMAP follow-on)"
+        )
+    if spec.drafter == "hybrid_ssm" and config.prefix_sharing:
+        raise ValueError(
+            "drafter='hybrid_ssm' is incompatible with prefix_sharing — "
+            "snapshot restore rebuilds the model's recurrence, not the "
+            "drafter's private state"
+        )
+
+
+#: keys from the legacy kwarg pile, split by destination object
+_CACHE_KEYS = frozenset(
+    f.name for f in dataclasses.fields(CacheConfig)
+)
+_ENGINE_KEYS = frozenset(
+    f.name for f in dataclasses.fields(EngineConfig)
+)
+
+
+def from_kwargs(_stacklevel: int = 2, **kwargs):
+    """Adapter from the legacy kwarg pile to ``(CacheConfig,
+    EngineConfig)``.
+
+    Emits ``DeprecationWarning`` (once per call site under Python's
+    default warning filters) pointing at the caller; unknown keys raise
+    ``TypeError`` exactly like a bad keyword argument used to.
+    ``_stacklevel`` lets the engine's ``**legacy`` path attribute the
+    warning to the user's construction site instead of its own frame.
+    """
+    unknown = set(kwargs) - _CACHE_KEYS - _ENGINE_KEYS
+    if unknown:
+        raise TypeError(
+            f"unknown engine kwargs {sorted(unknown)} — see "
+            "repro.serving.config.CacheConfig / EngineConfig"
+        )
+    if not kwargs:        # nothing legacy about an all-defaults call
+        return CacheConfig(), EngineConfig()
+    warnings.warn(
+        "raw layout/engine kwargs are deprecated — pass "
+        "cache=CacheConfig(...) and config=EngineConfig(...) "
+        "(repro.serving.config; from_kwargs adapts legacy call sites)",
+        DeprecationWarning, stacklevel=_stacklevel,
+    )
+    cache = CacheConfig(
+        **{k: v for k, v in kwargs.items() if k in _CACHE_KEYS}
+    )
+    config = EngineConfig(
+        **{k: v for k, v in kwargs.items() if k in _ENGINE_KEYS}
+    )
+    return cache, config
+
+
+def configs_from_flags(args):
+    """Build ``(CacheConfig, EngineConfig)`` from an argparse namespace.
+
+    The one flag→config translation shared by ``launch/serve.py``,
+    ``examples/serve_batched.py`` and ``benchmarks/serve_engine.py``
+    (previously three hand-rolled copies).  Missing attributes fall back
+    to the config defaults, so drivers only declare the flags they
+    expose; ``--spec-k 0`` (or absent) means no speculation.
+    """
+    spec = None
+    k = int(getattr(args, "spec_k", 0) or 0)
+    if k > 0:
+        spec = SpecConfig(
+            k=k,
+            drafter=getattr(args, "spec_drafter", "prompt_lookup"),
+            ngram=int(getattr(args, "spec_ngram", 2)),
+        )
+    cache = CacheConfig(
+        layout=getattr(args, "layout", "contiguous"),
+        page_size=int(getattr(args, "page_size", 16)),
+        n_pages=getattr(args, "n_pages", None),
+        snapshots=bool(getattr(args, "snapshots", False)),
+        host_spill=getattr(args, "host_spill", None),
+    )
+    config = EngineConfig(
+        steps_per_sync=int(getattr(args, "steps_per_sync", 8)),
+        prefill_chunk=int(getattr(args, "prefill_chunk", 1)),
+        prefix_sharing=bool(getattr(args, "prefix_sharing", False)),
+        prefill_budget=int(getattr(args, "prefill_budget", 0)),
+        seed=int(getattr(args, "seed", 0)),
+        temperature=float(getattr(args, "temperature", 0.0)),
+        top_k=int(getattr(args, "top_k", 0)),
+        spec=spec,
+    )
+    validate_configs(cache, config)
+    return cache, config

@@ -54,6 +54,23 @@ row per decode step.  Here the whole control state lives on-device:
     token — the recurrence is *restored*, never skipped.  Shared depth is
     capped below the prompt's last token so the resume point is always a
     snapshotted boundary (recurrent sharing therefore never needs CoW).
+  * speculative decoding — ``config.spec`` (a ``SpecConfig``) turns the
+    decode phase into draft-and-verify: a drafter
+    (``repro.serving.drafter`` — n-gram prompt lookup, or the hybrid
+    family's own Mamba layers) proposes K tokens per row, and one
+    ``model.prefill_chunk`` call at width K+1 scores every slot
+    (``logits_all=True``) against the paged cache.  Each row keeps its
+    leading run of drafts that match the verifier's own argmax and
+    advances by the per-row accepted length — the same non-dividing-
+    width masking chunked prefill already uses — so acceptance is
+    greedy and *token-identical to plain decode by construction* (every
+    emitted token is the verifier's argmax).  Rejected suffixes roll
+    back: attention families rewind ``pos`` and release tail pages
+    (``pager.release_tail``); recurrent families score on a discarded
+    state and re-advance the original by the exact accepted width
+    (nothing to roll back).  All of it lives in one jitted ``_spec_n``
+    at cache size 1, with a device-side accept counter riding the
+    harvest sync.
   * pressure — the engine survives a pool smaller than its working set:
     when the queue head cannot reserve pages, the host-mirror scheduler
     preempts victim rows (lowest priority, then least progress),
@@ -77,6 +94,7 @@ isolated decode holds when ``capacity_factor >= n_experts``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, NamedTuple, Optional, Set
 
@@ -85,6 +103,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.config import (
+    CacheConfig, EngineConfig, from_kwargs, validate_configs,
+)
+from repro.serving.drafter import make_drafter
 from repro.serving.faults import FaultPlan
 from repro.serving.queue import Request, RequestQueue
 
@@ -218,12 +240,65 @@ def engine_step(model: Model, params, mstate, slots: SlotState,
     )
 
 
+class RequestHandle(int):
+    """What ``submit`` returns: the request id, plus the request-scoped
+    surface (``handle.cancel()``, ``handle.rid``).
+
+    Subclasses ``int`` so every pre-handle idiom keeps working — handles
+    index ``outputs``/``ttft`` dicts, format into messages, and compare
+    equal to the raw id.  The engine reference only powers the
+    convenience methods; the id alone remains a full citizen everywhere
+    the engine API takes one.
+    """
+
+    def __new__(cls, rid: int, engine: "ServingEngine"):
+        self = super().__new__(cls, rid)
+        self._engine = engine
+        return self
+
+    @property
+    def rid(self) -> int:
+        """The request id as a plain ``int``."""
+        return int(self)
+
+    def cancel(self) -> bool:
+        """Cancel this request (``ServingEngine.cancel`` semantics)."""
+        return self._engine.cancel(self.rid)
+
+
 class ServingEngine:
     """Fixed-shape continuous-batching engine over a ``Model``.
 
-    >>> eng = ServingEngine(model, params, batch=4, max_len=64)
-    >>> rid = eng.submit([3, 17, 5], max_new_tokens=16)
+    >>> eng = ServingEngine(model, params, batch=4, max_len=64,
+    ...                     cache=CacheConfig(layout="paged"),
+    ...                     config=EngineConfig(prefill_chunk=8))
+    >>> h = eng.submit([3, 17, 5], max_new_tokens=16)   # RequestHandle
     >>> outs = eng.run()          # {rid: np.ndarray of generated tokens}
+
+    Configuration is two frozen objects (``repro.serving.config``):
+    ``cache=CacheConfig(...)`` shapes the decode state (KV layout, page
+    pool, snapshot store, host spill tier) and ``config=EngineConfig(...)``
+    drives the loop (scheduling, sampling, speculation).  The raw kwargs
+    of earlier revisions (``layout=``, ``page_size=``, ``prefill_chunk=``,
+    …) still work through one adapter — ``config.from_kwargs`` — which
+    emits a ``DeprecationWarning`` per call site; mixing both styles is a
+    ``TypeError``.  All validation messages are unchanged from the
+    kwarg era (they moved into the config constructors and
+    ``validate_configs``).
+
+    ``config.spec=SpecConfig(k=K, drafter=...)`` enables speculative
+    decoding (greedy-only; requires ``prefill_chunk >= 2`` and
+    ``temperature == 0``): each fused decode interval drafts K tokens
+    per row and verifies them through the chunked-prefill path in one
+    jitted step, advancing every row by its accepted length.  Outputs
+    are token-identical to plain greedy decode (module docstring has the
+    argument); ``stats()`` gains ``spec_proposed`` / ``spec_accepted`` /
+    ``spec_emitted`` / ``spec_accept_rate``.  ``drafter="prompt_lookup"``
+    works for every supported family; ``drafter="hybrid_ssm"`` (the
+    hybrid family's Mamba layers as a weight-shared draft model) needs
+    ``family == "hybrid"`` and is incompatible with ``prefix_sharing``
+    (snapshot restore rebuilds the model's recurrence, not the drafter's
+    private state).
 
     ``layout="paged"`` swaps the KV cache for the page-pool representation
     (``repro.serving.pager``): admission reserves ``ceil((total_len-1)/
@@ -297,7 +372,9 @@ class ServingEngine:
     pops never find the free list dry — deferring to a strictly-
     higher-priority queue head that could itself fit.  ``cancel(
     req_id)`` and deadline expiry (absolute time ``submit +
-    deadline_ms``) take effect at the next harvest: still-queued
+    deadline_ms``, measured against ``time.perf_counter`` — the
+    monotonic host clock — at every harvest sync and every
+    queued-request sweep) take effect at the next harvest: still-queued
     requests leave the queue immediately; resident, mid-prefill, and
     spilled rows drain through the jitted release path, surrendering
     pages and slots in every tier with no payload recorded.
@@ -318,65 +395,84 @@ class ServingEngine:
         *,
         batch: int,
         max_len: int,
-        steps_per_sync: int = 8,
-        layout: str = "contiguous",
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        temperature: float = 0.0,
-        top_k: int = 0,
-        seed: int = 0,
-        prefill_chunk: int = 1,
-        prefix_sharing: bool = False,
-        prefill_budget: int = 0,
-        host_spill: Optional[bool] = None,
+        cache: Optional[CacheConfig] = None,
+        config: Optional[EngineConfig] = None,
         fault_plan: Optional[FaultPlan] = None,
+        **legacy,
     ) -> None:
+        if legacy:
+            if cache is not None or config is not None:
+                raise TypeError(
+                    "pass cache=CacheConfig(...) / config=EngineConfig(...) "
+                    "or the legacy kwargs, not both"
+                )
+            # one adapter owns the kwarg->config translation; the
+            # stacklevel points the DeprecationWarning at the caller's
+            # construction site, not this frame
+            cache, config = from_kwargs(_stacklevel=3, **legacy)
+        cache = cache if cache is not None else CacheConfig()
+        config = config if config is not None else EngineConfig()
+        validate_configs(cache, config)
         if model.cfg.family not in ("dense", "moe", "ssm", "hybrid"):
             raise NotImplementedError(
                 f"serving engine: unsupported family {model.cfg.family!r}"
             )
-        if steps_per_sync < 1:
-            raise ValueError("steps_per_sync must be >= 1")
-        prefill_chunk = int(prefill_chunk)
-        if prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1")
-        if (prefill_chunk > 1 and model.cfg.window
-                and layout != "paged"
+        if (config.prefill_chunk > 1 and model.cfg.window
+                and cache.layout != "paged"
                 and model.cfg.family in ("dense", "moe", "hybrid")):
             raise ValueError(
                 "chunked prefill on a sliding-window arch needs "
                 "layout='paged' (the contiguous ring cache recycles slots "
                 "the in-chunk queries still read)"
             )
-        if prefix_sharing and layout != "paged":
-            raise ValueError(
-                "prefix sharing needs layout='paged' — pages are the "
-                "sharing unit (the contiguous slab has per-row storage)"
-            )
+        steps_per_sync = config.steps_per_sync
+        prefill_chunk = config.prefill_chunk
+        page_size = cache.page_size
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
+        self.cache = cache
+        self.config = config
+        self.spec = config.spec
+        # flat attribute surface preserved from the kwarg era (tests and
+        # benchmark drivers read these)
         self.steps_per_sync = steps_per_sync
-        self.layout = layout
+        self.layout = cache.layout
         self.prefill_chunk = prefill_chunk
-        self.prefix_sharing = bool(prefix_sharing)
-        self.temperature = float(temperature)
-        self.top_k = int(top_k)
-        prefill_budget = int(prefill_budget)
-        if prefill_budget < 0:
-            raise ValueError("prefill_budget must be >= 0 (0 = unbounded)")
-        self.prefill_budget = prefill_budget
+        self.prefix_sharing = config.prefix_sharing
+        self.temperature = config.temperature
+        self.top_k = config.top_k
+        self.prefill_budget = config.prefill_budget
         self.queue = RequestQueue(max_len=max_len)
 
+        host_spill = cache.host_spill
         if host_spill is None:
             # preemption only makes sense where there are pages to spill
-            host_spill = layout == "paged"
+            host_spill = cache.layout == "paged"
+        # the engine's own construction dogfoods the typed config: the
+        # snapshot store exists when asked for explicitly or implied by
+        # prefix sharing on a recurrent family
         self._mstate = model.init_decode_state(
             batch, max_len, per_row_pos=True,
-            layout=layout, page_size=page_size, n_pages=n_pages,
-            snapshots=prefix_sharing, host_spill=host_spill,
+            cache=dataclasses.replace(
+                cache,
+                snapshots=cache.snapshots or config.prefix_sharing,
+                host_spill=host_spill,
+            ),
         )
+        # speculative decoding: build the drafter before the jitted
+        # closures (the prefill closure ingests for a stateful drafter);
+        # its private recurrent state merges into the decode-state dict
+        # so reset/spill/restore/donation treat it as lane state
+        self._drafter = None
+        if self.spec is not None:
+            self._drafter = make_drafter(self.spec, model.cfg)
+            if self._drafter.stateful:
+                self._mstate = {
+                    **self._mstate,
+                    **self._drafter.init_state(batch),
+                }
         # attention-free families have no pages regardless of the flag
         self._paged = "block_table" in self._mstate
         # recurrent families carry a page-boundary snapshot store exactly
@@ -446,7 +542,7 @@ class ServingEngine:
         # stream is a pure function of the request's identity, so
         # admission *order* (which priorities and preemption reshuffle)
         # cannot perturb any row's tokens
-        self._seed = int(seed)
+        self._seed = int(config.seed)
         # host mirror: which request occupies each row (None = free)
         self._slot_req: List[Optional[Request]] = [None] * batch
         # host mirror of per-row progress: the step schedule (chunk widths,
@@ -459,6 +555,11 @@ class ServingEngine:
         self.prefill_steps = 0  # chunked-prefill steps executed
         self.generated = 0      # tokens returned to callers
         self.prompt_tokens = 0  # prompt tokens ingested (host arithmetic)
+        # speculation counters: host mirrors of the device accumulator
+        # (refreshed at each harvest sync — never a dedicated round-trip)
+        self.spec_proposed = 0  # verifiable draft positions scored
+        self.spec_accepted = 0  # drafts that matched the verifier argmax
+        self.spec_emitted = 0   # tokens emitted by spec steps (incl. bonus)
         self.ttft: Dict[int, float] = {}        # req_id -> seconds
         self._t_submit: Dict[int, float] = {}
         # SLO / cancellation ledgers (host mirror; enforcement happens at
@@ -580,25 +681,196 @@ class ServingEngine:
             self._spill = None
             self._restore = None
 
+        drafter = self._drafter
         if prefill_chunk > 1:
             def _prefill_step(params, mstate, slots):
-                return engine_step(model, params, mstate, slots,
-                                   temperature=self.temperature,
-                                   top_k=self.top_k, chunk=prefill_chunk,
-                                   cow=cow, snap_every=snap_every)
+                mstate, out = engine_step(model, params, mstate, slots,
+                                          temperature=self.temperature,
+                                          top_k=self.top_k,
+                                          chunk=prefill_chunk,
+                                          cow=cow, snap_every=snap_every)
+                if drafter is not None and drafter.stateful:
+                    # keep the drafter's ingestion clock within one chunk
+                    # of the rows it will draft for: decode-phase rows
+                    # ride prefill steps at width 1 while ingestion
+                    # absorbs up to ``prefill_chunk`` committed tokens,
+                    # so the lag entering ``_spec_n`` is bounded by the
+                    # last spec stride (<= K+1, the catch-up chunk there)
+                    mstate = drafter.ingest(params, mstate, out.tokens,
+                                            out.progress, prefill_chunk)
+                return mstate, out
             self._prefill = jax.jit(_prefill_step, donate_argnums=(1, 2))
         else:
             self._prefill = None
 
+        if self.spec is not None:
+            spec_k = self.spec.k
+            recurrent = self._recurrent
+
+            def _spec_step(params, mstate, slots):
+                bsz, buf_len = slots.tokens.shape
+                act = slots.active
+                prog = slots.progress
+                drafts, mstate = drafter.propose(
+                    params, mstate, slots.tokens, prog, act
+                )
+                # verify chunk: the current feed token plus the K drafts
+                cur = jnp.take_along_axis(
+                    slots.tokens,
+                    jnp.clip(prog, 0, buf_len - 1)[:, None], axis=1,
+                )
+                chunk = jnp.concatenate([cur, drafts], axis=1)
+                # per-row verify width: never past the row's last token,
+                # never across a snapshot boundary without ending on it
+                limit = jnp.full((bsz,), spec_k + 1, jnp.int32)
+                if snap_every:
+                    limit = jnp.minimum(
+                        limit, snap_every - prog % snap_every
+                    )
+                w = jnp.clip(slots.total_len - 1 - prog, 1, limit)
+                if recurrent:
+                    # scored pass on a *discarded* state: the recurrence
+                    # cannot roll back a rejected suffix, so the commit
+                    # is a second, exact-width pass on the original
+                    # state below (its page allocations are discarded
+                    # with it — the pager arrays are functional)
+                    logits, _ = model.prefill_chunk(
+                        params, mstate, chunk, w, active=act,
+                        cow=False, snap_every=0, logits_all=True,
+                    )
+                else:
+                    logits, ms2 = model.prefill_chunk(
+                        params, mstate, chunk, w, active=act,
+                        cow=cow, snap_every=snap_every, logits_all=True,
+                    )
+                # greedy acceptance: keep the leading run of drafts that
+                # equal the verifier's own argmax — in-chunk causality
+                # makes slot j's logits exact whenever slots 0..j hold
+                # true tokens, so induction gives token-identity with
+                # plain greedy decode
+                g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                ok = (g[:, :spec_k] == chunk[:, 1:]) & (
+                    jnp.arange(spec_k, dtype=jnp.int32)[None, :]
+                    < (w - 1)[:, None]
+                )
+                acc_n = jnp.sum(
+                    jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1
+                )
+                stride = jnp.where(act, acc_n + 1, 0)
+                if recurrent:
+                    _, mstate = model.prefill_chunk(
+                        params, mstate, chunk,
+                        jnp.maximum(stride, 1), active=act,
+                        cow=cow, snap_every=snap_every,
+                    )
+                else:
+                    # attention caches need no second pass: garbage KV
+                    # beyond the accepted frontier is never attended
+                    # (causal masking by position) — rewind ``pos`` and,
+                    # under the paged layout, give back the tail blocks
+                    mstate = {**ms2, "pos": prog + stride}
+                    if paged:
+                        from repro.serving import pager as PG
+
+                        pstate, bt = PG.release_tail(
+                            PG.PagerState(
+                                mstate["page_free"], mstate["page_top"],
+                                mstate["page_rc"],
+                            ),
+                            mstate["block_table"], prog + stride, act,
+                            page_size=page_size,
+                        )
+                        mstate = {**mstate, "block_table": bt,
+                                  "page_free": pstate.free,
+                                  "page_top": pstate.top,
+                                  "page_rc": pstate.rc}
+                # scatter the accepted tokens g[:, 0..acc_n] at
+                # positions prog+1 .. prog+1+acc_n (all generated:
+                # spec rows always satisfy prog >= prompt_len - 1)
+                col = jax.lax.broadcasted_iota(
+                    jnp.int32, (bsz, buf_len), 1
+                )
+                rel = col - (prog + 1)[:, None]
+                sel = (act[:, None] & (rel >= 0) & (rel <= acc_n[:, None])
+                       & (col >= slots.prompt_len[:, None]))
+                val = jnp.take_along_axis(
+                    g, jnp.clip(rel, 0, spec_k), axis=1
+                )
+                tokens = jnp.where(sel, val, slots.tokens)
+                progress = prog + stride
+                active = act & (progress < slots.total_len - 1)
+                inc = jnp.stack([
+                    jnp.sum(jnp.where(act, acc_n, 0)),
+                    jnp.sum(jnp.where(act, w - 1, 0)),
+                    jnp.sum(stride),
+                ]).astype(jnp.int32)
+                return mstate, SlotState(
+                    tokens=tokens,
+                    prompt_len=slots.prompt_len,
+                    total_len=slots.total_len,
+                    progress=progress,
+                    active=active,
+                    rng=slots.rng,
+                ), inc
+
+            def _spec_n(params, mstate, slots, acc, run):
+                # same freeze contract as ``_step_n`` (budget-stopped
+                # rows keep their chunk boundaries); ``acc`` is the
+                # cumulative device counter [accepted, proposed, emitted]
+                frozen = slots.active & ~run
+
+                def body(_, carry):
+                    ms, sl, ac = carry
+                    ms, sl, inc = _spec_step(params, ms, sl)
+                    return ms, sl, ac + inc
+
+                mstate, out, acc = jax.lax.fori_loop(
+                    0, steps_per_sync, body,
+                    (mstate, slots._replace(active=slots.active & run),
+                     acc),
+                )
+                return (mstate, out._replace(active=out.active | frozen),
+                        acc)
+
+            self._spec_n = jax.jit(_spec_n, donate_argnums=(1, 2, 3))
+            self._acc = jnp.zeros((3,), jnp.int32)
+        else:
+            self._spec_n = None
+            self._acc = None
+
     # -- request intake ------------------------------------------------------
 
-    def submit(self, tokens, max_new_tokens: int, *, priority: int = 0,
-               deadline_ms: Optional[float] = None) -> int:
-        """Queue a request.  ``priority`` (larger = more important) and
-        ``deadline_ms`` (SLO budget from now; None = none) feed the
-        scheduler contract in the class docstring.  Rejections —
-        over-length, empty, pool-impossible, queue-full — always name the
-        request id they rejected."""
+    def submit(self, tokens, max_new_tokens: Optional[int] = None, *,
+               priority: int = 0,
+               deadline_ms: Optional[float] = None) -> "RequestHandle":
+        """Queue a request; returns a :class:`RequestHandle` (an ``int``
+        subclass — the request id everywhere an id is expected, plus
+        ``.cancel()``).
+
+        Accepts either the positional form (``submit(tokens,
+        max_new_tokens, ...)``) or a prebuilt spec: ``submit(
+        Request.spec(tokens, max_new_tokens, priority=..., ...))``.
+        ``priority`` (larger = more important) and ``deadline_ms`` (SLO
+        budget from now, against the monotonic clock; None = none) feed
+        the scheduler contract in the class docstring.  Rejections —
+        over-length, empty, pool-impossible, queue-full — always name
+        the request id they rejected."""
+        if isinstance(tokens, Request):
+            req = tokens
+            if max_new_tokens is not None:
+                raise TypeError(
+                    "submit(Request, ...) takes the whole spec from the "
+                    "Request — max_new_tokens must not also be passed"
+                )
+            tokens = req.tokens
+            max_new_tokens = req.max_new_tokens
+            priority = req.priority
+            deadline_ms = req.deadline_ms
+        elif max_new_tokens is None:
+            raise TypeError(
+                "submit() needs max_new_tokens unless a Request spec "
+                "is passed"
+            )
         if self._paged:
             need = self._pages_needed(len(tokens) + max_new_tokens)
             if need > self.n_pages:
@@ -616,7 +888,7 @@ class ServingEngine:
         self._t_submit[rid] = now
         if deadline_ms is not None:
             self._deadline[rid] = now + deadline_ms / 1e3
-        return rid
+        return RequestHandle(rid, self)
 
     def cancel(self, req_id: int) -> bool:
         """Cancel a request wherever it lives.  Still-queued: removed
@@ -1107,30 +1379,70 @@ class ServingEngine:
                 if (req is not None and not self._row_spilled[b]
                         and req.prompt_len - self._row_progress[b] >= 2):
                     run[b] = False
-        self._mstate, self._slots = self._step_n(
-            self.params, self._mstate, self._slots, jnp.asarray(run)
-        )
-        self.steps += self.steps_per_sync
-        crossed += self._advance_mirror(
-            [self.steps_per_sync if run[b] else 0
-             for b in range(self.batch)]
-        )
-        # the one host sync of the cycle (allocator tops ride along — no
-        # extra round-trips)
+        if self._spec_n is not None:
+            # draft-and-verify decode: per-row strides are data-dependent
+            # (accepted lengths), so the host mirror is refreshed from
+            # the harvest readback below instead of replayed
+            # arithmetically
+            self._mstate, self._slots, self._acc = self._spec_n(
+                self.params, self._mstate, self._slots, self._acc,
+                jnp.asarray(run),
+            )
+            self.steps += self.steps_per_sync
+        else:
+            self._mstate, self._slots = self._step_n(
+                self.params, self._mstate, self._slots, jnp.asarray(run)
+            )
+            self.steps += self.steps_per_sync
+            crossed += self._advance_mirror(
+                [self.steps_per_sync if run[b] else 0
+                 for b in range(self.batch)]
+            )
+        # the one host sync of the cycle (allocator tops — and, under
+        # speculation, per-row progress and the accept counter — ride
+        # along; no extra round-trips)
         fetch = [self._slots.active, self._slots.tokens]
+        i_prog = i_acc = i_page = i_snap = -1
+        if self._spec_n is not None:
+            fetch.append(self._slots.progress)
+            i_prog = len(fetch) - 1
+            fetch.append(self._acc)
+            i_acc = len(fetch) - 1
         if self._paged:
             fetch.append(self._mstate["page_top"])
+            i_page = len(fetch) - 1
         if self._snap:
             fetch.append(self._mstate["snap_top"])
+            i_snap = len(fetch) - 1
         got = list(jax.device_get(tuple(fetch)))
         active, tokens = got[0], got[1]
+        if self._spec_n is not None:
+            # mirror refresh: the device's per-row progress is the truth
+            # under speculation; the same deltas the deterministic replay
+            # would have produced (ingestion counts, TTFT crossings) are
+            # recovered from old-vs-new
+            devprog = got[i_prog]
+            for b, req in enumerate(self._slot_req):
+                if req is None:
+                    continue
+                old = self._row_progress[b]
+                dev = int(devprog[b])
+                plen = req.prompt_len
+                self.prompt_tokens += min(dev, plen) - min(old, plen)
+                if old < plen <= dev:
+                    crossed.append(req.req_id)
+                self._row_progress[b] = dev
+            acc = got[i_acc]
+            self.spec_accepted = int(acc[0])
+            self.spec_proposed = int(acc[1])
+            self.spec_emitted = int(acc[2])
         if self._paged:
             self.peak_pages_in_use = max(
-                self.peak_pages_in_use, self.n_pages - int(got[2])
+                self.peak_pages_in_use, self.n_pages - int(got[i_page])
             )
         if self._snap:
             self.peak_snaps_in_use = max(
-                self.peak_snaps_in_use, self.n_snap_slots - int(got[-1])
+                self.peak_snaps_in_use, self.n_snap_slots - int(got[i_snap])
             )
         # the readback above materialized every token this cycle produced,
         # so first-token latencies are stamped here, not at dispatch (the
@@ -1217,6 +1529,9 @@ class ServingEngine:
         self.ttft.clear()
         self.steps = self.prefill_steps = 0
         self.generated = self.prompt_tokens = 0
+        self.spec_proposed = self.spec_accepted = self.spec_emitted = 0
+        if self._acc is not None:
+            self._acc = jnp.zeros((3,), jnp.int32)
         self.peak_pages_in_use = self.peak_snaps_in_use = 0
         self.shared_prompt_tokens = self.cow_pages = 0
         self.preemptions = self.restores = 0
@@ -1265,6 +1580,13 @@ class ServingEngine:
         if self._spillable:
             out["preemptions"] = float(self.preemptions)
             out["restores"] = float(self.restores)
+        if self.spec is not None:
+            out["spec_proposed"] = float(self.spec_proposed)
+            out["spec_accepted"] = float(self.spec_accepted)
+            out["spec_emitted"] = float(self.spec_emitted)
+            out["spec_accept_rate"] = (
+                self.spec_accepted / max(self.spec_proposed, 1)
+            )
         out["cancelled"] = float(len(self.cancelled))
         out["expired"] = float(len(self.expired))
         return out
@@ -1278,15 +1600,33 @@ def serve_all(
     batch: int,
     max_len: int,
     steps_per_sync: int = 8,
+    cache: Optional[CacheConfig] = None,
+    config: Optional[EngineConfig] = None,
     **engine_kwargs,
 ) -> Dict[int, np.ndarray]:
     """Convenience: submit ``[(tokens, max_new_tokens), ...]`` and drain.
 
-    Returns outputs keyed by submission order (0..n-1)."""
-    eng = ServingEngine(
-        model, params, batch=batch, max_len=max_len,
-        steps_per_sync=steps_per_sync, **engine_kwargs,
-    )
+    Accepts the typed config objects (``cache=`` / ``config=`` — the
+    preferred surface; ``steps_per_sync`` then lives in ``config``) or
+    the legacy kwarg pile, which flows through the engine's deprecation
+    adapter.  Returns outputs keyed by submission order (0..n-1)."""
+    if cache is not None or config is not None:
+        eng = ServingEngine(
+            model, params, batch=batch, max_len=max_len,
+            cache=cache, config=config, **engine_kwargs,
+        )
+    elif engine_kwargs:
+        # legacy kwarg pile: flows through the engine's from_kwargs
+        # adapter (DeprecationWarning attributed to this call's caller)
+        eng = ServingEngine(
+            model, params, batch=batch, max_len=max_len,
+            steps_per_sync=steps_per_sync, **engine_kwargs,
+        )
+    else:
+        eng = ServingEngine(
+            model, params, batch=batch, max_len=max_len,
+            config=EngineConfig(steps_per_sync=steps_per_sync),
+        )
     for tokens, gen in requests:
         eng.submit(tokens, gen)
     return eng.run()

@@ -278,20 +278,30 @@ def alloc_range(
     The multi-page-per-step generalization of ``alloc_on_write`` for
     chunked prefill: ``max_chunk`` statically bounds ``end - start + 1``,
     so the loop unrolls to a fixed ladder of single-block allocations
-    (fixed shapes, nothing retraces).  Each rung targets block
+    (fixed shapes, nothing retraces).  Rung ``k`` targets block
     ``start//page_size + k`` and is masked out for rows whose range ends
-    earlier, so rows needing fewer blocks allocate fewer pages.
+    in an earlier block, so rows needing fewer blocks allocate fewer
+    pages.  The gate compares *block indices*, not positions: a range
+    starting mid-page (speculative-decoding verify chunks start at
+    arbitrary positions) can cross into its next block fewer than
+    ``page_size`` positions after ``start``, so gating on
+    ``start + k*page_size <= end`` would skip a block the chunk writes.
     """
     b = block_table.shape[0]
     start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
     end_b = jnp.broadcast_to(jnp.asarray(end, jnp.int32).reshape(-1), (b,))
     if active is None:
         active = jnp.ones((b,), bool)
+    start_blk = start_b // page_size
+    end_blk = end_b // page_size
     for k in range((max_chunk - 1) // page_size + 2):
-        idx = start_b + k * page_size        # one position inside block k
+        blk = start_blk + k
+        # first position of block ``blk`` inside the range (== start for
+        # the first rung, the block's base position after that)
+        idx = jnp.maximum(start_b, blk * page_size)
         pager, block_table = alloc_on_write(
             pager, block_table, jnp.minimum(idx, end_b),
-            active & (idx <= end_b), page_size=page_size,
+            active & (blk <= end_blk), page_size=page_size,
         )
     return pager, block_table
 
@@ -318,6 +328,45 @@ def release_rows(
     rc = jnp.maximum(rc, 0)
     free, top = _push_freed(pager.free, pager.top, freed)
     block_table = jnp.where(mask[:, None], -1, block_table)
+    return PagerState(free, top, rc), block_table
+
+
+def release_tail(
+    pager: PagerState,
+    block_table: jax.Array,   # (B, max_blocks) int32
+    frontier: jax.Array,      # (B,) int32: highest live position + 1
+    mask: jax.Array,          # (B,) bool: rows to roll back
+    *,
+    page_size: int,
+) -> Tuple[PagerState, jax.Array]:
+    """Release the masked rows' blocks strictly *beyond* their write
+    frontier (speculative-decoding rollback).
+
+    The verify step of draft-and-verify allocates pages for the full
+    drafted chunk before knowing how much survives acceptance; a row
+    that accepts fewer tokens keeps its blocks up to and including the
+    one covering position ``frontier - 1`` (the last *written* cache
+    position is ``frontier - 1`` — the feed at ``frontier`` only
+    predicts) and returns the over-allocated tail to the pool.  Same
+    refcount discipline as ``release_rows`` (the tail pages of a
+    verify-chunk are freshly allocated and private, but the masked
+    decrement keeps the conservation invariant unconditional), and a
+    row whose tail is empty is a no-op — so calling it every spec step
+    composes with release-on-completion."""
+    n_pages = pager.free.shape[0]
+    b, max_blocks = block_table.shape
+    fr = jnp.broadcast_to(jnp.asarray(frontier, jnp.int32).reshape(-1), (b,))
+    keep_blk = (jnp.maximum(fr, 1) - 1) // page_size
+    col = jax.lax.broadcasted_iota(jnp.int32, block_table.shape, 1)
+    give = (mask[:, None] & (block_table >= 0)
+            & (col > keep_blk[:, None]))
+    pages = jnp.where(give, block_table, n_pages).reshape(-1)
+    dec = jnp.zeros((n_pages,), jnp.int32).at[pages].add(1, mode="drop")
+    rc = pager.rc - dec
+    freed = (pager.rc > 0) & (rc <= 0) & (dec > 0)
+    rc = jnp.maximum(rc, 0)
+    free, top = _push_freed(pager.free, pager.top, freed)
+    block_table = jnp.where(give, -1, block_table)
     return PagerState(free, top, rc), block_table
 
 

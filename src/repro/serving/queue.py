@@ -60,6 +60,22 @@ class Request:
     def total_len(self) -> int:
         return self.prompt_len + self.max_new_tokens
 
+    @classmethod
+    def spec(cls, tokens: Sequence[int], max_new_tokens: int, *,
+             priority: int = 0,
+             deadline_ms: Optional[float] = None) -> "Request":
+        """Build an unsubmitted request spec for ``ServingEngine.submit``
+        (``req_id`` is a sentinel — the queue assigns the real id at
+        submission; passing a spec to ``queue.submit`` is not supported,
+        only the engine unpacks it)."""
+        return cls(
+            req_id=-1,
+            tokens=np.asarray(tokens, np.int32).reshape(-1),
+            max_new_tokens=int(max_new_tokens),
+            priority=int(priority),
+            deadline_ms=deadline_ms,
+        )
+
 
 def _sort_key(req: Request) -> Tuple[int, float, int]:
     return (

@@ -1,0 +1,20 @@
+"""Suite-wide fixtures.
+
+Every XLA-CPU executable keeps an mmap'd code region alive for as long
+as jax's internal caches reference it, and the kernel caps a process at
+``vm.max_map_count`` regions (65530 by default).  A full ``pytest -x``
+run compiles enough engine/kernel variants to cross that cap, at which
+point the *next* compile segfaults inside LLVM's section allocator —
+deterministically, at whatever test the cumulative count happens to
+land on.  Dropping the caches at module boundaries keeps the map count
+bounded; the only cost is recompiling jits that would not have been
+shared across modules anyway.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_code_maps():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,11 @@
+"""Known-bad R006 fixture: serving code re-growing the raw layout kwarg
+pile ``CacheConfig`` replaced.  Linted under the virtual path
+``src/repro/serving/engine.py``."""
+
+
+def build_engine(model, params, layout="contiguous"):  # R006: raw layout=
+    return model, params, layout
+
+
+def make_state(batch, max_len, page_size=16, n_pages=None):  # R006: pile
+    return batch, max_len, page_size, n_pages

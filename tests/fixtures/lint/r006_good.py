@@ -1,0 +1,12 @@
+"""Known-good R006 fixture: serving code takes the typed config objects
+(one raw knob on a helper signature is below the pile threshold)."""
+
+
+def build_engine(model, params, cache=None, config=None):
+    return model, params, cache, config
+
+
+def make_state(batch, max_len, page_size=16):
+    # a single layout-adjacent knob on an internal helper is fine; two or
+    # more is the pile R006 exists to stop
+    return batch, max_len, page_size

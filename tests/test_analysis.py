@@ -45,6 +45,10 @@ CASES = {
         "src/repro/kernels/mamba_scan.py",
         [("R005", 7), ("R005", 11)],
     ),
+    "r006": (
+        "src/repro/serving/engine.py",
+        [("R006", 6), ("R006", 10)],
+    ),
 }
 
 

@@ -1,0 +1,446 @@
+"""Speculative decoding through the chunked-prefill verifier, and the
+typed config API that carries it.
+
+The load-bearing property is *token identity*: greedy draft-and-verify
+must emit exactly the tokens plain greedy decode would, for every family
+x layout x backend cell — acceptance only ever skips forward through the
+verifier's own argmax sequence.  The config tests pin the kwargs→config
+adapter (round trip, one deprecation per call site, unchanged error
+messages) so legacy call sites keep working verbatim.
+"""
+import dataclasses
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.audit import jit_cache_audit, no_transfer_audit
+from repro.core import use_backend
+from repro.configs.registry import get_arch
+from repro.models.model import build_model
+from repro.serving import (
+    CacheConfig,
+    EngineConfig,
+    HybridSSMDrafter,
+    PagerState,
+    Request,
+    RequestHandle,
+    ServingEngine,
+    SpecConfig,
+    alloc_range,
+    configs_from_flags,
+    from_kwargs,
+    init_block_table,
+    init_pager,
+    serve_all,
+    validate_configs,
+)
+
+BACKENDS = ["reference", "pallas"]
+SPEC_ARCHS = ["qwen2.5-3b", "qwen3-moe-235b-a22b", "zamba2-2.7b"]
+
+
+def _cfg(arch):
+    cfg = dataclasses.replace(get_arch(arch).reduced(), dtype="float32")
+    if cfg.family == "moe":
+        # the verifier routes B*(K+1) tokens through the experts in one
+        # step; lift capacity so routing stays lossless at chunk width
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts)
+        )
+    return cfg
+
+
+def _model_params(cfg):
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(cfg, n=4, gen=5, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(3, 8))
+            ).tolist(),
+            gen,
+        )
+        for _ in range(n)
+    ]
+
+
+def _drain(model, params, reqs, *, cache=None, config=None, audit=True):
+    eng = ServingEngine(
+        model, params, batch=2, max_len=24, cache=cache, config=config
+    )
+    handles = [eng.submit(toks, gen) for toks, gen in reqs]
+    if audit:
+        with jit_cache_audit(eng), no_transfer_audit():
+            got = eng.run()
+    else:
+        got = eng.run()
+    return eng, [got[h].tolist() for h in handles]
+
+
+# ---------------------------------------------------------------------------
+# token identity: the tentpole invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+def test_greedy_spec_token_identity(arch, layout, backend):
+    """dense/moe/hybrid x layout x backend: speculative decode emits the
+    exact token sequence of plain greedy decode, with the jit caches at
+    size 1 and no implicit transfers, through mid-stream admission (4
+    requests over 2 slots)."""
+    cfg = _cfg(arch)
+    model, params = _model_params(cfg)
+    reqs = _requests(cfg)
+    with use_backend(backend):
+        _, base = _drain(
+            model, params, reqs,
+            config=EngineConfig(steps_per_sync=3, prefill_chunk=4),
+        )
+        eng, spec = _drain(
+            model, params, reqs,
+            cache=CacheConfig(layout=layout, page_size=4),
+            config=EngineConfig(
+                steps_per_sync=3, prefill_chunk=4,
+                spec=SpecConfig(k=3, ngram=2),
+            ),
+        )
+    assert spec == base
+    st = eng.stats()
+    assert st["spec_proposed"] > 0 and st["spec_emitted"] > 0
+    assert eng._spec_n._cache_size() == 1
+    if layout == "paged":
+        # rollback + completion released every page
+        assert (np.asarray(eng._mstate["block_table"]) == -1).all()
+
+
+def test_spec_accepts_drafts_on_repetitive_tail():
+    """Prompt-lookup earns its keep: greedy continuations of a random-init
+    model loop quickly, so the n-gram drafter's accept rate is > 0 and
+    fewer verify steps than emitted tokens are needed."""
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    reqs = _requests(cfg, gen=8)
+    eng, spec = _drain(
+        model, params, reqs,
+        cache=CacheConfig(layout="paged", page_size=4),
+        config=EngineConfig(
+            steps_per_sync=3, prefill_chunk=4, spec=SpecConfig(k=4, ngram=2)
+        ),
+    )
+    st = eng.stats()
+    assert st["spec_accepted"] > 0
+    assert 0.0 < st["spec_accept_rate"] <= 1.0
+    # every accepted draft rode a verify step that also emitted the
+    # verifier's own token, so emitted strictly exceeds accepted
+    assert st["spec_emitted"] > st["spec_accepted"]
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_hybrid_ssm_drafter_token_identity(layout):
+    """The self-drafting hybrid: Mamba layers propose, the full model
+    verifies — still token-identical, and the drafter's private state
+    rides the decode-state pytree (reset/donation safe)."""
+    cfg = _cfg("zamba2-2.7b")
+    model, params = _model_params(cfg)
+    reqs = _requests(cfg)
+    _, base = _drain(
+        model, params, reqs,
+        config=EngineConfig(steps_per_sync=3, prefill_chunk=4),
+    )
+    eng, spec = _drain(
+        model, params, reqs,
+        cache=CacheConfig(layout=layout, page_size=4),
+        config=EngineConfig(
+            steps_per_sync=3, prefill_chunk=4,
+            spec=SpecConfig(k=3, drafter="hybrid_ssm"),
+        ),
+    )
+    assert spec == base
+    assert eng.stats()["spec_proposed"] > 0
+    assert "drf_ssm" in eng._mstate and "drf_pos" in eng._mstate
+
+
+def test_ssm_two_phase_verify_token_identity():
+    """Pure-SSM family takes the discard-then-commit verify (the
+    recurrence cannot rewind) — identity must still hold."""
+    cfg = _cfg("mamba2-2.7b")
+    model, params = _model_params(cfg)
+    reqs = _requests(cfg)
+    _, base = _drain(
+        model, params, reqs,
+        config=EngineConfig(steps_per_sync=3, prefill_chunk=4),
+    )
+    _, spec = _drain(
+        model, params, reqs,
+        config=EngineConfig(
+            steps_per_sync=3, prefill_chunk=4, spec=SpecConfig(k=3)
+        ),
+    )
+    assert spec == base
+
+
+def test_alloc_range_maps_block_crossed_mid_page():
+    """Regression: a range starting mid-page (spec verify chunks start at
+    arbitrary positions) crosses into its next block fewer than page_size
+    positions after start — the crossed block must still be mapped."""
+    pager = init_pager(8)
+    bt = init_block_table(1, 4)
+    # positions 7..8 with page_size=4 touch blocks 1 and 2
+    pager, bt = alloc_range(
+        pager,
+        bt,
+        jnp.asarray([7], jnp.int32),
+        jnp.asarray([8], jnp.int32),
+        page_size=4,
+        max_chunk=2,
+    )
+    got = np.asarray(bt)[0]
+    assert got[1] >= 0 and got[2] >= 0, got
+    assert int(pager.top) == 6
+
+
+# ---------------------------------------------------------------------------
+# typed config API: adapter round trip, deprecation, validation
+# ---------------------------------------------------------------------------
+
+
+def test_from_kwargs_round_trip():
+    cache, config = from_kwargs(
+        layout="paged", page_size=8, n_pages=32, snapshots=False,
+        steps_per_sync=5, prefill_chunk=4, prefix_sharing=True,
+        temperature=0.5, top_k=3, seed=11, prefill_budget=2,
+    )
+    assert cache == CacheConfig(layout="paged", page_size=8, n_pages=32)
+    assert config == EngineConfig(
+        steps_per_sync=5, prefill_chunk=4, prefix_sharing=True,
+        temperature=0.5, top_k=3, seed=11, prefill_budget=2,
+    )
+    # empty call -> pure defaults, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert from_kwargs() == (CacheConfig(), EngineConfig())
+
+
+def test_from_kwargs_warns_once_per_call_site():
+    def legacy_site():
+        return from_kwargs(layout="paged", page_size=4)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")
+        legacy_site()
+        legacy_site()  # same call site: the "default" filter dedupes
+    msgs = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1
+    assert "CacheConfig" in str(msgs[0].message)
+
+
+def test_from_kwargs_rejects_unknown_keys():
+    with pytest.raises(TypeError, match="unknown engine kwargs"):
+        from_kwargs(layotu="paged")
+
+
+def test_legacy_kwargs_equal_config_objects():
+    """An engine built from the kwarg pile produces byte-identical output
+    to one built from the config objects (the adapter is semantics-free)."""
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    reqs = _requests(cfg, n=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = ServingEngine(
+            model, params, batch=2, max_len=24,
+            layout="paged", page_size=4, steps_per_sync=3, prefill_chunk=4,
+        )
+    hs = [eng.submit(t, g) for t, g in reqs]
+    legacy = [eng.run()[h].tolist() for h in hs]
+    _, typed = _drain(
+        model, params, reqs,
+        cache=CacheConfig(layout="paged", page_size=4),
+        config=EngineConfig(steps_per_sync=3, prefill_chunk=4),
+        audit=False,
+    )
+    assert legacy == typed
+    assert eng.cache == CacheConfig(layout="paged", page_size=4)
+    assert eng.config.steps_per_sync == 3
+
+
+def test_engine_rejects_mixing_legacy_and_config():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(
+            model, params, batch=2, max_len=16,
+            cache=CacheConfig(), layout="paged",
+        )
+
+
+@pytest.mark.parametrize(
+    "build, msg",
+    [
+        (lambda: CacheConfig(layout="ring"), "unknown KV-cache layout"),
+        (lambda: CacheConfig(page_size=0), "page_size must be >= 1"),
+        (
+            lambda: CacheConfig(snapshots=True),
+            "layout='paged' required",
+        ),
+        (lambda: SpecConfig(k=0), "spec.k must be >= 1"),
+        (lambda: SpecConfig(drafter="oracle"), "unknown drafter"),
+        (lambda: SpecConfig(ngram=0), "spec.ngram must be >= 1"),
+        (
+            lambda: EngineConfig(steps_per_sync=0),
+            "steps_per_sync must be >= 1",
+        ),
+        (
+            lambda: EngineConfig(prefill_budget=-1),
+            "prefill_budget must be >= 0",
+        ),
+        (lambda: EngineConfig(top_k=-1), "top_k must be >= 0"),
+    ],
+)
+def test_invalid_config_fields_raise(build, msg):
+    with pytest.raises(ValueError, match=msg):
+        build()
+
+
+@pytest.mark.parametrize(
+    "cache, config, msg",
+    [
+        (
+            CacheConfig(),
+            EngineConfig(prefix_sharing=True),
+            "prefix sharing needs layout='paged'",
+        ),
+        (
+            CacheConfig(layout="paged"),
+            EngineConfig(prefill_chunk=1, spec=SpecConfig()),
+            "prefill_chunk must be >= 2",
+        ),
+        (
+            CacheConfig(layout="paged"),
+            EngineConfig(
+                prefill_chunk=4, temperature=1.0, spec=SpecConfig()
+            ),
+            "greedy-only",
+        ),
+        (
+            CacheConfig(layout="paged"),
+            EngineConfig(
+                prefill_chunk=4, prefix_sharing=True,
+                spec=SpecConfig(drafter="hybrid_ssm"),
+            ),
+            "incompatible with prefix_sharing",
+        ),
+    ],
+)
+def test_invalid_config_combinations_raise(cache, config, msg):
+    with pytest.raises(ValueError, match=msg):
+        validate_configs(cache, config)
+
+
+def test_hybrid_ssm_drafter_requires_hybrid_family():
+    cfg = _cfg("qwen2.5-3b")
+    with pytest.raises(ValueError, match="family 'hybrid' required"):
+        HybridSSMDrafter(SpecConfig(drafter="hybrid_ssm"), cfg)
+
+
+def test_configs_from_flags_reads_spec_knobs():
+    import argparse
+
+    ns = argparse.Namespace(
+        layout="paged", page_size=8, steps_per_sync=4, prefill_chunk=4,
+        spec_k=3, spec_drafter="prompt_lookup", spec_ngram=2,
+    )
+    cache, config = configs_from_flags(ns)
+    assert cache == CacheConfig(layout="paged", page_size=8)
+    assert config.spec == SpecConfig(k=3, ngram=2)
+    cache2, config2 = configs_from_flags(argparse.Namespace())
+    assert (cache2, config2) == (CacheConfig(), EngineConfig())
+
+
+# ---------------------------------------------------------------------------
+# submit surface: Request specs, handles, real-clock deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_submit_returns_usable_handle():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    eng = ServingEngine(
+        model, params, batch=2, max_len=16,
+        config=EngineConfig(steps_per_sync=3),
+    )
+    h = eng.submit([1, 2, 3], 4)
+    assert isinstance(h, RequestHandle)
+    assert h == 0 and h.rid == 0  # the handle *is* the rid
+    out = eng.run()
+    assert out[h].tolist() == out[0].tolist()  # indexable by either
+
+
+def test_submit_accepts_request_spec():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    eng = ServingEngine(
+        model, params, batch=2, max_len=16,
+        config=EngineConfig(steps_per_sync=3),
+    )
+    h = eng.submit(Request.spec([1, 2, 3, 4], 6, priority=2))
+    with pytest.raises(TypeError, match="must not also be passed"):
+        eng.submit(Request.spec([1, 2], 3), 5)
+    with pytest.raises(TypeError, match="needs max_new_tokens"):
+        eng.submit([1, 2])
+    out = eng.run()
+    assert len(out[h]) == 6
+
+
+def test_handle_cancel_and_deadline_drain():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    eng = ServingEngine(
+        model, params, batch=2, max_len=16,
+        config=EngineConfig(steps_per_sync=3),
+    )
+    keep = eng.submit([1, 2, 3], 4)
+    gone = eng.submit([4, 5, 6], 4)
+    assert gone.cancel() is True
+    late = eng.submit([7, 8], 4, deadline_ms=0.0)
+    time.sleep(0.005)  # the deadline clock is real (perf_counter)
+    out = eng.run()
+    assert keep.rid in out and len(out[keep]) == 4
+    assert gone.rid in eng.cancelled and gone.rid not in out
+    assert late.rid in eng.expired and late.rid not in out
+
+
+def test_generous_deadline_completes():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    out = None
+    eng = ServingEngine(
+        model, params, batch=2, max_len=16,
+        config=EngineConfig(steps_per_sync=3),
+    )
+    h = eng.submit([1, 2, 3], 4, deadline_ms=60_000.0)
+    out = eng.run()
+    assert len(out[h]) == 4 and not eng.expired
+
+
+def test_serve_all_takes_config_objects():
+    cfg = _cfg("qwen2.5-3b")
+    model, params = _model_params(cfg)
+    outs = serve_all(
+        model, params, [([1, 2, 3], 4)], batch=2, max_len=16,
+        config=EngineConfig(
+            steps_per_sync=2, prefill_chunk=4, spec=SpecConfig(k=2)
+        ),
+    )
+    assert len(outs[0]) == 4
