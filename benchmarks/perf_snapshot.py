@@ -21,7 +21,12 @@ Each ``benchmarks/trajectory/BENCH_%04d.json`` carries:
   fixed, so a drift here is a scheduler behavior change, not noise), and
   — from the speculative-decoding ablation — ``spec_tok_s`` (timing
   band) plus ``spec_accepted`` / ``spec_emitted`` (exact: seeded
-  workload, greedy acceptance, deterministic drafter).
+  workload, greedy acceptance, deterministic drafter).  Three extra
+  dense-family paged cells (``kv_f32``/``kv_bf16``/``kv_int8``) pin the
+  KV storage ladder: identical seeded workloads whose peak resident-KV
+  bytes must land exactly on 1 : 1/2 : 1/4 — ``validate_bench`` rejects
+  the snapshot otherwise, so the quantized-capacity claim is enforced,
+  not just reported.
 * ``ops`` — for every autotuned shape case (``repro.tuning.autotune``
   drives the same cells the sweep used): wall ms with the committed
   tuning table vs the hand-set call-site defaults, the resulting
@@ -77,6 +82,20 @@ _SERVING_CELLS = {
     "default": [],
     # recurrent+attention family: chunked SSD prefill, snapshot sharing
     "hybrid": ["--family", "hybrid"],
+    # the kv_dtype storage ladder on the dense family's paged pool: the
+    # same seeded workload at f32 / bf16 / int8 storage, so the three
+    # cells' peak resident-KV bytes must land exactly on 1 : 1/2 : 1/4
+    # (the quantized cell exactly half the 16-bit cell) —
+    # ``validate_bench`` rejects any snapshot where the ladder is off.
+    # ``--layout both`` keeps the layout-ablation section alive: kv_bytes
+    # is read from its paged row (the main smoke arch is attention-free,
+    # so the engine cell itself holds no KV pages), and the sub-f32 cells
+    # re-assert the exact byte ratio against their in-run paged_f32 twin
+    "kv_f32": ["--family", "dense", "--layout", "both"],
+    "kv_bf16": ["--family", "dense", "--layout", "both",
+                "--kv-dtype", "bf16"],
+    "kv_int8": ["--family", "dense", "--layout", "both",
+                "--kv-dtype", "int8"],
 }
 
 
@@ -252,6 +271,33 @@ def validate_bench(doc: Any) -> List[str]:
                         "ttft_ms_p99", "kv_bytes"):
                 if not isinstance(metrics.get(fld), (int, float)):
                     errs.append(f"serving[{cell!r}].{fld} must be a number")
+        # the kv_dtype ladder, when present, must be *exact*: same seeded
+        # workload, storage itemsize is the only degree of freedom
+        ladder = {
+            k: serving[k].get("kv_bytes")
+            for k in ("kv_f32", "kv_bf16", "kv_int8")
+            if isinstance(serving.get(k), dict)
+        }
+        if len(ladder) == 3 and all(
+            isinstance(v, (int, float)) for v in ladder.values()
+        ):
+            f32b, bf, q8 = (ladder["kv_f32"], ladder["kv_bf16"],
+                            ladder["kv_int8"])
+            if bf * 2 != f32b:
+                errs.append(
+                    f"kv ladder: bf16 kv_bytes {bf} is not exactly half "
+                    f"the f32 cell {f32b}"
+                )
+            if q8 * 2 != bf:
+                errs.append(
+                    f"kv ladder: int8 kv_bytes {q8} is not exactly half "
+                    f"the bf16 cell {bf}"
+                )
+            if q8 * 4 != f32b:
+                errs.append(
+                    f"kv ladder: int8 kv_bytes {q8} is not exactly a "
+                    f"quarter of the f32 cell {f32b}"
+                )
     ops = doc.get("ops")
     if not isinstance(ops, dict):
         errs.append("'ops' must be an object")

@@ -75,6 +75,27 @@ def _audit_ctx(eng, enabled):
     return jit_cache_audit(eng) if enabled else contextlib.nullcontext()
 
 
+def _kv_dtype(args, layout):
+    """Paged cells inherit ``--kv-dtype``; the contiguous slab is never
+    quantized (CacheConfig enforces the same rule)."""
+    return args.kv_dtype if layout == "paged" else "f32"
+
+
+def _quant_note(section):
+    """Cross-grain token-identity asserts are waived under int8 pools.
+
+    Per-page scales make the quantization grain part of the write path: a
+    chunked write quantizes a whole page rung against one amax, while a
+    token-by-token write max-merges and requantizes — dequantized content
+    can differ by a fraction of a quantization step, which is enough to
+    flip greedy near-ties.  Cells that share one write grain (host vs
+    engine at chunk 1, pressured vs unpressured) still assert exact
+    identity; int8-vs-f32 parity is asserted at controlled horizons in
+    tests/test_kv_quant.py."""
+    print(f"  (token-identity assert waived under kv_dtype=int8: "
+          f"{section} changes the quantization grain)")
+
+
 def make_requests(seed, n, vocab_size, gen, lo=4, hi=12):
     rng = np.random.default_rng(seed)
     return [
@@ -84,22 +105,28 @@ def make_requests(seed, n, vocab_size, gen, lo=4, hi=12):
     ]
 
 
-def run_host_loop(model, params, reqs, batch, max_len):
+def run_host_loop(model, params, reqs, batch, max_len, cache=None):
     """The pre-engine loop: per-row Python control with host syncs.
 
     One fix over the seed example is kept so the comparison is between two
     *correct* schedulers: admitted rows get their decode caches reset (the
-    seed leaked the previous request's SSM state into its replacement)."""
+    seed leaked the previous request's SSM state into its replacement).
+
+    ``cache`` mirrors the engine's CacheConfig: under ``--kv-dtype int8``
+    the engine-vs-host token assert is only exact when both loops write
+    the same quantized pool token-by-token (same quantization grain)."""
     queue = [jnp.asarray(t, jnp.int32) for t, _ in reqs]
     gens = [g for _, g in reqs]
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     reset = jax.jit(model.reset_decode_rows, donate_argnums=(0,))
     # compile outside the timed region (a server compiles once at startup)
-    wstate = model.init_decode_state(batch, max_len, per_row_pos=True)
+    wstate = model.init_decode_state(batch, max_len, per_row_pos=True,
+                                     cache=cache)
     wstate = reset(wstate, jnp.zeros((batch,), bool))
     logits, wstate = decode(params, wstate, jnp.zeros((batch,), jnp.int32))
     jax.block_until_ready(logits)
-    state = model.init_decode_state(batch, max_len, per_row_pos=True)
+    state = model.init_decode_state(batch, max_len, per_row_pos=True,
+                                    cache=cache)
     slots = [None] * batch
     progress = [0] * batch
     outputs = {}
@@ -210,28 +237,52 @@ def compare_layouts(args):
     from repro.serving.pager import pages_needed
     full_pool = args.batch * (-(-max_len // page))
     max_need = max(pages_needed(len(t) + g, page) for t, g in reqs)
-    rows = {}
-    for name, cache in (
+    quant = args.kv_dtype != "f32"
+    pool = max(max_need, full_pool // 2)
+    cells = [
         ("contiguous", CacheConfig()),
-        ("paged", CacheConfig(layout="paged", page_size=page,
-                              n_pages=max(max_need, full_pool // 2))),
-    ):
+        ("paged", CacheConfig(layout="paged", page_size=page, n_pages=pool,
+                              kv_dtype=args.kv_dtype)),
+    ]
+    if quant:
+        # the f32 twin of the quantized pool: token-identity baseline for
+        # the contiguous compare and denominator of the exact-2x byte check
+        cells.append(("paged_f32", CacheConfig(layout="paged",
+                                               page_size=page,
+                                               n_pages=pool)))
+    rows = {}
+    for name, cache in cells:
         rows[name] = run_engine(model, params, reqs, args.batch, max_len,
                                 args.steps_per_sync, audit=args.audit,
                                 cache=cache)
+    ident = "paged_f32" if quant else "paged"
     for i in range(len(reqs)):
-        a, b = rows["contiguous"]["outputs"][i], rows["paged"]["outputs"][i]
-        assert a == b, f"request {i}: contiguous {a} != paged {b}"
+        a, b = rows["contiguous"]["outputs"][i], rows[ident]["outputs"][i]
+        assert a == b, f"request {i}: contiguous {a} != {ident} {b}"
+    ratio = {"f32": 1, "bf16": 2, "int8": 4}[args.kv_dtype]
+    if quant:
+        # the packed payload must land exactly on the itemsize ladder —
+        # bf16 = 1/2 the f32 pool, int8 = 1/4 (per-page scales ride in a
+        # side pool the byte counter deliberately excludes)
+        assert rows["paged"]["kv_bytes"] * ratio == rows["paged_f32"]["kv_bytes"], (
+            f"{args.kv_dtype} pool not exactly 1/{ratio} the f32 pool: "
+            f"{rows['paged']['kv_bytes']} vs {rows['paged_f32']['kv_bytes']}"
+        )
     print(f"arch={args.kv_arch} requests={args.requests} batch={args.batch} "
-          f"gen={args.gen} prompt_len {lo}..{hi - 1} page_size={page}")
+          f"gen={args.gen} prompt_len {lo}..{hi - 1} page_size={page} "
+          f"kv_dtype={args.kv_dtype}")
     print(f"  {'layout':<12} {'gen tok/s':>10} {'peak KV bytes':>14} "
           f"{'vs slab':>8}")
     slab = rows["contiguous"]["kv_bytes"]
-    for name in ("contiguous", "paged"):
+    for name, _ in cells:
         r = rows[name]
         print(f"  {name:<12} {r['tok_s']:>10.1f} {r['kv_bytes']:>14d} "
               f"{r['kv_bytes'] / slab:>7.0%}")
-    print("  (outputs token-identical)")
+    if quant:
+        print(f"  (contiguous vs paged_f32 token-identical; {args.kv_dtype} "
+              f"resident KV exactly 1/{ratio} the f32 pool)")
+    else:
+        print("  (outputs token-identical)")
     return rows
 
 
@@ -274,7 +325,8 @@ def compare_prefix_sharing(args):
     def run(sharing):
         eng = ServingEngine(
             model, params, batch=n, max_len=max_len,
-            cache=CacheConfig(layout="paged", page_size=args.page_size),
+            cache=CacheConfig(layout="paged", page_size=args.page_size,
+                              kv_dtype=args.kv_dtype),
             config=EngineConfig(
                 steps_per_sync=args.steps_per_sync,
                 prefill_chunk=args.prefill_chunk, prefix_sharing=sharing,
@@ -306,9 +358,16 @@ def compare_prefix_sharing(args):
 
     rows = {name: run(s) for name, s in (("unshared", False),
                                          ("shared", True))}
-    assert rows["shared"]["outputs"] == rows["unshared"]["outputs"], (
-        "prefix sharing changed tokens"
-    )
+    if args.kv_dtype != "int8":
+        # holds for bf16 too: the rounding is element-wise, so shared and
+        # unshared pools store bitwise-identical prefix pages
+        assert rows["shared"]["outputs"] == rows["unshared"]["outputs"], (
+            "prefix sharing changed tokens"
+        )
+    else:
+        # a sharer resumes mid-page: its boundary page mixes donor-grain
+        # prefix slots with tail rungs the unshared run quantized together
+        _quant_note("prefix sharing")
     assert rows["shared"]["shared"] > 0, "sharing never engaged"
     print(f"arch={args.kv_arch} [{cfg.family}] requests={n} "
           f"prefix_len={plen} tail=4 gen={gen} page_size={args.page_size} "
@@ -325,7 +384,9 @@ def compare_prefix_sharing(args):
     if rows["shared"]["kv_bytes"]:   # attention-free archs have no KV pages
         drop = rows["unshared"]["kv_bytes"] / rows["shared"]["kv_bytes"]
         msg = f"  resident-KV drop {drop:.1f}x," + msg[1:]
-    print(msg + " (outputs token-identical)")
+    ident = ("outputs token-identical" if args.kv_dtype != "int8"
+             else "identity waived under int8")
+    print(msg + f" ({ident})")
     return rows
 
 
@@ -363,7 +424,8 @@ def compare_prefill(args):
                else (args.layout,))
     rows = {}
     for layout in layouts:
-        cache = CacheConfig(layout=layout, page_size=args.page_size)
+        cache = CacheConfig(layout=layout, page_size=args.page_size,
+                            kv_dtype=_kv_dtype(args, layout))
         for pc in chunks:
             rows[(layout, pc)] = run_engine(
                 model, params, reqs, args.batch, max_len,
@@ -371,9 +433,16 @@ def compare_prefill(args):
                 config=EngineConfig(steps_per_sync=args.steps_per_sync,
                                     prefill_chunk=pc),
             )
-    base = rows[(layouts[0], 1)]["outputs"]
-    for key, r in rows.items():
-        assert r["outputs"] == base, f"{key}: outputs diverge from baseline"
+    if args.kv_dtype != "int8":
+        # bf16 included: chunked and token-by-token writes round the same
+        # values element-wise, so every chunk width stores the same pool
+        base = rows[(layouts[0], 1)]["outputs"]
+        for key, r in rows.items():
+            assert r["outputs"] == base, (
+                f"{key}: outputs diverge from baseline"
+            )
+    else:
+        _quant_note("chunk width")
     print(f"arch={args.kv_arch} requests={args.prefill_requests} "
           f"batch={args.batch} prompt_len={plen} gen={args.prefill_gen} "
           f"chunk={args.prefill_chunk}")
@@ -384,11 +453,13 @@ def compare_prefill(args):
               f"{r['ttft_ms']:>12.1f} {r['tok_s']:>10.1f} "
               f"{r['steps']:>6d} {r['prefill_steps']:>4d}")
     if args.prefill_chunk > 1:
+        ident = ("outputs token-identical" if args.kv_dtype != "int8"
+                 else "identity waived under int8")
         for layout in layouts:
             speedup = (rows[(layout, args.prefill_chunk)]["prefill_tok_s"]
                        / rows[(layout, 1)]["prefill_tok_s"])
             print(f"  {layout}: prompt-ingestion speedup "
-                  f"{speedup:.2f}x (outputs token-identical)")
+                  f"{speedup:.2f}x ({ident})")
     return rows
 
 
@@ -467,7 +538,8 @@ def run_spec(args):
                else (args.layout,))
     rows = {}
     for layout in layouts:
-        cache = CacheConfig(layout=layout, page_size=args.page_size)
+        cache = CacheConfig(layout=layout, page_size=args.page_size,
+                            kv_dtype=_kv_dtype(args, layout))
         for k in [0] + ks:
             spec = (SpecConfig(k=k, drafter=args.spec_drafter,
                                ngram=args.spec_ngram) if k else None)
@@ -477,15 +549,23 @@ def run_spec(args):
                 config=EngineConfig(steps_per_sync=args.steps_per_sync,
                                     prefill_chunk=pc, spec=spec),
             )
+    quant_paged = args.kv_dtype == "int8" and "paged" in layouts
     for (layout, kk), r in rows.items():
-        base = rows[(layout, "k0")]["outputs"]
-        assert r["outputs"] == base, (
-            f"{layout} {kk}: speculative outputs diverge from plain decode"
-        )
-        if kk != "k0" and predictable:
-            assert r["spec_accepted"] > 0, (
-                f"{layout} {kk}: no draft was ever accepted"
+        if _kv_dtype(args, layout) != "int8":
+            base = rows[(layout, "k0")]["outputs"]
+            assert r["outputs"] == base, (
+                f"{layout} {kk}: speculative outputs diverge from plain "
+                f"decode"
             )
+            if kk != "k0" and predictable:
+                assert r["spec_accepted"] > 0, (
+                    f"{layout} {kk}: no draft was ever accepted"
+                )
+    if quant_paged:
+        # rejected drafts max-merge into page scales before the rewind, and
+        # scales never shrink — the verifier reads a slightly coarser page
+        # than plain decode ever wrote
+        _quant_note("draft-write rewind")
     print(f"arch={args.kv_arch} [{cfg.family}] requests={args.requests} "
           f"batch={args.batch} gen={gen} drafter={args.spec_drafter} "
           f"ngram={args.spec_ngram} chunk={pc}")
@@ -502,6 +582,8 @@ def run_spec(args):
     if not predictable:
         print("  (pre-pass found no lookup-predictable continuations at "
               "this scale — accept-rate floor waived, identity still held)")
+    ident = ("outputs token-identical" if not quant_paged
+             else "f32 cells token-identical")
     if gen >= 16 and predictable and args.spec_drafter == "prompt_lookup":
         for layout in layouts:
             base = rows[(layout, "k0")]["tok_s"]
@@ -511,10 +593,9 @@ def run_spec(args):
                 f"plain-decode baseline {base:.1f} on the repeated-suffix "
                 "cell"
             )
-        print("  (speculation >= 1.3x plain decode per layout; outputs "
-              "token-identical)")
+        print(f"  (speculation >= 1.3x plain decode per layout; {ident})")
     else:
-        print("  (outputs token-identical across K)")
+        print(f"  ({ident} across K)")
     return rows
 
 
@@ -560,9 +641,13 @@ def _pressure_cell(args, layout):
 
     def mk(n_pages=None, budget=0):
         paged = layout == "paged"
+        # survivor bit-identity survives int8: baseline and pressured runs
+        # share one chunk decomposition per row, and spill/restore moves
+        # quantized payload and scales byte-exactly
         cache = CacheConfig(
             layout=layout, page_size=4 if paged else 16,
             n_pages=n_pages if paged else None,
+            kv_dtype=_kv_dtype(args, layout),
         )
         return ServingEngine(
             model, params, batch=2, max_len=40, cache=cache,
@@ -680,7 +765,8 @@ def run_open_loop(args):
         full_pool = args.batch * (-(-max_len // page))
         max_need = max(pages_needed(len(p) + gen, page) for p in prompts)
         cache = CacheConfig(layout="paged", page_size=page,
-                            n_pages=max(max_need, (2 * full_pool) // 3))
+                            n_pages=max(max_need, (2 * full_pool) // 3),
+                            kv_dtype=args.kv_dtype)
     eng = ServingEngine(model, params, batch=args.batch, max_len=max_len,
                         cache=cache,
                         config=EngineConfig(
@@ -753,6 +839,14 @@ def main(argv=None):
                     help="scope the single-layout sections to one KV "
                          "layout (a CI matrix cell); 'both' also runs the "
                          "cross-layout ablation")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="KV-pool storage precision for the paged cells "
+                         "(bf16: half-width storage through the same "
+                         "kernels at 1/2 the resident bytes; int8: "
+                         "per-(page, head)-scaled payload at 1/4, "
+                         "dequantized inside the "
+                         "attention kernels; contiguous cells stay f32)")
     ap.add_argument("--spec-k", default="2,4",
                     help="comma list of draft widths K for the speculative-"
                          "decoding ablation (0 skips it); each K runs "
@@ -822,10 +916,22 @@ def main(argv=None):
     reqs = make_requests(0, args.requests, cfg.vocab_size, args.gen)
     max_len = 12 + args.gen + 1
 
+    if args.kv_dtype != "f32" and args.layout != "paged":
+        print(f"note: --kv-dtype {args.kv_dtype} only applies to paged "
+              f"pools; layout={args.layout} keeps its non-paged cells f32")
     main_cache = None
+    host_cache = None
     if args.layout == "paged":
-        main_cache = CacheConfig(layout="paged", page_size=args.page_size)
-    host = run_host_loop(model, params, reqs, args.batch, max_len)
+        main_cache = CacheConfig(layout="paged", page_size=args.page_size,
+                                 kv_dtype=args.kv_dtype)
+        if args.kv_dtype != "f32":
+            # the main cell feeds prompts token-by-token on both sides
+            # (EngineConfig default prefill_chunk=1), so giving the host
+            # loop the same sub-f32 pool keeps the storage precision and
+            # write grain — and therefore the token streams — identical
+            host_cache = main_cache
+    host = run_host_loop(model, params, reqs, args.batch, max_len,
+                         cache=host_cache)
     eng = run_engine(model, params, reqs, args.batch, max_len,
                      args.steps_per_sync, audit=args.audit, cache=main_cache)
 
@@ -836,7 +942,8 @@ def main(argv=None):
         assert a == b, f"request {i}: host {a} != engine {b}"
 
     print(f"arch={args.arch} requests={args.requests} batch={args.batch} "
-          f"gen={args.gen} steps_per_sync={args.steps_per_sync}")
+          f"gen={args.gen} steps_per_sync={args.steps_per_sync}"
+          + (f" kv_dtype={args.kv_dtype}" if args.layout == "paged" else ""))
     print(f"  {'loop':<10} {'gen tok/s':>10} {'steps':>7} {'seconds':>8}")
     for name, r in (("host-loop", host), ("engine", eng)):
         print(f"  {name:<10} {r['tok_s']:>10.1f} {r['steps']:>7d} "

@@ -46,6 +46,10 @@ def main():
                          "tokens, not batch*max_len)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="KV-pool storage precision (sub-f32 needs --layout "
+                         "paged; bf16 = 1/2, int8 = 1/4 the resident bytes)")
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens ingested per engine step (chunked "
                          "prefill; 1 = token-by-token)")

@@ -14,7 +14,7 @@
 #                                     both (default)
 #   ./scripts/ci.sh --matrix          the full smoke matrix locally:
 #                                     {reference,pallas} x {contiguous,paged}
-#   ./scripts/ci.sh --lint            invariant linter (R001-R006) + op
+#   ./scripts/ci.sh --lint            invariant linter (R001-R007) + op
 #                                     coverage lint (repro.analysis,
 #                                     incl. C104/C105 tuning-table
 #                                     staleness); fails on any finding
@@ -59,6 +59,13 @@ python -m pip install -q -r requirements-dev.txt ||
 # baseline token-identity asserted); the hybrid pass drafts with the
 # family's own Mamba layers (drafter=hybrid_ssm) so both drafter
 # implementations stay exercised.
+#
+# Paged passes add a third, quantized run (--kv-dtype int8): the same
+# sections over int8 page pools with in-kernel dequant — preemption,
+# spill/restore, spec and prefix sharing all drive the quantized pool,
+# with exact asserts wherever the write grain matches (survivors,
+# host-vs-engine) and printed waivers where it can't (cross-grain
+# token identity; serve_engine documents why).
 smoke() {
     REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
@@ -70,6 +77,13 @@ smoke() {
         python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
             --layout "$1" --family hybrid --audit --faults \
             --spec-k 4 --spec-drafter hybrid_ssm
+    if [ "$1" != "contiguous" ]; then
+        echo "== smoke (quantized): kv_dtype=int8 layout=$1 =="
+        REPRO_BACKEND="${REPRO_BACKEND:-pallas}" \
+            PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+            python -m benchmarks.serve_engine --smoke --prefill-chunk 8 \
+                --layout "$1" --kv-dtype int8 --audit --faults --spec-k 4
+    fi
 }
 
 case "${1:-}" in

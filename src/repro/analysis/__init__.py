@@ -58,6 +58,19 @@ R006  no-raw-layout-kwargs
     ``pager.py`` (implements the paged layout) are out of scope.  Fix:
     accept ``cache: CacheConfig`` and read the fields from it.
 
+R007  kv-scale-stays-f32
+    The int8 paged-KV path quantizes only the payload; the per-(page,
+    head) scale pools (``ksc``/``vsc``, host tier ``hksc``/``hvsc``) and
+    the ``kv_scales`` tuples threaded into the kernels must stay float32
+    — a sub-f32 scale multiplies into *every* dequantized read, the same
+    compounding failure mode R005 guards against in the SSD scan.  In
+    ``kernels/flash_attention.py`` / ``serving/pager.py`` /
+    ``models/lm.py``, any ``.astype(...)`` of a scale-carrying value
+    (``ksc*``, ``vsc*``, ``k_scale*``, ``v_scale*``, ``kv_scales*``, and
+    host-tier variants) to anything but ``jnp.float32`` is flagged.
+    Fix: keep scale math f32 (attention accumulation inside the kernels
+    is f32 regardless of storage dtype).
+
 Coverage lint (C101–C105, run by the same entry points)
 =======================================================
 

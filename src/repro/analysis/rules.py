@@ -428,6 +428,58 @@ class R006NoRawLayoutKwargs(Rule):
                 )
 
 
+class R007KvScaleStaysF32(Rule):
+    """Quantized-KV per-page scale pools must not be cast below float32."""
+
+    rule_id = "R007"
+    title = "kv-scale-stays-f32"
+    hint = (
+        "per-(page, head) quantization scales (ksc/vsc, the host tier "
+        "hksc/hvsc, and kv_scales tuples derived from them) are the "
+        "error budget of the int8 KV path — only the payload is int8; "
+        "a sub-f32 scale compounds through every dequantized read, so "
+        "keep the pools f32 end to end (and keep attention accumulation "
+        "f32 inside the kernels)"
+    )
+
+    FILES = (
+        "repro/kernels/flash_attention.py",
+        "repro/serving/pager.py",
+        "repro/models/lm.py",
+    )
+    SCALE_RE = re.compile(r"\b(h?ksc|h?vsc|k_scales?|v_scales?|kv_scales?)\w*")
+    F32_NAMES = frozenset({"jnp.float32", "np.float32", "float32"})
+
+    def applies(self, path: str) -> bool:
+        return _endswith(path, self.FILES)
+
+    def _is_f32(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant) and node.value == "float32":
+            return True
+        return _dotted(node) in self.F32_NAMES
+
+    def check(self, tree: ast.AST, path: str, src: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+                and node.args
+            ):
+                continue
+            target = ast.get_source_segment(src, node.func.value) or ""
+            if not self.SCALE_RE.search(target):
+                continue
+            if not self._is_f32(node.args[0]):
+                cast = ast.get_source_segment(src, node.args[0]) or "?"
+                yield self.finding(
+                    path,
+                    node,
+                    f"KV quantization scale `{target}` cast to {cast} "
+                    "(must stay f32)",
+                )
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     R001DirectTpuImport(),
     R002ImplicitHostSync(),
@@ -435,4 +487,5 @@ ALL_RULES: Tuple[Rule, ...] = (
     R004NoProcessWideBackend(),
     R005SsdStateStaysF32(),
     R006NoRawLayoutKwargs(),
+    R007KvScaleStaysF32(),
 )

@@ -390,17 +390,33 @@ def _online_update(s, v, acc_ref, m_ref, l_ref):
 
 
 def _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
-                  kpos_base, cache_len, window, scale):
+                  kpos_base, cache_len, window, scale,
+                  k_s=None, v_s=None, bs=None):
+    """``k_s``/``v_s`` (quantized pools) are the page's per-head dequant
+    scales — applied right after the f32 upcast, so scores and the online
+    softmax always accumulate in f32 regardless of storage dtype.  ``bs``
+    statically unrolls the tile into bs-row sub-tiles (the quantized
+    kernels' tuning knob); ``None`` keeps the single-tile accumulation
+    bit-identical to the pre-quantization kernels."""
     q = q_ref[0, 0].astype(jnp.float32)           # (g, d) rows = heads grp
     k = k_ref[0, 0].astype(jnp.float32)           # (tile, d)
     v = v_ref[0, 0].astype(jnp.float32)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    kpos = kpos_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = kpos < cache_len
-    if window is not None:
-        valid &= kpos >= cache_len - window
-    s = jnp.where(valid, s, NEG_INF)
-    _online_update(s, v, acc_ref, m_ref, l_ref)
+    if k_s is not None:
+        k = k * k_s
+        v = v * v_s
+    tile = k.shape[0]
+    step = tile if bs is None else bs
+    for t in range(tile // step):
+        k_t = jax.lax.slice_in_dim(k, t * step, (t + 1) * step, axis=0)
+        v_t = jax.lax.slice_in_dim(v, t * step, (t + 1) * step, axis=0)
+        s = jnp.dot(q, k_t.T, preferred_element_type=jnp.float32) * scale
+        kpos = (kpos_base + t * step
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+        valid = kpos < cache_len
+        if window is not None:
+            valid &= kpos >= cache_len - window
+        s = jnp.where(valid, s, NEG_INF)
+        _online_update(s, v_t, acc_ref, m_ref, l_ref)
 
 
 def _decode_finalize(o_ref, acc_ref, l_ref):
@@ -595,6 +611,122 @@ def flash_decode_paged_pallas(
 
 
 # ---------------------------------------------------------------------------
+# Quantized paged decode: int8 pages, per-(page, head) scales prefetched to
+# SMEM and applied inside the kernel right after the upcast
+# ---------------------------------------------------------------------------
+
+def _flash_decode_paged_quant_kernel(
+    len_ref, bt_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale, n_b, page, bs, window,
+):
+    ib, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    cache_len = len_ref[ib]
+    # the page the block table routed this grid step to — same clamp as
+    # the BlockSpec index map, so skipped steps read scale 0 harmlessly
+    pg = jnp.maximum(bt_ref[ib, j], 0)
+    k_s = ksc_ref[pg, h]
+    v_s = vsc_ref[pg, h]
+
+    @pl.when(j == 0)
+    def _init():
+        _decode_init(acc_ref, m_ref, l_ref)
+
+    run = (bt_ref[ib, j] >= 0) & (j * page < cache_len)
+    if window is not None:
+        run &= (j + 1) * page - 1 >= cache_len - window
+
+    @pl.when(run)
+    def _body():
+        _decode_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                      kpos_base=j * page, cache_len=cache_len,
+                      window=window, scale=scale,
+                      k_s=k_s, v_s=v_s, bs=bs)
+
+    @pl.when(j == n_b - 1)
+    def _done():
+        _decode_finalize(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_decode_paged_quant_pallas(
+    q: jax.Array,            # (B, Hq, D)  one token per sequence
+    k_pages: jax.Array,      # (n_pages, page_size, Hkv, D) int8 page pool
+    v_pages: jax.Array,
+    k_scale: jax.Array,      # (n_pages, Hkv) f32 per-(page, head) scales
+    v_scale: jax.Array,
+    cache_len: jax.Array,    # int32 () or (B,): valid prefix incl. new token
+    block_table: jax.Array,  # (B, max_blocks) int32; -1 = unmapped
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Decode attention over the quantized paged KV layout.
+
+    Same block-table indirection as ``flash_decode_paged_pallas``; the
+    per-(page, head) scale pools ride the scalar prefetch into SMEM and
+    the kernel multiplies them in right after the int8 -> f32 upcast, so
+    scores and the online softmax accumulate in f32 (R007).  ``bs``
+    (tuned) statically sub-tiles the page axis of the accumulation.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    n_b = block_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_decode_paged_quant", key=shape_class(p=page),
+                   bs=16)
+    bs = max(1, min(int(t["bs"]), page))
+    while page % bs:
+        bs //= 2
+    kt = k_pages.transpose(0, 2, 1, 3)            # (n_pages, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    qg = q.reshape(b, hkv, g, d)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,)
+    )
+
+    def kv_ix(b_, h, j, lens_ref, bt_ref, ksc_ref, vsc_ref):
+        return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
+
+    grid_spec = plc.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,        # lens, block table, k/v scale pools
+        grid=(b, hkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+        scratch_shapes=[
+            plc.VMEM((g, d), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
+            plc.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_decode_paged_quant_kernel,
+            scale=scale, n_b=n_b, page=page, bs=bs, window=window,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+        compiler_params=plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_decode_paged_quant",
+    )(lens, block_table, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), qg, kt, vt)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
 # Chunked prefill: a (C, hd) query block per row vs the already-written cache
 # ---------------------------------------------------------------------------
 
@@ -620,14 +752,26 @@ def _prefill_chunk_mask(s, *, kpos_base, start, width, c, window):
 
 
 def _prefill_chunk_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
-                         kpos_base, start, width, c, window, scale):
+                         kpos_base, start, width, c, window, scale,
+                         k_s=None, v_s=None, bs=None):
+    # ``k_s``/``v_s``/``bs`` as in ``_decode_accum``: per-page dequant
+    # scales applied after the f32 upcast, optional static sub-tiling
     q = q_ref[0, 0].astype(jnp.float32)           # (g*c, d)
     k = k_ref[0, 0].astype(jnp.float32)           # (tile, d)
     v = v_ref[0, 0].astype(jnp.float32)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    s = _prefill_chunk_mask(s, kpos_base=kpos_base, start=start,
-                            width=width, c=c, window=window)
-    _online_update(s, v, acc_ref, m_ref, l_ref)
+    if k_s is not None:
+        k = k * k_s
+        v = v * v_s
+    tile = k.shape[0]
+    step = tile if bs is None else bs
+    for t in range(tile // step):
+        k_t = jax.lax.slice_in_dim(k, t * step, (t + 1) * step, axis=0)
+        v_t = jax.lax.slice_in_dim(v, t * step, (t + 1) * step, axis=0)
+        s = jnp.dot(q, k_t.T, preferred_element_type=jnp.float32) * scale
+        s = _prefill_chunk_mask(s, kpos_base=kpos_base + t * step,
+                                start=start, width=width, c=c,
+                                window=window)
+        _online_update(s, v_t, acc_ref, m_ref, l_ref)
 
 
 def _flash_prefill_chunk_kernel(
@@ -833,5 +977,122 @@ def flash_prefill_chunk_paged_pallas(
         ),
         name="repro_flash_prefill_chunk_paged",
     )(starts, widths, block_table, qg, kt, vt)
+    out = out.reshape(b, hkv, g, c, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, c, hq, d)
+
+
+def _flash_prefill_chunk_paged_quant_kernel(
+    start_ref, w_ref, bt_ref, ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale, n_b, page, bs, c, window,
+):
+    ib, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    start = start_ref[ib]
+    width = w_ref[ib]
+    pg = jnp.maximum(bt_ref[ib, j], 0)
+    k_s = ksc_ref[pg, h]
+    v_s = vsc_ref[pg, h]
+
+    @pl.when(j == 0)
+    def _init():
+        _decode_init(acc_ref, m_ref, l_ref)
+
+    run = (bt_ref[ib, j] >= 0) & (j * page <= start + width - 1)
+    if window is not None:
+        run &= (j + 1) * page - 1 > start - window
+
+    @pl.when(run)
+    def _body():
+        _prefill_chunk_accum(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+                             kpos_base=j * page, start=start, width=width,
+                             c=c, window=window, scale=scale,
+                             k_s=k_s, v_s=v_s, bs=bs)
+
+    @pl.when(j == n_b - 1)
+    def _done():
+        _decode_finalize(o_ref, acc_ref, l_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret")
+)
+def flash_prefill_chunk_paged_quant_pallas(
+    q: jax.Array,            # (B, C, Hq, D)  C prompt tokens per sequence
+    k_pages: jax.Array,      # (n_pages, page_size, Hkv, D) int8 page pool
+    v_pages: jax.Array,
+    k_scale: jax.Array,      # (n_pages, Hkv) f32 per-(page, head) scales
+    v_scale: jax.Array,
+    start: jax.Array,        # int32 () or (B,): absolute pos of chunk tok 0
+    width: jax.Array,        # int32 () or (B,): real tokens in the chunk
+    block_table: jax.Array,  # (B, max_blocks) int32; -1 = unmapped
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret=None,
+):
+    """Chunked-prefill attention over the quantized paged layout.
+
+    ``flash_prefill_chunk_paged_pallas`` with the scale pools added to
+    the scalar prefetch: dequant happens inside the kernel after the
+    int8 -> f32 upcast, accumulation stays f32 (R007).  The chunk's own
+    K/V must already be written (``pager.write_page_chunk_quant``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, c, hq, d = q.shape
+    n_pages, page, hkv, _ = k_pages.shape
+    n_b = block_table.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else float(1.0 / np.sqrt(d))
+    t = get_tuning("flash_prefill_paged_quant",
+                   key=shape_class(c=c, p=page), bs=16)
+    bs = max(1, min(int(t["bs"]), page))
+    while page % bs:
+        bs //= 2
+    kt = k_pages.transpose(0, 2, 1, 3)            # (n_pages, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b, hkv, g * c, d)
+    starts = jnp.broadcast_to(
+        jnp.asarray(start, jnp.int32).reshape(-1), (b,)
+    )
+    widths = jnp.broadcast_to(
+        jnp.asarray(width, jnp.int32).reshape(-1), (b,)
+    )
+
+    def kv_ix(b_, h, j, starts_ref, w_ref, bt_ref, ksc_ref, vsc_ref):
+        return (jnp.maximum(bt_ref[b_, j], 0), h, 0, 0)
+
+    grid_spec = plc.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,    # starts, widths, table, k/v scale pools
+        grid=(b, hkv, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * c, d), lambda b_, h, j, *_: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+            pl.BlockSpec((1, 1, page, d), kv_ix),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g * c, d), lambda b_, h, j, *_: (b_, h, 0, 0)
+        ),
+        scratch_shapes=[
+            plc.VMEM((g * c, d), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
+            plc.VMEM((g * c, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_prefill_chunk_paged_quant_kernel,
+            scale=scale, n_b=n_b, page=page, bs=bs, c=c, window=window,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * c, d), q.dtype),
+        interpret=interpret,
+        compiler_params=plc.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        name="repro_flash_prefill_chunk_paged_quant",
+    )(starts, widths, block_table, k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), qg, kt, vt)
     out = out.reshape(b, hkv, g, c, d).transpose(0, 3, 1, 2, 4)
     return out.reshape(b, c, hq, d)

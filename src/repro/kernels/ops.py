@@ -33,8 +33,10 @@ from repro.kernels.flash_attention import (
     flash_attention_bwd_pallas,
     flash_attention_pallas,
     flash_decode_paged_pallas,
+    flash_decode_paged_quant_pallas,
     flash_decode_pallas,
     flash_prefill_chunk_paged_pallas,
+    flash_prefill_chunk_paged_quant_pallas,
     flash_prefill_chunk_pallas,
 )
 from repro.kernels.gemm import gemm_pallas
@@ -473,6 +475,18 @@ def _attention_decode_paged_ref(q, k_pages, v_pages, cache_len, block_table,
                                  scale=scale)
 
 
+def _attention_decode_paged_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                      cache_len, block_table, *,
+                                      window=None, scale=None):
+    """Quantized paged oracle: dequantize the int8 pool with its
+    per-(page, head) scales (f32, R007), then delegate to the paged
+    oracle — one dequant definition the Pallas kernel is held to."""
+    kf = k_pages.astype(jnp.float32) * k_scale[:, None, :, None]
+    vf = v_pages.astype(jnp.float32) * v_scale[:, None, :, None]
+    return _attention_decode_paged_ref(q, kf, vf, cache_len, block_table,
+                                       window=window, scale=scale)
+
+
 def attention_decode(
     q: jax.Array,          # (B, Hq, D)
     k_cache: jax.Array,    # contiguous: (B, Smax, Hkv, D);
@@ -481,6 +495,7 @@ def attention_decode(
     cache_len: jax.Array,  # int32 () or (B,): valid prefix incl. current token
     *,
     block_table: Optional[jax.Array] = None,   # (B, max_blocks) int32, paged
+    kv_scales=None,        # (ksc, vsc) (n_pages, Hkv) f32: int8 pool scales
     window: Optional[int] = None,
     scale: Optional[float] = None,
 ) -> jax.Array:
@@ -489,10 +504,23 @@ def attention_decode(
     The cache layout is the ``KVCacheLayout`` switch point: with
     ``block_table=None`` the caches are the contiguous per-row slab; with a
     block table they are a shared page pool (``repro.serving.pager``
-    documents the contract).  Both layouts have a reference and a Pallas
-    lowering kept in lock-step.
+    documents the contract).  ``kv_scales`` (paged only) marks the pool as
+    per-(page, head)-scaled int8 and routes to the quantized lowerings,
+    which dequantize in-kernel.  Every layout x dtype cell has a reference
+    and a Pallas lowering kept in lock-step.
     """
     if block_table is not None:
+        if kv_scales is not None:
+            ksc, vsc = kv_scales
+            if _pallas():
+                return flash_decode_paged_quant_pallas(
+                    q, k_cache, v_cache, ksc, vsc, cache_len, block_table,
+                    window=window, scale=scale,
+                )
+            return _attention_decode_paged_quant_ref(
+                q, k_cache, v_cache, ksc, vsc, cache_len, block_table,
+                window=window, scale=scale,
+            )
         if _pallas():
             return flash_decode_paged_pallas(
                 q, k_cache, v_cache, cache_len, block_table,
@@ -501,6 +529,11 @@ def attention_decode(
         return _attention_decode_paged_ref(
             q, k_cache, v_cache, cache_len, block_table,
             window=window, scale=scale,
+        )
+    if kv_scales is not None:
+        raise ValueError(
+            "kv_scales needs the paged layout (block_table) — the "
+            "contiguous slab is never quantized"
         )
     if _pallas():
         return flash_decode_pallas(
@@ -560,6 +593,19 @@ def _attention_prefill_chunk_paged_ref(q, k_pages, v_pages, start, width,
                                         window=window, scale=scale)
 
 
+def _attention_prefill_chunk_paged_quant_ref(q, k_pages, v_pages, k_scale,
+                                             v_scale, start, width,
+                                             block_table, *, window=None,
+                                             scale=None):
+    """Quantized paged chunk oracle: dequantize (f32, R007), then run the
+    paged oracle — same single dequant definition as the decode path."""
+    kf = k_pages.astype(jnp.float32) * k_scale[:, None, :, None]
+    vf = v_pages.astype(jnp.float32) * v_scale[:, None, :, None]
+    return _attention_prefill_chunk_paged_ref(q, kf, vf, start, width,
+                                              block_table, window=window,
+                                              scale=scale)
+
+
 def attention_prefill_chunk(
     q: jax.Array,          # (B, C, Hq, D): C prompt tokens per sequence
     k_cache: jax.Array,    # contiguous: (B, Smax, Hkv, D);
@@ -569,6 +615,7 @@ def attention_prefill_chunk(
     width: jax.Array,      # int32 () or (B,): real tokens in the chunk
     *,
     block_table: Optional[jax.Array] = None,   # (B, max_blocks) int32, paged
+    kv_scales=None,        # (ksc, vsc) (n_pages, Hkv) f32: int8 pool scales
     window: Optional[int] = None,
     scale: Optional[float] = None,
 ) -> jax.Array:
@@ -577,11 +624,24 @@ def attention_prefill_chunk(
     The multi-token sibling of ``attention_decode`` and the same
     ``KVCacheLayout`` switch point: ``block_table=None`` selects the
     contiguous per-row slab, a block table selects the shared page pool
-    (contract in ``repro.serving.pager``).  The chunk's own K/V must be in
-    the cache already; causality inside the chunk is pure masking.  Both
-    layouts have a reference and a Pallas lowering kept in lock-step.
+    (contract in ``repro.serving.pager``); ``kv_scales`` routes the paged
+    pool through the quantized lowerings (in-kernel dequant).  The chunk's
+    own K/V must be in the cache already; causality inside the chunk is
+    pure masking.  Every cell has a reference and a Pallas lowering kept
+    in lock-step.
     """
     if block_table is not None:
+        if kv_scales is not None:
+            ksc, vsc = kv_scales
+            if _pallas():
+                return flash_prefill_chunk_paged_quant_pallas(
+                    q, k_cache, v_cache, ksc, vsc, start, width,
+                    block_table, window=window, scale=scale,
+                )
+            return _attention_prefill_chunk_paged_quant_ref(
+                q, k_cache, v_cache, ksc, vsc, start, width, block_table,
+                window=window, scale=scale,
+            )
         if _pallas():
             return flash_prefill_chunk_paged_pallas(
                 q, k_cache, v_cache, start, width, block_table,
@@ -590,6 +650,11 @@ def attention_prefill_chunk(
         return _attention_prefill_chunk_paged_ref(
             q, k_cache, v_cache, start, width, block_table,
             window=window, scale=scale,
+        )
+    if kv_scales is not None:
+        raise ValueError(
+            "kv_scales needs the paged layout (block_table) — the "
+            "contiguous slab is never quantized"
         )
     if _pallas():
         return flash_prefill_chunk_pallas(
@@ -741,6 +806,16 @@ register_op("attention_prefill_chunk_paged",
             reference=_attention_prefill_chunk_paged_ref,
             pallas=flash_prefill_chunk_paged_pallas,
             doc="block-table paged chunked-prefill attention", tuning=())
+register_op("attention_decode_paged_quant",
+            reference=_attention_decode_paged_quant_ref,
+            pallas=flash_decode_paged_quant_pallas,
+            doc="int8 paged decode attention (in-kernel per-page dequant)",
+            tuning="flash_decode_paged_quant")
+register_op("attention_prefill_chunk_paged_quant",
+            reference=_attention_prefill_chunk_paged_quant_ref,
+            pallas=flash_prefill_chunk_paged_quant_pallas,
+            doc="int8 paged chunked-prefill attention (in-kernel dequant)",
+            tuning="flash_prefill_paged_quant")
 register_op("ssd_scan", reference=ref.ssd_scan, pallas=ssd_scan_pallas,
             doc="Mamba-2 SSD chunked scan (fwd ported; bwd oracle vjp)",
             tuning="ssd_scan")

@@ -110,6 +110,11 @@ def main(argv=None) -> int:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool size (default: batch*max_len/page_size)")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="KV-pool storage precision (needs --layout paged "
+                         "below f32; bf16 = 1/2 the f32 resident bytes, "
+                         "int8 = 1/4 via per-(page, head)-scaled payload)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 samples with per-request keys")
     ap.add_argument("--top-k", type=int, default=0)

@@ -209,7 +209,7 @@ def init_decode_state(
     cfg: ArchConfig, batch: int, max_len: int, *, per_row_pos: bool = False,
     layout: str = "contiguous", page_size: int = 16,
     n_pages: Optional[int] = None, snapshots: bool = False,
-    host_spill: bool = False, cache=None,
+    host_spill: bool = False, kv_dtype: str = "f32", cache=None,
 ) -> Dict[str, jax.Array]:
     """Decode caches.  ``per_row_pos=True`` keeps ``pos`` as a (B,) vector so
     rows may sit at different sequence depths (continuous batching).
@@ -245,6 +245,17 @@ def init_decode_state(
     tiers; families without KV pages (pure ssm, contiguous layouts)
     ignore the flag — they have no page pool to relieve, so the engine
     never preempts them.
+
+    ``kv_dtype="int8"`` (paged layout only) stores the KV page pools as
+    symmetric per-(page, head)-scaled int8: the payload arrays switch to
+    ``jnp.int8`` and f32 scale pools ``ksc``/``vsc`` (shape
+    ``(stacks, n_pages, Hkv)``) ride alongside — written by
+    ``pager.write_page_quant``/``write_page_chunk_quant``, dequantized
+    inside the attention kernels.  Host-tier mirrors (``hksc``/``hvsc``)
+    spill the quantized form, cutting spill bandwidth the same 4x.
+    ``kv_dtype="bf16"`` is the storage-only midpoint: half-width pools
+    through the unmodified kernels (which upcast K/V tiles to f32), no
+    scale pools, exactly half the f32 resident bytes.
     """
     if cache is not None:
         layout = cache.layout
@@ -252,8 +263,20 @@ def init_decode_state(
         n_pages = cache.n_pages
         snapshots = cache.snapshots
         host_spill = bool(cache.host_spill)
+        kv_dtype = getattr(cache, "kv_dtype", "f32")
     if layout not in ("contiguous", "paged"):
         raise ValueError(f"unknown KV-cache layout {layout!r}")
+    if kv_dtype not in ("f32", "bf16", "int8"):
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r} "
+            "(expected 'f32', 'bf16', or 'int8')"
+        )
+    if kv_dtype != "f32" and layout != "paged":
+        raise ValueError(
+            "sub-f32 KV storage is a paged-pool feature (quantized "
+            "scales are per page) — layout='paged' required for "
+            f"kv_dtype={kv_dtype!r}"
+        )
     dt = cfg.dtype_()
     hkv, hd = cfg.n_kv_heads, cfg.head_dim_
     # sliding-window archs only ever need `window` cache slots (ring buffer)
@@ -275,14 +298,21 @@ def init_decode_state(
         max_blocks = -(-max_len // page_size)
         pages = batch * max_blocks if n_pages is None else n_pages
         ps = P.init_pager(pages)
+        quant = kv_dtype == "int8"
+        kv_dt = {"int8": jnp.int8, "bf16": jnp.bfloat16}.get(kv_dtype, dt)
         out = {
-            "kp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
-            "vp": jnp.zeros((stacks, pages, page_size, hkv, hd), dt),
+            "kp": jnp.zeros((stacks, pages, page_size, hkv, hd), kv_dt),
+            "vp": jnp.zeros((stacks, pages, page_size, hkv, hd), kv_dt),
             "block_table": P.init_block_table(batch, max_blocks),
             "page_free": ps.free,
             "page_top": ps.top,
             "page_rc": ps.rc,
         }
+        if quant:
+            # per-(page, head) f32 scales — zero means "empty page"
+            # (write_page_quant resets the scale at slot 0)
+            out["ksc"] = jnp.zeros((stacks, pages, hkv), jnp.float32)
+            out["vsc"] = jnp.zeros((stacks, pages, hkv), jnp.float32)
         if host_spill:
             # host tier: worst-case sizing (every row fully resident, all
             # spilled at once) so spill pops can never run dry
@@ -290,16 +320,25 @@ def init_decode_state(
             hs = P.init_pager(n_hslots)
             out.update({
                 "hkp": jnp.zeros(
-                    (stacks, n_hslots, page_size, hkv, hd), dt
+                    (stacks, n_hslots, page_size, hkv, hd), kv_dt
                 ),
                 "hvp": jnp.zeros(
-                    (stacks, n_hslots, page_size, hkv, hd), dt
+                    (stacks, n_hslots, page_size, hkv, hd), kv_dt
                 ),
                 "host_table": P.init_block_table(batch, max_blocks),
                 "host_free": hs.free,
                 "host_top": hs.top,
                 "host_rc": hs.rc,
             })
+            if quant:
+                # spill moves the quantized payload + its scales; the
+                # host tier never re-quantizes
+                out["hksc"] = jnp.zeros(
+                    (stacks, n_hslots, hkv), jnp.float32
+                )
+                out["hvsc"] = jnp.zeros(
+                    (stacks, n_hslots, hkv), jnp.float32
+                )
         return out
 
     def snap_store(host: bool = False) -> Dict[str, jax.Array]:
@@ -461,6 +500,13 @@ def _paged_cow(state, wpos, active, *, cow: bool):
         state = {**state,
                  "kp": PG.copy_page_prefix(state["kp"], src, dst, lim),
                  "vp": PG.copy_page_prefix(state["vp"], src, dst, lim)}
+        if "ksc" in state:
+            # quantized pools: the private copy inherits the donor page's
+            # scale, so the copied prefix stays decodable; the next write
+            # max-merges (and requantizes) from there
+            state = {**state,
+                     "ksc": PG.copy_page_scale(state["ksc"], src, dst),
+                     "vsc": PG.copy_page_scale(state["vsc"], src, dst)}
     return state, pstate, bt
 
 
@@ -591,6 +637,11 @@ def spill_rows(
            "page_top": pstate.top, "page_rc": pstate.rc,
            "host_table": ht, "host_free": hstate.free,
            "host_top": hstate.top, "host_rc": hstate.rc}
+    if "hksc" in state:
+        # quantized pools spill as-is: int8 payload + f32 scales move with
+        # the same (src, dst) slot vectors, so host copies stay decodable
+        out["hksc"] = PG.copy_pages(state["hksc"], state["ksc"], src, dst)
+        out["hvsc"] = PG.copy_pages(state["hvsc"], state["vsc"], src, dst)
     if "hsnap_table" in state:
         sstate = PG.PagerState(
             state["snap_free"], state["snap_top"], state["snap_rc"]
@@ -647,6 +698,9 @@ def restore_rows(
            "page_top": pstate.top, "page_rc": pstate.rc,
            "host_table": ht, "host_free": hstate.free,
            "host_top": hstate.top, "host_rc": hstate.rc}
+    if "hksc" in state:
+        out["ksc"] = PG.copy_pages(state["ksc"], state["hksc"], src, dst)
+        out["vsc"] = PG.copy_pages(state["vsc"], state["hvsc"], src, dst)
     if "hsnap_table" in state:
         sstate = PG.PagerState(
             state["snap_free"], state["snap_top"], state["snap_rc"]
@@ -700,6 +754,7 @@ def decode_step(
     """
     pos = state["pos"]
     paged = "block_table" in state
+    quant = paged and "ksc" in state    # trace-time: int8 KV pools
     x = params["embed"][token].astype(cfg.dtype_())   # (B, d)
     # paged layout uses absolute positions (window masking in attention);
     # the contiguous layout ring-indexes sliding-window caches
@@ -727,7 +782,9 @@ def decode_step(
     else:
         w_idx = idx
 
-    def attn_dec(p, x, ck, cv):
+    def attn_dec(p, x, kv):
+        # ``kv`` is the per-layer cache tuple: (ck, cv) — or, quantized,
+        # (ck, cv, ksc, vsc) with the scale pools riding the same scan
         b, d = x.shape
         hkv, hd = cfg.n_kv_heads, cfg.head_dim_
         xn = C.norm(cfg, p["ln"], x)
@@ -743,19 +800,36 @@ def decode_step(
             from repro.serving import pager as PG
 
             bt = state["block_table"]
-            ck = PG.write_page(ck, k_new, bt, idx, active)
-            cv = PG.write_page(cv, v_new, bt, idx, active)
-            o = ops.attention_decode(
-                q, ck, cv, jnp.asarray(cache_len, jnp.int32),
-                block_table=bt, window=cfg.window,
-            )
+            if quant:
+                ck, cv, ksc, vsc = kv
+                ck, ksc = PG.write_page_quant(ck, ksc, k_new, bt, idx,
+                                              active)
+                cv, vsc = PG.write_page_quant(cv, vsc, v_new, bt, idx,
+                                              active)
+                o = ops.attention_decode(
+                    q, ck, cv, jnp.asarray(cache_len, jnp.int32),
+                    block_table=bt, window=cfg.window,
+                    kv_scales=(ksc, vsc),
+                )
+                kv = (ck, cv, ksc, vsc)
+            else:
+                ck, cv = kv
+                ck = PG.write_page(ck, k_new, bt, idx, active)
+                cv = PG.write_page(cv, v_new, bt, idx, active)
+                o = ops.attention_decode(
+                    q, ck, cv, jnp.asarray(cache_len, jnp.int32),
+                    block_table=bt, window=cfg.window,
+                )
+                kv = (ck, cv)
         else:
+            ck, cv = kv
             ck = _cache_update(cfg, ck, k_new, w_idx)
             cv = _cache_update(cfg, cv, v_new, w_idx)
             o = ops.attention_decode(
                 q, ck, cv, jnp.asarray(cache_len, jnp.int32)
             )
-        return x + C.dense(o.reshape(b, -1), p["wo"]), ck, cv
+            kv = (ck, cv)
+        return x + C.dense(o.reshape(b, -1), p["wo"]), kv
 
     def mlp_dec(p, x):
         xn = C.norm(cfg, p["ln"], x)
@@ -766,16 +840,22 @@ def decode_step(
         return C.moe_block(cfg, p, x[:, None, :])[:, 0, :]
 
     kk, vk = ("kp", "vp") if paged else ("k", "v")
+    # scan xs carry the per-layer cache stacks; quantized pools append
+    # their scale stacks so the whole cache moves through one scan
+    kv_keys = (kk, vk) + (("ksc", "vsc") if quant else ())
 
     fam = cfg.family
     if fam in ("dense", "moe"):
         def body(x, inp):
-            p, ck, cv = inp
-            x, ck, cv = attn_dec(p["attn"], x, ck, cv)
+            p, kv = inp[0], inp[1:]
+            x, kv = attn_dec(p["attn"], x, kv)
             x = moe_dec(p["moe"], x) if "moe" in p else mlp_dec(p["mlp"], x)
-            return x, (ck, cv)
-        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], state[kk], state[vk]))
-        state = {**state, kk: ks, vk: vs}
+            return x, kv
+        x, kv_out = jax.lax.scan(
+            body, x,
+            (params["layers"],) + tuple(state[k] for k in kv_keys),
+        )
+        state = {**state, **dict(zip(kv_keys, kv_out))}
     elif fam == "ssm":
         # inactive (idle or spilled) rows must carry their recurrent state
         # through *untouched* — a spilled row's live ssm/conv is the part
@@ -800,7 +880,8 @@ def decode_step(
         val = active[:, None] if active is not None else None
 
         def group(x, inp):
-            gp, s_ssm, s_conv, ck, cv = inp
+            gp, s_ssm, s_conv = inp[0], inp[1], inp[2]
+            kv = inp[3:]
 
             def inner(x, i2):
                 p, s1, s2 = i2
@@ -809,18 +890,21 @@ def decode_step(
                 )
                 return x, (s1, s2)
             x, (s_ssm, s_conv) = jax.lax.scan(inner, x, (gp, s_ssm, s_conv))
-            x, ck, cv = attn_dec(params["shared_attn"], x, ck, cv)
+            x, kv = attn_dec(params["shared_attn"], x, kv)
             x = mlp_dec(params["shared_mlp"], x)
-            return x, (s_ssm, s_conv, ck, cv)
+            return x, (s_ssm, s_conv) + kv
 
-        x, (ssm, conv, ks, vs) = jax.lax.scan(
-            group, x, (params["groups"], ssm_g, conv_g, state[kk], state[vk])
+        x, out = jax.lax.scan(
+            group, x,
+            (params["groups"], ssm_g, conv_g)
+            + tuple(state[k] for k in kv_keys),
         )
+        ssm, conv = out[0], out[1]
         state = {
             **state,
             "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
             "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
-            kk: ks, vk: vs,
+            **dict(zip(kv_keys, out[2:])),
         }
     elif fam == "vlm":
         def group(x, inp):
@@ -828,7 +912,7 @@ def decode_step(
 
             def inner(x, i2):
                 p, ck1, cv1 = i2
-                x, ck1, cv1 = attn_dec(p["attn"], x, ck1, cv1)
+                x, (ck1, cv1) = attn_dec(p["attn"], x, (ck1, cv1))
                 x = mlp_dec(p["mlp"], x)
                 return x, (ck1, cv1)
             x, (ck, cv) = jax.lax.scan(inner, x, (gp, ck, cv))
@@ -914,6 +998,7 @@ def prefill_chunk(
     if pos.ndim != 1:
         raise ValueError("prefill_chunk needs per_row_pos=True decode state")
     paged = "block_table" in state
+    quant = paged and "ksc" in state    # trace-time: int8 KV pools
     b, c = toks.shape
     uses_attn = cfg.family in ("dense", "moe", "hybrid", "vlm")
     if cfg.window and not paged and uses_attn:
@@ -949,7 +1034,9 @@ def prefill_chunk(
         )
         state = _paged_commit(state, pstate, bt)
 
-    def attn_chunk(p, x, ck, cv):
+    def attn_chunk(p, x, kv):
+        # ``kv`` mirrors decode_step: (ck, cv) or quantized
+        # (ck, cv, ksc, vsc) per-layer cache tuple
         hkv, hd = cfg.n_kv_heads, cfg.head_dim_
         xn = C.norm(cfg, p["ln"], x)
         q = C.dense(xn, p["wq"], p.get("bq")).reshape(b, c, cfg.n_heads, hd)
@@ -962,16 +1049,34 @@ def prefill_chunk(
             from repro.serving import pager as PG
 
             bt = state["block_table"]
-            ck = PG.write_page_chunk(ck, k_new, bt, pos, width, active)
-            cv = PG.write_page_chunk(cv, v_new, bt, pos, width, active)
-            o = ops.attention_prefill_chunk(
-                q, ck, cv, pos, width, block_table=bt, window=cfg.window
-            )
+            if quant:
+                ck, cv, ksc, vsc = kv
+                ck, ksc = PG.write_page_chunk_quant(
+                    ck, ksc, k_new, bt, pos, width, active
+                )
+                cv, vsc = PG.write_page_chunk_quant(
+                    cv, vsc, v_new, bt, pos, width, active
+                )
+                o = ops.attention_prefill_chunk(
+                    q, ck, cv, pos, width, block_table=bt,
+                    window=cfg.window, kv_scales=(ksc, vsc),
+                )
+                kv = (ck, cv, ksc, vsc)
+            else:
+                ck, cv = kv
+                ck = PG.write_page_chunk(ck, k_new, bt, pos, width, active)
+                cv = PG.write_page_chunk(cv, v_new, bt, pos, width, active)
+                o = ops.attention_prefill_chunk(
+                    q, ck, cv, pos, width, block_table=bt, window=cfg.window
+                )
+                kv = (ck, cv)
         else:
+            ck, cv = kv
             ck = _cache_update_chunk(ck, k_new, posmat, valid)
             cv = _cache_update_chunk(cv, v_new, posmat, valid)
             o = ops.attention_prefill_chunk(q, ck, cv, pos, width)
-        return x + C.dense(o.reshape(b, c, -1), p["wo"]), ck, cv
+            kv = (ck, cv)
+        return x + C.dense(o.reshape(b, c, -1), p["wo"]), kv
 
     def mlp_chunk(p, x):
         xn = C.norm(cfg, p["ln"], x)
@@ -985,19 +1090,21 @@ def prefill_chunk(
         return C.mamba_prefill_block(cfg, p, x, s_ssm, s_conv, valid)
 
     kk, vk = ("kp", "vp") if paged else ("k", "v")
+    kv_keys = (kk, vk) + (("ksc", "vsc") if quant else ())
 
     fam = cfg.family
     if fam in ("dense", "moe"):
         def body(x, inp):
-            p, ck, cv = inp
-            x, ck, cv = attn_chunk(p["attn"], x, ck, cv)
+            p, kv = inp[0], inp[1:]
+            x, kv = attn_chunk(p["attn"], x, kv)
             x = (C.moe_block(cfg, p["moe"], x) if "moe" in p
                  else mlp_chunk(p["mlp"], x))
-            return x, (ck, cv)
-        x, (ks, vs) = jax.lax.scan(
-            body, x, (params["layers"], state[kk], state[vk])
+            return x, kv
+        x, kv_out = jax.lax.scan(
+            body, x,
+            (params["layers"],) + tuple(state[k] for k in kv_keys),
         )
-        state = {**state, kk: ks, vk: vs}
+        state = {**state, **dict(zip(kv_keys, kv_out))}
     elif fam == "ssm":
         def body(x, inp):
             p, s_ssm, s_conv = inp
@@ -1014,25 +1121,29 @@ def prefill_chunk(
         conv_g = state["conv"].reshape(g, a, *state["conv"].shape[1:])
 
         def group(x, inp):
-            gp, s_ssm, s_conv, ck, cv = inp
+            gp, s_ssm, s_conv = inp[0], inp[1], inp[2]
+            kv = inp[3:]
 
             def inner(x, i2):
                 p, s1, s2 = i2
                 x, s1, s2 = mamba_chunk(p["mamba"], x, s1, s2)
                 return x, (s1, s2)
             x, (s_ssm, s_conv) = jax.lax.scan(inner, x, (gp, s_ssm, s_conv))
-            x, ck, cv = attn_chunk(params["shared_attn"], x, ck, cv)
+            x, kv = attn_chunk(params["shared_attn"], x, kv)
             x = mlp_chunk(params["shared_mlp"], x)
-            return x, (s_ssm, s_conv, ck, cv)
+            return x, (s_ssm, s_conv) + kv
 
-        x, (ssm, conv, ks, vs) = jax.lax.scan(
-            group, x, (params["groups"], ssm_g, conv_g, state[kk], state[vk])
+        x, out = jax.lax.scan(
+            group, x,
+            (params["groups"], ssm_g, conv_g)
+            + tuple(state[k] for k in kv_keys),
         )
+        ssm, conv = out[0], out[1]
         state = {
             **state,
             "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
             "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
-            kk: ks, vk: vs,
+            **dict(zip(kv_keys, out[2:])),
         }
     else:
         raise NotImplementedError(
@@ -1092,12 +1203,12 @@ def reset_decode_rows(
     # drf_* is the hybrid_ssm drafter's private recurrent state
     # (repro.serving.drafter): batch axis 1, zeroed like ssm/conv
     known = {"k", "v", "ssm", "conv", "xk", "xv", "drf_ssm", "drf_conv"}
-    paged_keys = {"kp", "vp", "block_table", "page_free", "page_top",
-                  "page_rc"}
+    paged_keys = {"kp", "vp", "ksc", "vsc", "block_table", "page_free",
+                  "page_top", "page_rc"}
     snap_keys = {"snap_ssm", "snap_conv", "snap_table", "snap_free",
                  "snap_top", "snap_rc"}
-    host_keys = {"hkp", "hvp", "host_table", "host_free", "host_top",
-                 "host_rc"}
+    host_keys = {"hkp", "hvp", "hksc", "hvsc", "host_table", "host_free",
+                 "host_top", "host_rc"}
     hsnap_keys = {"hsnap_ssm", "hsnap_conv", "hsnap_table", "hsnap_free",
                   "hsnap_top", "hsnap_rc"}
     unknown = (set(state) - known - paged_keys - snap_keys - host_keys

@@ -84,7 +84,15 @@ class CacheConfig:
     contract); ``page_size``/``n_pages`` size the pool; ``snapshots``
     adds the page-boundary recurrent-state store (recurrent families);
     ``host_spill`` adds the host tier behind preemption (``None`` lets
-    the engine default it to "paged layout only").
+    the engine default it to "paged layout only"); ``kv_dtype`` picks
+    the pool storage precision (``"f32"`` = the model's compute dtype;
+    ``"bf16"`` = half-width storage through the same kernels, which
+    upcast K/V tiles to f32 anyway; ``"int8"`` = per-(page, head)-scaled
+    int8 payload with f32 scale pools, dequant inside the attention
+    kernels).  Sub-f32 storage is a paged-pool feature — the ladder is
+    exact: bf16 packs resident KV to 1/2 the f32 bytes, int8 to 1/4
+    (half the bf16 cell), plus a per-(page, head) scale pool the byte
+    accounting deliberately excludes (<1% at real geometries).
     """
 
     layout: str = "contiguous"
@@ -92,6 +100,7 @@ class CacheConfig:
     n_pages: Optional[int] = None
     snapshots: bool = False
     host_spill: Optional[bool] = None
+    kv_dtype: str = "f32"
 
     def __post_init__(self) -> None:
         if self.layout not in ("contiguous", "paged"):
@@ -104,6 +113,17 @@ class CacheConfig:
             raise ValueError(
                 "recurrent-state snapshots use page-boundary granularity — "
                 "layout='paged' required"
+            )
+        if self.kv_dtype not in ("f32", "bf16", "int8"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r} "
+                "(expected 'f32', 'bf16', or 'int8')"
+            )
+        if self.kv_dtype != "f32" and self.layout != "paged":
+            raise ValueError(
+                "sub-f32 KV storage is a paged-pool feature (quantized "
+                "scales are per page) — layout='paged' required for "
+                f"kv_dtype={self.kv_dtype!r}"
             )
 
 
@@ -236,6 +256,7 @@ def configs_from_flags(args):
         n_pages=getattr(args, "n_pages", None),
         snapshots=bool(getattr(args, "snapshots", False)),
         host_spill=getattr(args, "host_spill", None),
+        kv_dtype=getattr(args, "kv_dtype", "f32"),
     )
     config = EngineConfig(
         steps_per_sync=int(getattr(args, "steps_per_sync", 8)),

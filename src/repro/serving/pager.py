@@ -156,6 +156,34 @@ instead of forking:
     be pinned-host buffers (``memory_kind="pinned_host"``); nothing in
     the bookkeeping changes.
 
+Quantized pools (``CacheConfig(kv_dtype="int8")``): the KV payload is
+stored as symmetric int8 (``q = clip(round(x / s), -127, 127)``) with
+one f32 scale per (page, kv-head) in a companion *scale pool* —
+``(stacks, n_pages, Hkv)`` beside the ``(stacks, n_pages, page_size,
+Hkv, hd)`` payload, ``(stacks, n_slots, Hkv)`` on the host tier.  The
+scale is the page's running amax over its written slots divided by 127:
+``write_page_quant`` / ``write_page_chunk_quant`` *reset* it when they
+write slot 0 of a page (sequential writes enter every fresh page at
+slot 0, so a recycled page's stale payload+scale never leak into a new
+owner) and otherwise merge by max, requantizing the already-written
+payload in the same scatter when the scale grows.  Scales are
+page-indexed bookkeeping exactly like refcounts:
+
+  * spill/restore — the scale pools ride the same ``(src, dst)`` id
+    vectors through ``copy_pages`` (page axis 1, like the payload), so
+    the host tier stores the *quantized* form and spill bandwidth
+    halves along with residency;
+  * CoW — ``copy_page_scale`` moves the donor page's scales onto the
+    fresh page alongside ``copy_page_prefix``, so the copied slot
+    prefix keeps dequantizing bit-identically;
+  * share/release — no scale work: scales travel with the page id, and
+    the slot-0 reset on the next owner's first write retires stale
+    entries.
+
+Attention accumulation is unaffected: the payload dequantizes to f32
+inside the kernels (``flash_*_paged_quant_pallas``) and the scale pools
+themselves stay f32 end to end (lint rule R007).
+
 Multi-page-per-step allocation (chunked prefill): a step that writes a
 *range* of positions ``start..end`` may straddle several blocks, so
 ``alloc_range`` maps every block covering the range in one jitted call —
@@ -651,3 +679,141 @@ def write_page_chunk(
     return pool.at[page, posmat % page_size].set(
         new.astype(pool.dtype), mode="drop"
     )
+
+
+# ---------------------------------------------------------------------------
+# Quantized writes (kv_dtype="int8"): int8 payload + per-(page, head)
+# f32 scales.  Contract in the module docstring ("Quantized pools").
+# ---------------------------------------------------------------------------
+
+_QMAX = 127.0
+
+
+def _quant_safe(scale: jax.Array) -> jax.Array:
+    """Divide-safe scale: a zero scale encodes an all-zero payload, so any
+    positive stand-in quantizes it to exact zeros."""
+    return jnp.where(scale > 0, scale, 1.0)
+
+
+def write_page_quant(
+    pool: jax.Array,                 # (n_pages, page_size, Hkv, hd) int8
+    scale: jax.Array,                # (n_pages, Hkv) f32
+    new: jax.Array,                  # (B, Hkv, hd): one token per row
+    block_table: jax.Array,          # (B, max_blocks) int32
+    idx: jax.Array,                  # () or (B,) int32: absolute position
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """``write_page`` for the quantized pool: returns ``(pool, scale)``.
+
+    The target page's scale is reset at slot 0 and max-merged after; when
+    it grows, the page's already-written slots are requantized in the
+    same whole-page scatter that lands the new token.  Masking matches
+    ``write_page`` exactly — a dropped payload write drops its scale
+    update too, so the two pools can never disagree about a page.
+    """
+    n_pages, page_size = pool.shape[0], pool.shape[1]
+    b, max_blocks = block_table.shape
+    idx_b = jnp.broadcast_to(jnp.asarray(idx, jnp.int32).reshape(-1), (b,))
+    blk = idx_b // page_size
+    blk_c = jnp.clip(blk, 0, max_blocks - 1)
+    page = jnp.take_along_axis(block_table, blk_c[:, None], axis=1)[:, 0]
+    ok = (blk < max_blocks) & (page >= 0)
+    if active is not None:
+        ok &= active
+    page_c = jnp.clip(page, 0, n_pages - 1)
+    tgt = jnp.where(ok, page, n_pages)
+    slot = idx_b % page_size
+
+    newf = new.astype(jnp.float32)                       # (B, Hkv, hd)
+    s_cand = jnp.max(jnp.abs(newf), axis=-1) / _QMAX     # (B, Hkv)
+    s_old = scale[page_c]                                # (B, Hkv)
+    fresh = (slot == 0)[:, None]
+    s_new = jnp.where(fresh, s_cand, jnp.maximum(s_old, s_cand))
+    # requantize the already-written slots when the scale grew; a fresh
+    # page's stale payload rescales to zero (never read either way)
+    ratio = jnp.where(fresh, 0.0, s_old / _quant_safe(s_new))
+    content = pool[page_c].astype(jnp.float32)           # (B, S, Hkv, hd)
+    merged = jnp.round(content * ratio[:, None, :, None])
+    q_tok = jnp.round(newf / _quant_safe(s_new)[:, :, None])
+    sl = jnp.arange(page_size, dtype=jnp.int32)[None, :, None, None]
+    merged = jnp.where(sl == slot[:, None, None, None], q_tok[:, None],
+                       merged)
+    merged = jnp.clip(merged, -_QMAX, _QMAX)
+    pool = pool.at[tgt].set(merged.astype(pool.dtype), mode="drop")
+    scale = scale.at[tgt].set(s_new, mode="drop")
+    return pool, scale
+
+
+def write_page_chunk_quant(
+    pool: jax.Array,                 # (n_pages, page_size, Hkv, hd) int8
+    scale: jax.Array,                # (n_pages, Hkv) f32
+    new: jax.Array,                  # (B, C, Hkv, hd): C tokens per row
+    block_table: jax.Array,          # (B, max_blocks) int32
+    start: jax.Array,                # () or (B,) int32: pos of chunk token 0
+    width: jax.Array,                # () or (B,) int32: real tokens (1..C)
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """``write_page_chunk`` for the quantized pool: ``(pool, scale)``.
+
+    The f32 chunk write is one fused scatter, but the per-page scale must
+    be updated once per *page* the chunk touches, so this unrolls the
+    same ``(C-1)//page_size + 2``-rung ladder as ``alloc_range`` — rung
+    ``k`` quantizes the sub-chunk landing in block ``start//P + k``
+    against that page's merged scale (reset when the rung covers the
+    page's slot 0, i.e. ``blk*P >= start``).  Rungs touch disjoint pages
+    per row and masking matches ``write_page_chunk``.
+    """
+    n_pages, page_size = pool.shape[0], pool.shape[1]
+    b, max_blocks = block_table.shape
+    c = new.shape[1]
+    start_b = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1), (b,))
+    w_b = jnp.broadcast_to(jnp.asarray(width, jnp.int32).reshape(-1), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    i = jnp.arange(c, dtype=jnp.int32)[None, :]
+    posmat = start_b[:, None] + i                        # (B, C)
+    end_blk = (start_b + jnp.maximum(w_b, 1) - 1) // page_size
+    start_blk = start_b // page_size
+    newf = new.astype(jnp.float32)                       # (B, C, Hkv, hd)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    for k in range((c - 1) // page_size + 2):
+        blk = start_blk + k
+        on = active & (w_b > 0) & (blk <= end_blk) & (blk < max_blocks)
+        blk_c = jnp.clip(blk, 0, max_blocks - 1)
+        page = jnp.take_along_axis(block_table, blk_c[:, None], axis=1)[:, 0]
+        on &= page >= 0
+        page_c = jnp.clip(page, 0, n_pages - 1)
+        tgt = jnp.where(on, page, n_pages)
+        in_rung = (posmat // page_size == blk[:, None]) & (i < w_b[:, None])
+        amax = jnp.max(
+            jnp.where(in_rung[:, :, None, None], jnp.abs(newf), 0.0),
+            axis=(1, 3),
+        )                                                # (B, Hkv)
+        s_cand = amax / _QMAX
+        s_old = scale[page_c]
+        fresh = (blk * page_size >= start_b)[:, None]
+        s_new = jnp.where(fresh, s_cand, jnp.maximum(s_old, s_cand))
+        ratio = jnp.where(fresh, 0.0, s_old / _quant_safe(s_new))
+        content = pool[page_c].astype(jnp.float32)       # (B, S, Hkv, hd)
+        merged = jnp.round(content * ratio[:, None, :, None])
+        q_tok = jnp.round(newf / _quant_safe(s_new)[:, None, :, None])
+        sl = jnp.where(in_rung, posmat % page_size, page_size)
+        merged = merged.at[rows, sl].set(q_tok, mode="drop")
+        merged = jnp.clip(merged, -_QMAX, _QMAX)
+        pool = pool.at[tgt].set(merged.astype(pool.dtype), mode="drop")
+        scale = scale.at[tgt].set(s_new, mode="drop")
+    return pool, scale
+
+
+def copy_page_scale(
+    scales: jax.Array,  # (stacks, n_pages, Hkv) f32
+    src: jax.Array,     # (B,) int32 page ids (n_pages sentinel = skip row)
+    dst: jax.Array,     # (B,) int32 page ids (n_pages sentinel = skip row)
+) -> jax.Array:
+    """The CoW scale move: the fresh page inherits its donor's
+    per-(page, head) scales so the prefix ``copy_page_prefix`` moved
+    keeps dequantizing bit-identically.  Same ``n_pages`` sentinels as
+    ``copy_page_prefix`` — rows that did not move drop."""
+    n_pages = scales.shape[1]
+    content = scales[:, jnp.clip(src, 0, n_pages - 1)]   # (stacks, B, Hkv)
+    return scales.at[:, dst].set(content, mode="drop")

@@ -243,6 +243,64 @@ def _flash_prefill_cases() -> List[Case]:
     return [("chunked_prompt", dict(c=c, s=smax), build)]
 
 
+def _quant_pool(rng: np.random.Generator, n_pages: int, page: int,
+                hkv: int, d: int) -> Tuple[jax.Array, jax.Array]:
+    pool = jnp.asarray(
+        rng.integers(-127, 128, (n_pages, page, hkv, d)), jnp.int8
+    )
+    sc = jnp.asarray(rng.uniform(0.01, 0.05, (n_pages, hkv)), jnp.float32)
+    return pool, sc
+
+
+def _flash_decode_paged_quant_cases() -> List[Case]:
+    from repro.kernels.flash_attention import flash_decode_paged_quant_pallas
+
+    b, n_pages, page, hq, hkv, d, maxb = 4, 32, 16, 4, 2, 64, 8
+
+    def build():
+        from repro.kernels.ops import _attention_decode_paged_quant_ref
+        rng = np.random.default_rng(0)
+        q = _f32(rng, b, hq, d)
+        kp, ksc = _quant_pool(rng, n_pages, page, hkv, d)
+        vp, vsc = _quant_pool(rng, n_pages, page, hkv, d)
+        lens = jnp.asarray(
+            rng.integers(page * maxb // 2, page * maxb, b), jnp.int32
+        )
+        bt = jnp.arange(b * maxb, dtype=jnp.int32).reshape(b, maxb)
+        return (lambda: flash_decode_paged_quant_pallas(
+                    q, kp, vp, ksc, vsc, lens, bt, interpret=True),
+                _attention_decode_paged_quant_ref,
+                (q, kp, vp, ksc, vsc, lens, bt))
+
+    return [("quant_pool", dict(p=page), build)]
+
+
+def _flash_prefill_paged_quant_cases() -> List[Case]:
+    from repro.kernels.flash_attention import (
+        flash_prefill_chunk_paged_quant_pallas,
+    )
+
+    b, c, n_pages, page, hq, hkv, d, maxb = 2, 32, 16, 16, 4, 2, 64, 8
+
+    def build():
+        from repro.kernels.ops import (
+            _attention_prefill_chunk_paged_quant_ref,
+        )
+        rng = np.random.default_rng(0)
+        q = _f32(rng, b, c, hq, d)
+        kp, ksc = _quant_pool(rng, n_pages, page, hkv, d)
+        vp, vsc = _quant_pool(rng, n_pages, page, hkv, d)
+        start = jnp.asarray([64, 91], jnp.int32)
+        width = jnp.asarray([c, c - 5], jnp.int32)
+        bt = jnp.arange(b * maxb, dtype=jnp.int32).reshape(b, maxb)
+        return (lambda: flash_prefill_chunk_paged_quant_pallas(
+                    q, kp, vp, ksc, vsc, start, width, bt, interpret=True),
+                _attention_prefill_chunk_paged_quant_ref,
+                (q, kp, vp, ksc, vsc, start, width, bt))
+
+    return [("quant_chunked_prompt", dict(c=c, p=page), build)]
+
+
 def _ssd_cases(key: str) -> List[Case]:
     from repro.kernels.mamba_scan import ssd_scan_pallas
 
@@ -295,6 +353,10 @@ def shape_cases(key: str, smoke: bool) -> List[Case]:
         return _flash_decode_cases()
     if key == "flash_prefill":
         return _flash_prefill_cases()
+    if key == "flash_decode_paged_quant":
+        return _flash_decode_paged_quant_cases()
+    if key == "flash_prefill_paged_quant":
+        return _flash_prefill_paged_quant_cases()
     if key in ("ssd_scan", "ssd_prefill_chunk"):
         return _ssd_cases(key)
     return []

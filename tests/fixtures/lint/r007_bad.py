@@ -1,0 +1,15 @@
+"""Known-bad R007 fixture: quantized-KV scale pools cast below f32.
+Linted under the virtual path ``src/repro/serving/pager.py``."""
+import jax.numpy as jnp
+
+
+def write(pool, ksc, new):
+    return pool, ksc.astype(jnp.bfloat16)  # R007
+
+
+def spill(hksc, out_dtype):
+    return hksc.astype(out_dtype)  # R007: non-f32 target dtype
+
+
+def dequant(k_pages, k_scale):
+    return k_pages.astype(jnp.float32) * k_scale.astype(jnp.float16)  # R007

@@ -1,0 +1,15 @@
+"""Known-good R007 fixture: scale pools stay f32; the int8 payload and
+unrelated values cast freely."""
+import jax.numpy as jnp
+
+
+def write(pool, ksc, new):
+    return pool.astype(jnp.int8), ksc.astype(jnp.float32)
+
+
+def dequant(k_pages, k_scale):
+    return k_pages.astype(jnp.float32) * k_scale  # payload upcast: fine
+
+
+def project(y, x):
+    return y.astype(x.dtype)  # not a scale pool: no finding

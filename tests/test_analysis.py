@@ -49,6 +49,10 @@ CASES = {
         "src/repro/serving/engine.py",
         [("R006", 6), ("R006", 10)],
     ),
+    "r007": (
+        "src/repro/serving/pager.py",
+        [("R007", 7), ("R007", 11), ("R007", 15)],
+    ),
 }
 
 

@@ -502,3 +502,173 @@ def test_pages_needed_matches_write_pattern():
             assert pager.pages_needed(total, page_size) == len(touched), (
                 total, page_size
             )
+
+
+# ---------------------------------------------------------------------------
+# Quantized pools (kv_dtype="int8"): the scale pool partitions with the
+# pages — every write/CoW/spill move that touches a page's payload moves
+# its per-(page, head) scale in the same masked operation, so dequantized
+# content survives every allocator move bit-exactly.
+# ---------------------------------------------------------------------------
+
+
+def _dq(pool, scale):
+    """Dequantize a per-layer pool: (n_pages, S, Hkv, hd) x (n_pages, Hkv)."""
+    return np.asarray(pool, np.float32) * np.asarray(scale)[:, None, :, None]
+
+
+def test_write_page_quant_bound_scale_and_masking():
+    """One-shot quantized token writes: dequantized error stays within
+    half a quantization step of the page scale, the scale is exactly
+    amax/127, and a masked row moves neither payload nor scale."""
+    rng = np.random.default_rng(0)
+    pool = jnp.zeros((4, 2, 2, 3), jnp.int8)
+    scale = jnp.zeros((4, 2), jnp.float32)
+    bt = jnp.asarray([[0, -1], [2, -1]], jnp.int32)
+    toks = [jnp.asarray(rng.normal(size=(2, 2, 3)) * 3.0, jnp.float32)
+            for _ in range(2)]
+    active = jnp.asarray([True, False])
+    for idx, new in enumerate(toks):
+        pool, scale = pager.write_page_quant(
+            pool, scale, new, bt, jnp.asarray(idx, jnp.int32), active
+        )
+    sc = np.asarray(scale)
+    assert (sc[2] == 0).all() and (np.asarray(pool)[2] == 0).all(), (
+        "masked row leaked a write into its page"
+    )
+    want_amax = np.maximum(
+        np.abs(np.asarray(toks[0][0])).max(-1),
+        np.abs(np.asarray(toks[1][0])).max(-1),
+    )
+    np.testing.assert_allclose(sc[0], want_amax / 127.0, rtol=1e-6)
+    got = _dq(pool, scale)[0]                      # (S, Hkv, hd)
+    for slot in range(2):
+        err = np.abs(got[slot] - np.asarray(toks[slot][0]))
+        assert (err <= 0.5 * sc[0][:, None] + 1e-7).all(), (
+            f"slot {slot}: error above half a quantization step"
+        )
+
+
+def test_write_page_quant_slot0_resets_stale_scale():
+    """A freed page carries a stale scale; the next row's slot-0 write
+    must reset it to the fresh token's amax, not max-merge with it —
+    otherwise one loud former tenant coarsens every later tenant."""
+    pool = jnp.zeros((2, 2, 1, 2), jnp.int8)
+    scale = jnp.full((2, 1), 100.0, jnp.float32)   # stale from a past row
+    bt = jnp.asarray([[0]], jnp.int32)
+    new = jnp.asarray([[[0.5, -0.25]]], jnp.float32)
+    pool, scale = pager.write_page_quant(
+        pool, scale, new, bt, jnp.asarray(0, jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(scale)[0, 0], 0.5 / 127.0,
+                               rtol=1e-6)
+    np.testing.assert_allclose(_dq(pool, scale)[0, 0, 0],
+                               np.asarray(new)[0, 0], atol=0.5 * 0.5 / 127.0)
+
+
+def test_write_page_chunk_quant_page_grain_scales():
+    """A chunk spanning several pages quantizes each page's rung against
+    that page's own amax (page-grain scales, not chunk-grain), and the
+    error bound holds across every written slot."""
+    rng = np.random.default_rng(1)
+    page, c = 2, 5
+    pool = jnp.zeros((4, page, 1, 2), jnp.int8)
+    scale = jnp.zeros((4, 1), jnp.float32)
+    bt = jnp.asarray([[0, 1, 2]], jnp.int32)
+    new = jnp.asarray(rng.normal(size=(1, c, 1, 2)) * 2.0, jnp.float32)
+    pool, scale = pager.write_page_chunk_quant(
+        pool, scale, new, bt, jnp.asarray(0, jnp.int32),
+        jnp.asarray(c, jnp.int32),
+    )
+    sc = np.asarray(scale)
+    nf = np.asarray(new)[0]                        # (C, 1, 2)
+    for blk in range(3):
+        lo, hi = blk * page, min((blk + 1) * page, c)
+        want = np.abs(nf[lo:hi]).max(axis=(0, 2)) / 127.0
+        np.testing.assert_allclose(sc[blk], want, rtol=1e-6)
+    got = _dq(pool, scale)
+    for t in range(c):
+        blk, slot = t // page, t % page
+        err = np.abs(got[blk, slot] - nf[t])
+        assert (err <= 0.5 * sc[blk][:, None] + 1e-7).all()
+
+
+def test_cow_moves_scale_with_prefix():
+    """CoW on a quantized pool: ``copy_page_scale`` rides the same
+    (src, dst) plan as ``copy_page_prefix``, so the moved prefix
+    dequantizes bit-identically on the fresh page and unmoved rows drop
+    through the sentinel."""
+    ps = pager.init_pager(6)
+    bt = pager.init_block_table(2, 2)
+    donor_only = jnp.asarray([True, False])
+    for p in range(4):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.asarray([p, 0], jnp.int32), donor_only, page_size=4,
+        )
+    ps, bt = pager.share_prefix(
+        ps, bt, jnp.zeros((2,), jnp.int32), jnp.ones((2,), jnp.int32),
+        jnp.asarray([False, True]),
+    )
+    shared_page = int(np.asarray(bt)[0, 0])
+    ps, bt, src, dst, lim, moved = pager.cow_on_write(
+        ps, bt, jnp.asarray([0, 3], jnp.int32), jnp.asarray([False, True]),
+        page_size=4,
+    )
+    new_page = int(np.asarray(bt)[1, 0])
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(rng.integers(-127, 128, size=(1, 6, 4, 1, 2)),
+                       jnp.int8)
+    scales = jnp.asarray(rng.uniform(0.01, 0.1, size=(1, 6, 1)), jnp.float32)
+    before = np.asarray(scales).copy()
+    out_pool = pager.copy_page_prefix(pool, src, dst, lim)
+    out_sc = pager.copy_page_scale(scales, src, dst)
+    got = (np.asarray(out_pool[0], np.float32)
+           * np.asarray(out_sc)[0, :, None, :, None])
+    want = (np.asarray(pool[0], np.float32)
+            * before[0, :, None, :, None])
+    np.testing.assert_array_equal(got[new_page, :3], want[shared_page, :3])
+    # only the moved row's dst page changed; every other scale is intact
+    keep = np.ones(6, bool)
+    keep[new_page] = False
+    np.testing.assert_array_equal(np.asarray(out_sc)[0, keep],
+                                  before[0, keep])
+
+
+def test_spill_restore_quant_round_trip():
+    """Spill and restore move the int8 payload and the scale pool through
+    the same (src, dst) page plans, so the victim's dequantized content
+    survives the host round trip bit-exactly."""
+    ps = pager.init_pager(4)
+    bt = pager.init_block_table(2, 2)
+    hs = pager.init_pager(4)
+    ht = pager.init_block_table(2, 2)
+    for p in range(4):
+        ps, bt = pager.alloc_on_write(
+            ps, bt, jnp.full((2,), p, jnp.int32), page_size=2
+        )
+    rng = np.random.default_rng(3)
+    pool = jnp.asarray(rng.integers(-127, 128, size=(1, 4, 2, 1, 2)),
+                       jnp.int8)
+    sc = jnp.asarray(rng.uniform(0.01, 0.1, size=(1, 4, 1)), jnp.float32)
+    hpool = jnp.zeros_like(pool)
+    hsc = jnp.zeros_like(sc)
+    victim = jnp.asarray([True, False])
+    row0 = np.asarray(bt)[0].copy()
+    want = (np.asarray(pool[0], np.float32)
+            * np.asarray(sc)[0, :, None, :, None])[row0]
+
+    ps, bt, hs, ht, src, dst = pager.spill_rows(ps, bt, hs, ht, victim)
+    hpool = pager.copy_pages(hpool, pool, src, dst)
+    hsc = pager.copy_pages(hsc, sc, src, dst)
+    hrow = np.asarray(ht)[0]
+    got_host = (np.asarray(hpool[0], np.float32)
+                * np.asarray(hsc)[0, :, None, :, None])[hrow]
+    np.testing.assert_array_equal(got_host, want)
+
+    ps, bt, hs, ht, src, dst = pager.restore_rows(ps, bt, hs, ht, victim)
+    pool = pager.copy_pages(pool, hpool, src, dst)
+    sc = pager.copy_pages(sc, hsc, src, dst)
+    drow = np.asarray(bt)[0]
+    got = (np.asarray(pool[0], np.float32)
+           * np.asarray(sc)[0, :, None, :, None])[drow]
+    np.testing.assert_array_equal(got, want)
